@@ -1,0 +1,103 @@
+"""Table 5 (early-stop), Fig. 7 (landing layer), Fig. 8 (correlation),
+Fig. 10 (recall@k), Fig. 11 (parameter sensitivity), Fig. 12 (duplicates) —
+the detailed-analysis suite (§4.4)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import BENCH_D, BENCH_N, build_wow, emit, write_csv
+
+
+def _eval(idx, wl, k=10, ef=64, **kw):
+    from repro.core import SearchStats, recall
+
+    recs, dcs = [], []
+    t0 = time.perf_counter()
+    for i in range(len(wl.queries)):
+        st = SearchStats()
+        ids, _, st = idx.search(wl.queries[i], tuple(wl.ranges[i]), k=k, ef=ef,
+                                stats=st, **kw)
+        recs.append(recall(ids, wl.gt[i][:k] if wl.gt else ids))
+        dcs.append(st.dc)
+    qps = len(wl.queries) / (time.perf_counter() - t0)
+    return float(np.mean(recs)), float(np.mean(dcs)), qps
+
+
+def run() -> list[list]:
+    from repro.core import make_workload
+
+    rows = []
+    n = max(BENCH_N // 2, 1200)
+    wl = make_workload(n=n, d=BENCH_D, nq=50, fractions=[2.0**-4], seed=3, k=10)
+    idx = build_wow(wl)
+
+    # ---- Table 5: early-stop on/off ----
+    for flag in (True, False):
+        rec, dc, qps = _eval(idx, wl, early_stop=flag)
+        rows.append(["earlystop", flag, "", round(rec, 4), round(dc, 1), round(qps, 1)])
+        emit(f"earlystop_{'on' if flag else 'off'}", 1e6 / qps,
+             f"recall={rec:.3f};dc={dc:.0f}")
+
+    # ---- Fig. 7: landing-layer selection vs fixed layers ----
+    auto = _eval(idx, wl)
+    rows.append(["landing", "auto", "", round(auto[0], 4), round(auto[1], 1), round(auto[2], 1)])
+    emit("landing_auto", 1e6 / auto[2], f"recall={auto[0]:.3f};dc={auto[1]:.0f}")
+    for l in range(0, idx.top + 1):
+        rec, dc, qps = _eval(idx, wl, l_max=l)
+        rows.append(["landing", l, "", round(rec, 4), round(dc, 1), round(qps, 1)])
+        emit(f"landing_l{l}", 1e6 / qps, f"recall={rec:.3f};dc={dc:.0f}")
+
+    # ---- Fig. 8: correlation robustness ----
+    for kind in ("random", "correlated", "anticorrelated"):
+        wlc = make_workload(n=n, d=BENCH_D, nq=40, fractions=[2.0**-3],
+                            attr_kind=kind, seed=4, k=10)
+        idxc = build_wow(wlc)
+        rec, dc, qps = _eval(idxc, wlc)
+        rows.append(["correlation", kind, "", round(rec, 4), round(dc, 1), round(qps, 1)])
+        emit(f"correlation_{kind}", 1e6 / qps, f"recall={rec:.3f};dc={dc:.0f}")
+
+    # ---- Fig. 10: recall@k ----
+    for k in (1, 10, 25):
+        wlk = make_workload(n=n, d=BENCH_D, nq=40, seed=5, k=k)
+        idxk = build_wow(wlk)
+        rec, dc, qps = _eval(idxk, wlk, k=k, ef=max(64, 2 * k))
+        rows.append(["recall_at_k", k, "", round(rec, 4), round(dc, 1), round(qps, 1)])
+        emit(f"recall_at_k{k}", 1e6 / qps, f"recall={rec:.3f};dc={dc:.0f}")
+
+    # ---- Fig. 11: parameter sensitivity (o, m, omega_c) ----
+    small = make_workload(n=n // 2, d=BENCH_D, nq=30, seed=6, k=10)
+    for o in (2, 4, 8):
+        idxp, dt = build_wow(small, o=o, timed=True)
+        rec, dc, qps = _eval(idxp, small)
+        rows.append(["param_o", o, round(dt, 2), round(rec, 4), round(dc, 1), round(qps, 1)])
+        emit(f"param_o{o}", dt / len(small.vectors) * 1e6, f"recall={rec:.3f};dc={dc:.0f}")
+    for m in (8, 16, 24):
+        idxp, dt = build_wow(small, m=m, timed=True)
+        rec, dc, qps = _eval(idxp, small)
+        rows.append(["param_m", m, round(dt, 2), round(rec, 4), round(dc, 1), round(qps, 1)])
+        emit(f"param_m{m}", dt / len(small.vectors) * 1e6, f"recall={rec:.3f};dc={dc:.0f}")
+    for ef_c in (32, 64, 128):
+        idxp, dt = build_wow(small, ef=ef_c, timed=True)
+        rec, dc, qps = _eval(idxp, small)
+        rows.append(["param_efc", ef_c, round(dt, 2), round(rec, 4), round(dc, 1), round(qps, 1)])
+        emit(f"param_efc{ef_c}", dt / len(small.vectors) * 1e6, f"recall={rec:.3f};dc={dc:.0f}")
+
+    # ---- Fig. 12: duplicate attribute values ----
+    for n_unique in (None, n // 10, n // 100):
+        wld = make_workload(n=n, d=BENCH_D, nq=30, seed=7, n_unique=n_unique, k=10)
+        idxd, dt = build_wow(wld, timed=True)
+        rec, dc, qps = _eval(idxd, wld)
+        tag = n_unique or n
+        rows.append(["duplicates", tag, round(dt, 2), round(rec, 4), round(dc, 1),
+                     round(qps, 1)])
+        emit(f"duplicates_u{tag}", 1e6 / qps,
+             f"recall={rec:.3f};dc={dc:.0f};layers={idxd.graph.num_layers}")
+
+    write_csv(
+        "bench_ablations.csv",
+        ["experiment", "setting", "build_s", "recall", "dc", "qps"],
+        rows,
+    )
+    return rows

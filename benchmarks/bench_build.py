@@ -1,0 +1,52 @@
+"""Table 4 + Table 6: indexing time and index size vs baselines, and
+size/time scaling with n (the §3.6 complexity claims)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import BENCH_D, BENCH_N, emit, write_csv
+
+
+def run() -> list[list]:
+    from repro.core import FlatNSW, WoWIndex, make_workload
+
+    rows = []
+    sizes = [BENCH_N // 4, BENCH_N // 2, BENCH_N]
+    for n in sizes:
+        wl = make_workload(n=n, d=BENCH_D, nq=1, seed=0, with_gt=False)
+        # WoW
+        idx = WoWIndex(dim=BENCH_D, m=16, ef_construction=64, o=4, seed=0)
+        t0 = time.perf_counter()
+        for v, a in zip(wl.vectors, wl.attrs):
+            idx.insert(v, a)
+        dt = time.perf_counter() - t0
+        rows.append(["wow", n, round(dt, 3), idx.memory_bytes(), idx.graph.num_layers])
+        emit(f"build_wow_n{n}", dt / n * 1e6, f"bytes={idx.memory_bytes()}")
+        # WoW o=2 (more layers)
+        idx2 = WoWIndex(dim=BENCH_D, m=16, ef_construction=64, o=2, seed=0)
+        t0 = time.perf_counter()
+        for v, a in zip(wl.vectors, wl.attrs):
+            idx2.insert(v, a)
+        dt2 = time.perf_counter() - t0
+        rows.append(["wow_o2", n, round(dt2, 3), idx2.memory_bytes(), idx2.graph.num_layers])
+        emit(f"build_wow_o2_n{n}", dt2 / n * 1e6, f"bytes={idx2.memory_bytes()}")
+        # HNSW-L0 (flat NSW, the vanilla-ANN reference build)
+        flat = FlatNSW(BENCH_D, m=16, ef_construction=64, seed=0)
+        t0 = time.perf_counter()
+        for v, a in zip(wl.vectors, wl.attrs):
+            flat.insert(v, a)
+        dt3 = time.perf_counter() - t0
+        fbytes = sum(l.nbytes for l in flat.graph.layers)
+        rows.append(["hnsw_l0", n, round(dt3, 3), fbytes, 1])
+        emit(f"build_hnswl0_n{n}", dt3 / n * 1e6, f"bytes={fbytes}")
+
+    # per-insert scaling: O(log^2 n) claim — fit us/insert against log2(n)^2
+    per_insert = [r[2] / r[1] * 1e6 for r in rows if r[0] == "wow"]
+    l2 = [np.log2(n) ** 2 for n in sizes]
+    slope = np.polyfit(l2, per_insert, 1)[0]
+    emit("build_scaling_slope", per_insert[-1], f"us_per_log2sq={slope:.3f}")
+    rows.append(["wow_scaling_slope", sizes[-1], slope, 0, 0])
+    write_csv("bench_build.csv", ["index", "n", "seconds", "bytes", "layers"], rows)
+    return rows

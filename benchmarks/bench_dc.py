@@ -1,0 +1,62 @@
+"""Fig. 5: DC-Recall vs the oracle proximity graph (built per range on
+exactly the in-range subset)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import BENCH_D, BENCH_N, build_wow, emit, write_csv
+
+
+def run() -> list[list]:
+    from repro.core import (
+        SearchStats,
+        brute_force,
+        build_oracle_graph,
+        make_workload,
+        recall,
+    )
+
+    rows = []
+    n = max(BENCH_N // 2, 1200)
+    for frac_e in (1, 3, 6):
+        frac = 2.0**-frac_e
+        wl = make_workload(n=n, d=BENCH_D, nq=16, fractions=[frac], seed=2, k=10)
+        wow = build_wow(wl)
+        # group queries by shared range to amortise oracle builds
+        uniq = {}
+        for i in range(len(wl.queries)):
+            uniq.setdefault(tuple(wl.ranges[i]), []).append(i)
+        biggest = max(uniq.items(), key=lambda kv: len(kv[1]))
+        rng0, q_ids = biggest
+        if len(q_ids) < 2:  # ensure a few shared-range queries
+            q_ids = list(range(min(8, len(wl.queries))))
+            rng0 = tuple(wl.ranges[q_ids[0]])
+            q_ids = [i for i in q_ids if tuple(wl.ranges[i]) == rng0]
+        oracle, _ = build_oracle_graph(wl.vectors, wl.attrs, rng0, m=16, ef_construction=64)
+        mask = (wl.attrs >= rng0[0]) & (wl.attrs <= rng0[1])
+        sub_ids = np.nonzero(mask)[0]
+        for ef in (16, 32, 64):
+            w_dc, w_rec, o_dc, o_rec = [], [], [], []
+            for i in q_ids:
+                st = SearchStats()
+                ids, _, st = wow.search(wl.queries[i], rng0, k=10, ef=ef, stats=st)
+                gold = brute_force(wl.vectors, wl.attrs, wl.queries[i], rng0, 10)
+                w_dc.append(st.dc)
+                w_rec.append(recall(ids, gold))
+                # oracle graph: ids/gold in the in-range subset's local space
+                st2 = SearchStats()
+                ids2, _, st2 = oracle.search(wl.queries[i], k=10, ef=ef, stats=st2)
+                o_dc.append(st2.dc)
+                gold_local = brute_force(
+                    wl.vectors[sub_ids], wl.attrs[sub_ids], wl.queries[i],
+                    (-np.inf, np.inf), 10)
+                o_rec.append(recall(ids2, gold_local))
+            rows.append(["wow", frac_e, ef, round(float(np.mean(w_dc)), 1),
+                         round(float(np.mean(w_rec)), 4)])
+            rows.append(["oracle", frac_e, ef, round(float(np.mean(o_dc)), 1),
+                         round(float(np.mean(o_rec)), 4)])
+            emit(f"dc_f2-{frac_e}_ef{ef}", float(np.mean(w_dc)),
+                 f"wow_recall={np.mean(w_rec):.3f};oracle_dc={np.mean(o_dc):.0f};"
+                 f"ratio={np.mean(w_dc)/max(np.mean(o_dc),1):.2f}")
+    write_csv("bench_dc.csv", ["index", "frac_exp", "ef", "dc", "recall"], rows)
+    return rows

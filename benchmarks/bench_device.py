@@ -1,0 +1,55 @@
+"""Beyond-paper: device batched search (the TPU serving path) — throughput
+vs the host reference, result parity, batch scaling."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import BENCH_D, BENCH_N, build_wow, emit, write_csv
+
+
+def run() -> list[list]:
+    from repro.core import make_workload, recall
+    from repro.core.device_search import search_batch, to_device_index, device_search
+    from repro.core.snapshot import take_snapshot
+    import jax.numpy as jnp
+
+    rows = []
+    n = max(BENCH_N // 2, 1200)
+    wl = make_workload(n=n, d=BENCH_D, nq=128, seed=8, k=10)
+    idx = build_wow(wl)
+    snap = take_snapshot(idx)
+
+    # host throughput
+    t0 = time.perf_counter()
+    host_res = []
+    for i in range(len(wl.queries)):
+        ids, _, _ = idx.search(wl.queries[i], tuple(wl.ranges[i]), k=10, ef=48)
+        host_res.append(set(ids.tolist()))
+    host_qps = len(wl.queries) / (time.perf_counter() - t0)
+
+    di = to_device_index(snap)
+    qs = jnp.asarray(wl.queries, jnp.float32)
+    rr = jnp.asarray(wl.ranges, jnp.float32)
+    for B in (16, 64, 128):
+        qb, rb = qs[:B], rr[:B]
+        res = device_search(di, qb, rb, k=10, width=48, m=snap.m, o=snap.o)
+        res.ids.block_until_ready()  # compile
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            res = device_search(di, qb, rb, k=10, width=48, m=snap.m, o=snap.o)
+            res.ids.block_until_ready()
+        dev_qps = B * reps / (time.perf_counter() - t0)
+        ov = []
+        dev_ids = np.asarray(res.ids)
+        for i in range(B):
+            got = set(int(snap.ids_map[j]) for j in dev_ids[i] if j >= 0)
+            ov.append(len(got & host_res[i]) / max(len(host_res[i]), 1))
+        rows.append(["device", B, round(dev_qps, 1), round(float(np.mean(ov)), 4)])
+        emit(f"device_search_b{B}", 1e6 / dev_qps,
+             f"overlap={np.mean(ov):.3f};host_qps={host_qps:.0f}")
+    rows.append(["host", 1, round(host_qps, 1), 1.0])
+    write_csv("bench_device.csv", ["path", "batch", "qps", "host_overlap"], rows)
+    return rows

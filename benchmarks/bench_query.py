@@ -1,0 +1,68 @@
+"""Fig. 4: QPS-Recall across selectivity levels, WoW vs baselines."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, build_wow, emit, query_sweep, write_csv
+
+FRACTIONS = {"f1": [1.0], "f2-3": [2.0**-3], "f2-6": [2.0**-6], "mixed": None}
+EFS = [24, 48, 96]
+
+
+def run() -> list[list]:
+    from repro.core import (
+        PostFiltering,
+        PreFiltering,
+        SearchStats,
+        SingleGraphInFilter,
+        make_workload,
+    )
+
+    rows = []
+    base = make_workload(n=BENCH_N, d=BENCH_D, nq=1, seed=0, with_gt=False)
+    wow = build_wow(base)
+    pre = PreFiltering(base.vectors, base.attrs)
+    post = PostFiltering(base.vectors, base.attrs, m=16, ef_construction=64, seed=0)
+    flat = SingleGraphInFilter.__new__(SingleGraphInFilter)
+    flat.graph = post.graph  # share the flat graph build
+
+    for fname, fracs in FRACTIONS.items():
+        wl = make_workload(
+            n=BENCH_N, d=BENCH_D, nq=BENCH_Q, fractions=fracs, seed=1, k=10
+        )
+        wl.vectors, wl.attrs = base.vectors, base.attrs  # same dataset
+        from repro.core import brute_force
+
+        wl.gt = [
+            brute_force(base.vectors, base.attrs, wl.queries[i], tuple(wl.ranges[i]), 10)
+            for i in range(BENCH_Q)
+        ]
+
+        def wow_fn(q, r, k, ef):
+            ids, _, st = wow.search(q, r, k=k, ef=ef)
+            return ids, st
+
+        def pre_fn(q, r, k, ef):
+            st = SearchStats()
+            ids, st = pre.search(q, r, k=k, stats=st)
+            return ids, st
+
+        def post_fn(q, r, k, ef):
+            st = SearchStats()
+            ids, st = post.search(q, r, k=k, ef=ef, stats=st)
+            return ids, st
+
+        def flat_fn(q, r, k, ef):
+            st = SearchStats()
+            ids, st = flat.search(q, r, k=k, ef=ef, stats=st)
+            return ids, st
+
+        for name, fn in [("wow", wow_fn), ("prefilter", pre_fn),
+                         ("postfilter", post_fn), ("single_graph", flat_fn)]:
+            efs = EFS if name != "prefilter" else [0]
+            for ef, qps, rec, dc in query_sweep(fn, wl, efs):
+                rows.append([name, fname, ef, round(qps, 1), round(rec, 4), round(dc, 1)])
+                emit(f"query_{name}_{fname}_ef{ef}", 1e6 / max(qps, 1e-9),
+                     f"recall={rec:.3f};dc={dc:.0f}")
+    write_csv("bench_query.csv", ["index", "workload", "ef", "qps", "recall", "dc"], rows)
+    return rows

@@ -1,0 +1,64 @@
+"""Shared benchmark scaffolding.
+
+Scale via REPRO_BENCH_N (default 3000 — sized for a 1-core CI box; the
+paper's million-scale datasets are not available offline, see DESIGN.md §8).
+Every bench emits ``name,us_per_call,derived`` CSV rows on stdout and richer
+CSVs under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+os.environ.setdefault("OMP_NUM_THREADS", "1")
+os.environ.setdefault("OPENBLAS_NUM_THREADS", "1")
+
+import numpy as np
+
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", 3000))
+BENCH_D = int(os.environ.get("REPRO_BENCH_D", 24))
+BENCH_Q = int(os.environ.get("REPRO_BENCH_Q", 60))
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def write_csv(fname: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, fname)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def build_wow(wl, m=16, ef=64, o=4, seed=0, timed=False):
+    from repro.core import WoWIndex
+
+    idx = WoWIndex(dim=wl.vectors.shape[1], m=m, ef_construction=ef, o=o, seed=seed)
+    t0 = time.perf_counter()
+    for v, a in zip(wl.vectors, wl.attrs):
+        idx.insert(v, a)
+    dt = time.perf_counter() - t0
+    return (idx, dt) if timed else idx
+
+
+def query_sweep(search_fn, wl, efs, k=10):
+    """-> rows of (ef, qps, mean_recall, mean_dc) over the workload."""
+    from repro.core import SearchStats, recall
+
+    out = []
+    nq = len(wl.queries)
+    for ef in efs:
+        recs, dcs = [], []
+        t0 = time.perf_counter()
+        for i in range(nq):
+            ids, st = search_fn(wl.queries[i], tuple(wl.ranges[i]), k, ef)
+            recs.append(recall(ids, wl.gt[i]))
+            dcs.append(st.dc if st else 0)
+        dt = time.perf_counter() - t0
+        out.append((ef, nq / dt, float(np.mean(recs)), float(np.mean(dcs))))
+    return out

@@ -1,0 +1,56 @@
+"""End-to-end training driver: train a ~100M-class reduced config for a few
+hundred steps on synthetic Markov data, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-7b --steps 200
+
+Loss converges toward the data's conditional entropy (printed) — real
+learning, not noise.  Kill and re-run with the same --ckpt to see
+resume-by-manifest fault tolerance.
+"""
+import argparse
+import os
+import sys
+
+os.environ.setdefault("OMP_NUM_THREADS", "1")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--layers", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.models import param_count, init_params
+    from repro.train import AdamW, DataConfig, TokenSource, Trainer
+
+    cfg = get_arch(args.arch).reduced(
+        num_layers=max(args.layers, get_arch(args.arch).scan_unit),
+        vocab_size=args.vocab, d_model=256, d_ff=512, num_heads=8,
+        num_kv_heads=4, head_dim=32,
+    )
+    data = TokenSource(DataConfig(vocab_size=args.vocab, seq_len=args.seq,
+                                  global_batch=args.batch, kind="markov"))
+    print(f"arch={cfg.name} (reduced) | loss floor (entropy rate) = "
+          f"{data.entropy_rate():.3f} nats")
+    tr = Trainer(cfg, AdamW(lr=args.lr, warmup=20, total_steps=args.steps),
+                 data, ckpt_dir=args.ckpt, log_every=10, ckpt_every=50)
+    import jax
+    print(f"params: {sum(x.size for x in jax.tree.leaves(tr.values)):,} | "
+          f"resuming at step {tr.step_idx}")
+    hist = tr.run(args.steps - tr.step_idx)
+    tr.finish()
+    for h in hist:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.2f}  {h['sec_per_step']:.2f}s/step")
+
+
+if __name__ == "__main__":
+    main()

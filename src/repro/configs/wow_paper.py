@@ -1,0 +1,14 @@
+"""WoW index defaults from the paper's experiment section (§4.1)."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class WoWPaperConfig:
+    m: int = 16                 # maximum outdegree
+    ef_construction: int = 128  # omega_c (Sift default; 256 for hard sets)
+    o: int = 4                  # window boosting base (§3.5 analysis)
+    ef_search: int = 64         # omega_s sweep start
+    k: int = 10                 # neighbors per query
+
+
+DEFAULT = WoWPaperConfig()

@@ -1,0 +1,293 @@
+"""Batched WoW search on device — the TPU serving path.
+
+Executes Algorithm 2+3 for B queries in lock-step inside one
+``lax.while_loop``.  Per hop, every active query:
+
+  1. selects its nearest unexpanded candidate (the paper's min-heap pop),
+  2. gathers that vertex's neighbor block across all layers [0, l_d],
+  3. applies the early-stop layer mask — a layer below ``l`` contributes only
+     if every layer above it (up to ``l_d``) had an unvisited out-of-range
+     neighbor (Alg. 2's ``next`` flag, evaluated vectorially; out-of-range
+     neighbors are never marked visited inside a hop, so the flag is
+     data-parallel computable up front),
+  4. selects at most ``m+1`` eligible (valid, unvisited, in-range) neighbors
+     by layer-priority rank (the ``c_n`` cap with high-layer priority),
+     deduplicated across layers,
+  5. evaluates their distances in one batched matmul (the MXU-friendly
+     factorised ``|v|^2 - 2 v.q + |q|^2`` — same math the Pallas kernel in
+     ``repro.kernels.distance`` implements; set ``use_kernel=True`` on TPU),
+  6. merges them into its sorted fixed-width result array (heap semantics:
+     the width-W sorted array is exactly the paper's U; entries beyond W can
+     never be expanded by the paper's algorithm either).
+
+Termination per query: no unexpanded candidates, or the nearest unexpanded is
+farther than the current worst of a full result set (Alg. 2 line 6).
+
+The search is a pure jittable function of (snapshot arrays, queries, ranges)
+and is shardable over the query batch (see ``repro.core.distributed``).
+Out-of-range vertices are never distance-evaluated, preserving the paper's
+no-OOR property; per-query DC and hop counters are returned for parity tests
+against the instrumented host path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .snapshot import Snapshot
+
+_INF = jnp.float32(np.inf)
+_BIG = jnp.int32(2**30)
+
+
+class DeviceIndex(NamedTuple):
+    """Pytree of snapshot arrays (static config passed separately)."""
+
+    vectors: jax.Array  # f32[n, d]
+    sq_norms: jax.Array  # f32[n]
+    attrs: jax.Array  # f32[n]
+    neighbors: jax.Array  # i32[L, n, m]
+    uvals: jax.Array  # f32[u]
+    uval_rep: jax.Array  # i32[u]
+
+
+def to_device_index(snap: Snapshot) -> DeviceIndex:
+    return DeviceIndex(
+        vectors=jnp.asarray(snap.vectors, jnp.float32),
+        sq_norms=jnp.asarray(snap.sq_norms, jnp.float32),
+        attrs=jnp.asarray(snap.attrs, jnp.float32),
+        neighbors=jnp.asarray(snap.neighbors, jnp.int32),
+        uvals=jnp.asarray(snap.uvals, jnp.float32),
+        uval_rep=jnp.asarray(snap.uval_rep, jnp.int32),
+    )
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array  # i32[B, k] snapshot ids, -1 padded
+    dists: jax.Array  # f32[B, k], +inf padded
+    dc: jax.Array  # i32[B] distance computations
+    hops: jax.Array  # i32[B]
+
+
+def _landing_and_entry(di: DeviceIndex, ranges: jax.Array, o: int, num_layers: int):
+    """Alg. 3 steps 1: selectivity (via unique values), landing layer, entry."""
+    x, y = ranges[:, 0], ranges[:, 1]
+    lo = jnp.searchsorted(di.uvals, x, side="left")
+    hi = jnp.searchsorted(di.uvals, y, side="right") - 1
+    has = hi >= lo
+    n_prime = jnp.maximum(hi - lo + 1, 1)
+    # argmax over layers of min(2 o^l, n')/max(2 o^l, n') — the ratio is
+    # unimodal in l with its peak at l_h or l_h+1, so the global argmax
+    # equals the paper's restricted argmax (Alg. 3 lines 2-3).
+    w_l = 2 * (float(o) ** np.arange(num_layers))  # [L]
+    w_l = jnp.asarray(w_l, jnp.float32)[None, :]
+    npf = n_prime.astype(jnp.float32)[:, None]
+    ratio = jnp.minimum(w_l, npf) / jnp.maximum(w_l, npf)
+    l_d = jnp.argmax(ratio, axis=1).astype(jnp.int32)
+    # entry point: representative vertex of the in-range value closest to the
+    # filter median (Alg. 3 line 4).
+    med = (x + y) * 0.5
+    pos = jnp.searchsorted(di.uvals, med, side="left")
+    cand_hi = jnp.clip(pos, lo, hi)
+    cand_lo = jnp.clip(pos - 1, lo, hi)
+    v_hi = di.uvals[jnp.clip(cand_hi, 0, di.uvals.shape[0] - 1)]
+    v_lo = di.uvals[jnp.clip(cand_lo, 0, di.uvals.shape[0] - 1)]
+    pick_lo = jnp.abs(v_lo - med) <= jnp.abs(v_hi - med)
+    ep_uidx = jnp.where(pick_lo, cand_lo, cand_hi)
+    ep = di.uval_rep[jnp.clip(ep_uidx, 0, di.uvals.shape[0] - 1)]
+    return l_d, ep, has
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "width", "m", "o", "metric", "max_hops", "use_kernel"),
+)
+def device_search(
+    di: DeviceIndex,
+    queries: jax.Array,  # f32[B, d]
+    ranges: jax.Array,  # f32[B, 2]
+    *,
+    k: int = 10,
+    width: int = 64,
+    m: int = 16,
+    o: int = 4,
+    metric: str = "l2",
+    max_hops: int | None = None,
+    use_kernel: bool = False,
+) -> SearchResult:
+    B, d = queries.shape
+    L, n, _ = di.neighbors.shape
+    W = max(width, k)
+    K = m + 1  # per-hop DC cap (c_n <= m admits m+1 evaluations)
+    F = L * m
+    n_words = (n + 31) // 32
+    if max_hops is None:
+        max_hops = 8 * W + 64
+
+    queries = queries.astype(jnp.float32)
+    q2 = jnp.sum(queries * queries, axis=1)  # [B]
+    x, y = ranges[:, 0].astype(jnp.float32), ranges[:, 1].astype(jnp.float32)
+    l_d, ep, has = _landing_and_entry(di, ranges.astype(jnp.float32), o, L)
+
+    # layer-priority rank template: (l_d - l) * m + column, lower is better
+    lev = jnp.arange(L, dtype=jnp.int32)[None, :, None]  # [1, L, 1]
+    col = jnp.arange(m, dtype=jnp.int32)[None, None, :]  # [1, 1, m]
+
+    def eval_dists(ids: jax.Array, valid: jax.Array) -> jax.Array:
+        idc = jnp.clip(ids, 0, n - 1)
+        vecs = di.vectors[idc]  # [B, K, d]
+        if use_kernel:
+            from repro.kernels.ops import batched_dot
+
+            dots = batched_dot(vecs, queries)
+        else:
+            dots = jnp.einsum("bkd,bd->bk", vecs, queries)
+        if metric == "l2":
+            dd = jnp.maximum(di.sq_norms[idc] - 2.0 * dots + q2[:, None], 0.0)
+        else:
+            dd = 1.0 - dots
+        return jnp.where(valid, dd, _INF)
+
+    # ---------------------------------------------------------------- init
+    ep_valid = has
+    ep_ids = jnp.where(ep_valid, ep, 0)
+    d_ep = eval_dists(ep_ids[:, None], ep_valid[:, None])[:, 0]  # [B]
+    res_d = jnp.full((B, W), _INF).at[:, 0].set(jnp.where(ep_valid, d_ep, _INF))
+    res_i = jnp.full((B, W), -1, jnp.int32).at[:, 0].set(jnp.where(ep_valid, ep_ids, -1))
+    res_e = jnp.ones((B, W), jnp.bool_).at[:, 0].set(~ep_valid)  # pad = expanded
+    vbits = jnp.zeros((B, n_words + 1), jnp.uint32)
+    word = jnp.where(ep_valid, ep_ids >> 5, n_words)
+    bit = jnp.where(ep_valid, jnp.uint32(1) << (ep_ids & 31).astype(jnp.uint32), 0)
+    vbits = vbits.at[jnp.arange(B), word].add(bit.astype(jnp.uint32))
+    active = ep_valid
+    dc = jnp.where(ep_valid, 1, 0).astype(jnp.int32)
+    hops = jnp.zeros(B, jnp.int32)
+
+    def cond(state):
+        _, _, _, _, active, _, _, t = state
+        return jnp.logical_and(jnp.any(active), t < max_hops)
+
+    def body(state):
+        res_d, res_i, res_e, vbits, active, dc, hops, t = state
+        # ---- pop the nearest unexpanded candidate (Alg. 2 line 5) ----
+        unexp = jnp.where(res_e, _INF, res_d)  # [B, W]
+        i_star = jnp.argmin(unexp, axis=1)  # [B]
+        d_star = jnp.take_along_axis(unexp, i_star[:, None], 1)[:, 0]
+        worst = res_d[:, W - 1]
+        full = res_i[:, W - 1] >= 0
+        done = jnp.logical_or(d_star == _INF, jnp.logical_and(full, d_star > worst))
+        act = jnp.logical_and(active, ~done)  # queries doing work this hop
+
+        s = jnp.take_along_axis(res_i, i_star[:, None], 1)[:, 0]
+        s = jnp.where(act, s, 0)
+        res_e2 = res_e.at[jnp.arange(B), i_star].set(True)
+        res_e2 = jnp.where(act[:, None], res_e2, res_e)
+
+        # ---- gather multi-layer neighbor block ----
+        nb = jnp.transpose(di.neighbors[:, s, :], (1, 0, 2))  # [B, L, m]
+        valid = nb >= 0
+        nbc = jnp.clip(nb, 0, n - 1)
+        a_nb = di.attrs[nbc]  # [B, L, m]
+        wordn = jnp.where(valid, nbc >> 5, n_words)
+        got = jnp.take_along_axis(
+            vbits, wordn.reshape(B, -1), axis=1
+        ).reshape(B, L, m)
+        vis = (got >> (nbc & 31).astype(jnp.uint32)) & 1
+        unvis = jnp.logical_and(valid, vis == 0)
+        inr = jnp.logical_and(a_nb >= x[:, None, None], a_nb <= y[:, None, None])
+
+        # ---- early-stop layer inclusion mask (Alg. 2 lines 7-17) ----
+        below_ld = lev <= l_d[:, None, None]  # [B, L, 1]
+        oor_unvis = jnp.any(
+            jnp.logical_and(unvis, ~inr) & below_ld, axis=2
+        )  # [B, L]
+        neutral = jnp.where(lev[:, :, 0] <= l_d[:, None], oor_unvis, True)
+        shifted = jnp.concatenate(
+            [neutral[:, 1:], jnp.ones((B, 1), jnp.bool_)], axis=1
+        )
+        include = (
+            jnp.cumprod(shifted[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1] > 0
+        )
+        include = jnp.logical_and(include, lev[:, :, 0] <= l_d[:, None])  # [B, L]
+
+        elig = unvis & inr & include[:, :, None] & act[:, None, None]  # [B, L, m]
+        rank = (l_d[:, None, None] - lev) * m + col  # [B, L, m]
+        rank = jnp.where(elig, rank, _BIG)
+        ids_f = nbc.reshape(B, F)
+        rank_f = rank.reshape(B, F)
+        # dedupe across layers: drop an entry if a better-ranked eligible
+        # entry carries the same id (the host marks it visited first).
+        eq = ids_f[:, :, None] == ids_f[:, None, :]  # [B, F, F]
+        better = rank_f[:, None, :] < rank_f[:, :, None]
+        dup = jnp.any(eq & better & (rank_f[:, None, :] < _BIG), axis=2)
+        rank_f = jnp.where(dup, _BIG, rank_f)
+
+        neg, sel_pos = lax.top_k(-rank_f, K)  # best (smallest) K ranks
+        sel_valid = (-neg) < _BIG
+        sel_ids = jnp.take_along_axis(ids_f, sel_pos, axis=1)  # [B, K]
+        sel_ids = jnp.where(sel_valid, sel_ids, 0)
+
+        # ---- mark visited ----
+        wsel = jnp.where(sel_valid, sel_ids >> 5, n_words)
+        bsel = jnp.where(
+            sel_valid, jnp.uint32(1) << (sel_ids & 31).astype(jnp.uint32), 0
+        )
+        vbits2 = vbits.at[jnp.arange(B)[:, None], wsel].add(bsel.astype(jnp.uint32))
+
+        # ---- batched distance evaluation ----
+        dd = eval_dists(sel_ids, sel_valid)  # [B, K]
+        dc2 = dc + jnp.sum(sel_valid, axis=1).astype(jnp.int32)
+
+        # ---- merge into the sorted fixed-width result set ----
+        new_i = jnp.where(sel_valid, sel_ids, -1)
+        new_e = ~sel_valid  # invalid entries act as expanded padding
+        cat_d = jnp.concatenate([res_d, dd], axis=1)
+        cat_i = jnp.concatenate([res_i, new_i], axis=1)
+        cat_e = jnp.concatenate([res_e2, new_e], axis=1)
+        srt_d, srt_i, srt_e = lax.sort(
+            (cat_d, cat_i, cat_e.astype(jnp.int32)), dimension=1, num_keys=1
+        )
+        nres_d, nres_i, nres_e = srt_d[:, :W], srt_i[:, :W], srt_e[:, :W] > 0
+
+        # ---- commit only for queries that worked this hop ----
+        res_d = jnp.where(act[:, None], nres_d, res_d)
+        res_i = jnp.where(act[:, None], nres_i, res_i)
+        res_e = jnp.where(act[:, None], nres_e, res_e2)
+        vbits = jnp.where(act[:, None], vbits2, vbits)
+        dc = jnp.where(act, dc2, dc)
+        hops = hops + act.astype(jnp.int32)
+        return (res_d, res_i, res_e, vbits, act, dc, hops, t + 1)
+
+    state = (res_d, res_i, res_e, vbits, active, dc, hops, jnp.int32(0))
+    res_d, res_i, res_e, vbits, active, dc, hops, _ = lax.while_loop(
+        cond, body, state
+    )
+    return SearchResult(ids=res_i[:, :k], dists=res_d[:, :k], dc=dc, hops=hops)
+
+
+def search_batch(
+    snap: Snapshot,
+    queries: np.ndarray,
+    ranges: np.ndarray,
+    k: int = 10,
+    width: int = 64,
+    use_kernel: bool = False,
+) -> SearchResult:
+    """Convenience host wrapper: snapshot -> device arrays -> search."""
+    di = to_device_index(snap)
+    return device_search(
+        di,
+        jnp.asarray(queries, jnp.float32),
+        jnp.asarray(ranges, jnp.float32),
+        k=k,
+        width=width,
+        m=snap.m,
+        o=snap.o,
+        metric="l2" if snap.metric == "l2" else "cosine",
+        use_kernel=use_kernel,
+    )

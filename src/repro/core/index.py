@@ -1,0 +1,312 @@
+"""WoW index — public API (Algorithms 1 and 3).
+
+Fully incremental from an empty index, no presorting, no partial indexing
+(Challenge 1).  Duplicate attribute values are native (§3.7): the WBT stores
+unique values only; duplicates share a rank and only their vectors enter the
+window graphs.  Deletion is mark-based (§3.7).
+
+Usage::
+
+    idx = WoWIndex(dim=128, m=16, ef_construction=128, o=4)
+    for v, a in zip(vectors, attrs):
+        idx.insert(v, a)
+    ids, dists, stats = idx.search(q, (lo, hi), k=10, ef=64)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .graph import LayeredGraph
+from .search import _Visited, rng_prune, search_candidates
+from .store import BuildStats, SearchStats, VectorStore
+
+
+@dataclass
+class WoWParams:
+    m: int = 16  # maximum outdegree
+    ef_construction: int = 128  # construction beam width (omega_c)
+    o: int = 4  # window boosting base (>= 2)
+    metric: str = "l2"
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.o < 2:
+            raise ValueError("window boosting base o must be >= 2")
+        if self.m < 2:
+            raise ValueError("m must be >= 2")
+
+
+class WoWIndex:
+    def __init__(
+        self,
+        dim: int,
+        m: int = 16,
+        ef_construction: int = 128,
+        o: int = 4,
+        metric: str = "l2",
+        seed: int = 0,
+    ):
+        self.params = WoWParams(m, ef_construction, o, metric, seed)
+        self.store = VectorStore(dim, metric=metric)
+        self.graph = LayeredGraph(m)
+        from .wbt import WBT
+
+        self.wbt = WBT()
+        self.value_map: dict[float, list[int]] = {}
+        self.deleted: set[int] = set()
+        self.build_stats = BuildStats()
+        self._visited = _Visited()
+        self._rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------ properties
+    def __len__(self) -> int:
+        return self.store.n - len(self.deleted)
+
+    @property
+    def dim(self) -> int:
+        return self.store.dim
+
+    @property
+    def top(self) -> int:
+        return self.graph.top
+
+    @property
+    def num_unique(self) -> int:
+        return self.wbt.n
+
+    # ---------------------------------------------------------------- insert
+    def insert(self, vec: np.ndarray, attr: float) -> int:
+        """Algorithm 1: top-down insertion. Returns the new vertex id."""
+        p = self.params
+        m, o, omega_c = p.m, p.o, p.ef_construction
+        attr = float(attr)
+        is_new_value = not self.wbt.contains(attr)
+        u_after = self.wbt.n + (1 if is_new_value else 0)
+
+        # Lines 2-4: raise the top layer when its window cannot cover |A|_u.
+        while u_after > 2 * (o ** self.graph.top):
+            self.graph.add_layer(clone_from=self.graph.top)
+
+        vid = self.store.append(vec, attr)
+        self.graph.ensure_capacity(self.store.n)
+        v = self.store.vectors[vid]
+        top = self.graph.top
+
+        # Lines 5-17: per-layer candidate acquisition + neighbor selection.
+        neighbors_per_layer: list[list[tuple[float, int]]] = [[] for _ in range(top + 1)]
+        u_prev: list[tuple[float, int]] = []  # U^{l+1}; U^{top+1} = empty
+        if self.store.n > 1:
+            attrs = self.store.attrs_list
+            for l in range(top, -1, -1):
+                half = o**l
+                w_lo, w_hi = self.wbt.window(attr, half)
+                # in-window candidates carried from the layer above (Thm 3.1)
+                u_in = [(d, j) for (d, j) in u_prev if w_lo <= attrs[j] <= w_hi]
+                if len(u_in) > m:
+                    u_l = u_in
+                    self.build_stats.searches_skipped += 1
+                else:
+                    ep = self._sample_entry(w_lo, w_hi, exclude=vid)
+                    if ep is None:
+                        u_l = u_in
+                    else:
+                        stats = SearchStats()
+                        found = search_candidates(
+                            self.store,
+                            self.graph,
+                            self._visited,
+                            ep,
+                            v,
+                            (w_lo, w_hi),
+                            l_min=l,
+                            l_max=top,
+                            width=omega_c,
+                            stats=stats,
+                            exclude=vid,
+                            deleted=self.deleted or None,
+                        )
+                        self.build_stats.dc += stats.dc
+                        self.build_stats.searches += 1
+                        merged = {j: d for d, j in u_in}
+                        for d, j in found:
+                            merged.setdefault(j, d)
+                        u_l = [(d, j) for j, d in merged.items()]
+                # Line 11: select m/2 diversified neighbors, reserve slots.
+                sel = rng_prune(self.store, v, u_l, max(1, m // 2))
+                neighbors_per_layer[l] = sel
+                # Lines 12-17: back-edges with two-stage pruning.
+                for d_ab, b in sel:
+                    if self.graph.append_neighbor(l, b, vid):
+                        continue
+                    self._two_stage_prune(l, b, vid, d_ab)
+                u_prev = u_l
+
+        # Line 18: commit the attribute and the forward edges.
+        if is_new_value:
+            self.wbt.insert(attr)
+            self.value_map[attr] = [vid]
+        else:
+            self.value_map[attr].append(vid)
+        for l in range(top + 1):
+            sel = neighbors_per_layer[l]
+            if sel:
+                self.graph.set_neighbors(
+                    l, vid, np.asarray([j for _, j in sel], dtype=np.int32)
+                )
+        return vid
+
+    def _two_stage_prune(self, l: int, b: int, vid: int, d_ab: float) -> None:
+        """Alg. 1 lines 15-17: window prune then RNG prune of b's list."""
+        p = self.params
+        self.build_stats.prunes += 1
+        attr_b = float(self.store.attrs[b])
+        w_lo, w_hi = self.wbt.window(attr_b, p.o**l)
+        vb = self.store.vectors[b]
+        keep_ids = [
+            int(j)
+            for j in self.graph.neighbors(l, b)
+            if w_lo <= self.store.attrs[j] <= w_hi and j not in self.deleted
+        ]
+        cand: list[tuple[float, int]] = [(d_ab, vid)]
+        if keep_ids:
+            ids = np.asarray(keep_ids, dtype=np.int64)
+            dists = self.store.dist_batch(vb, ids)
+            self.build_stats.dc += len(keep_ids)
+            cand.extend(zip(dists.tolist(), keep_ids))
+        sel = rng_prune(self.store, vb, cand, p.m)
+        self.graph.set_neighbors(l, b, np.asarray([j for _, j in sel], dtype=np.int32))
+
+    def _sample_entry(self, w_lo: float, w_hi: float, exclude: int) -> int | None:
+        """Alg. 1 line 7: a random vertex with attribute value in the window."""
+        if self.wbt.n == 0:
+            return None
+        lo = self.wbt.rank(w_lo)
+        hi = self.wbt.count_le(w_hi) - 1
+        if hi < lo:
+            return None
+        for _ in range(4):  # tolerate deleted / excluded hits
+            k = int(self._rng.integers(lo, hi + 1))
+            val = self.wbt.select(k)
+            cands = [
+                c for c in self.value_map.get(val, []) if c != exclude and c not in self.deleted
+            ]
+            if cands:
+                return int(cands[self._rng.integers(0, len(cands))])
+        # fall back to a linear-ish sweep over the window
+        for k in range(lo, hi + 1):
+            val = self.wbt.select(k)
+            for c in self.value_map.get(val, []):
+                if c != exclude and c not in self.deleted:
+                    return int(c)
+        return None
+
+    # ---------------------------------------------------------------- search
+    def landing_layer(self, n_prime: int) -> int:
+        """Alg. 3 lines 2-3: selectivity-aware landing layer."""
+        o = self.params.o
+        top = self.graph.top
+        if n_prime <= 0:
+            return 0
+        l_h = int(math.floor(math.log(max(n_prime, 1) / 2, o))) if n_prime >= 2 else 0
+        l_h = max(0, min(l_h, top))
+        best_l, best_ratio = 0, -1.0
+        for l in (l_h, l_h + 1):
+            if l > top:
+                continue
+            w = 2 * (o**l)
+            ratio = min(w, n_prime) / max(w, n_prime)
+            if ratio > best_ratio:
+                best_ratio, best_l = ratio, l
+        return best_l
+
+    def search(
+        self,
+        q: np.ndarray,
+        rng: tuple[float, float],
+        k: int = 10,
+        ef: int = 64,
+        l_max: int | None = None,
+        l_min: int = 0,
+        stats: SearchStats | None = None,
+        early_stop: bool = True,
+    ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Algorithm 3: selectivity-aware RFANNS query.
+
+        ``l_max`` overrides the landing layer (for the Fig. 7 ablation);
+        ``stats`` may be supplied to accumulate instrumentation.
+        """
+        if stats is None:
+            stats = SearchStats()
+        x, y = float(rng[0]), float(rng[1])
+        q = self.store.prepare(np.asarray(q))
+        n_prime = self.wbt.count_range(x, y)
+        if n_prime == 0 or self.store.n == 0:
+            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.float32), stats
+        l_d = self.landing_layer(n_prime) if l_max is None else min(l_max, self.graph.top)
+        ep = self._entry_for_query(x, y)
+        if ep is None:
+            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.float32), stats
+        width = max(ef, k)
+        found = search_candidates(
+            self.store,
+            self.graph,
+            self._visited,
+            ep,
+            q,
+            (x, y),
+            l_min=l_min,
+            l_max=l_d,
+            width=width,
+            stats=stats,
+            deleted=self.deleted or None,
+            early_stop=early_stop,
+        )
+        found = found[:k]
+        ids = np.asarray([j for _, j in found], dtype=np.int64)
+        dists = np.asarray([d for d, _ in found], dtype=np.float32)
+        return ids, dists, stats
+
+    def _entry_for_query(self, x: float, y: float) -> int | None:
+        """Alg. 3 line 4: vertex with value closest to the filter median."""
+        val = self.wbt.closest_in_range((x + y) / 2.0, x, y)
+        if val is None:
+            return None
+        cands = [c for c in self.value_map.get(val, []) if c not in self.deleted]
+        if not cands:
+            # duplicates of this value all deleted; scan outward by rank
+            lo = self.wbt.rank(x)
+            hi = self.wbt.count_le(y) - 1
+            for kk in range(lo, hi + 1):
+                for c in self.value_map.get(self.wbt.select(kk), []):
+                    if c not in self.deleted:
+                        return int(c)
+            return None
+        return int(cands[0])
+
+    # ---------------------------------------------------------------- delete
+    def delete(self, vid: int) -> None:
+        """Mark-based deletion (§3.7). The vertex stays traversable; the
+        two-stage prune removes it from neighbor lists opportunistically."""
+        if 0 <= vid < self.store.n:
+            self.deleted.add(int(vid))
+
+    # ------------------------------------------------------------- reporting
+    def memory_bytes(self) -> int:
+        g = sum(lay.nbytes + cnt.nbytes for lay, cnt in zip(self.graph.layers, self.graph.counts))
+        w = self.wbt.val.nbytes + self.wbt.left.nbytes + self.wbt.right.nbytes + self.wbt.size.nbytes
+        return g + w  # raw vectors/attrs excluded, as in Table 4
+
+    def describe(self) -> dict:
+        return {
+            "n": self.store.n,
+            "unique": self.wbt.n,
+            "layers": self.graph.num_layers,
+            "m": self.params.m,
+            "o": self.params.o,
+            "index_bytes": self.memory_bytes(),
+            "build_dc": self.build_stats.dc,
+            "searches_skipped": self.build_stats.searches_skipped,
+        }

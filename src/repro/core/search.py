@@ -1,0 +1,203 @@
+"""Algorithm 2 (``SearchCandidates``) and RNG pruning — host reference path.
+
+This is the faithful, instrumented implementation of the paper's multi-layer
+beam search with:
+
+  * top-down layer traversal per hop, starting at ``l_max`` (the landing
+    layer during queries, the insertion layer during builds),
+  * the **early-stop** flag ``next`` — descend a layer only if some neighbor
+    at the current layer failed the range filter,
+  * the per-hop **distance-computation cap** ``c_n <= m`` with high-layer
+    priority (Alg. 2 lines 9-11),
+  * out-of-range vertices are *never* distance-evaluated (no-OOR, Table 2).
+
+The per-hop layer sweep is evaluated with vectorised numpy mask algebra and
+distances for a hop are computed as one batch; the set of evaluated vertices
+and the push order are exactly those of the paper's sequential loop (the
+``c_n`` cap and the layer priority are distance-independent, and out-of-range
+neighbors are never marked visited within a hop, so the early-stop flag per
+layer equals "any unvisited out-of-range neighbor" evaluated up front).
+DC counts therefore match the sequential formulation; filter-check counts can
+differ by the rare in-hop duplicate of an already-evaluated neighbor.
+
+The device serving path (``repro.core.device_search``) re-implements the same
+semantics as a ``lax.while_loop``; parity is enforced by tests.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from .graph import LayeredGraph
+from .store import SearchStats, VectorStore
+
+
+class _Visited:
+    """O(1) clearable visited set via generation stamping (python list —
+    scalar indexing on the hot path is ~3x faster than numpy scalars)."""
+
+    __slots__ = ("gen", "cur")
+
+    def __init__(self, capacity: int = 1024):
+        self.gen: list[int] = [0] * capacity
+        self.cur = 0
+
+    def next_query(self, n: int) -> None:
+        if n > len(self.gen):
+            self.gen.extend([0] * (max(n, 2 * len(self.gen)) - len(self.gen)))
+        self.cur += 1
+
+    def test_and_set(self, v: int) -> bool:
+        if self.gen[v] == self.cur:
+            return True
+        self.gen[v] = self.cur
+        return False
+
+    def is_visited(self, v: int) -> bool:
+        return self.gen[v] == self.cur
+
+
+def search_candidates(
+    store: VectorStore,
+    graph: LayeredGraph,
+    visited: _Visited,
+    ep: int,
+    target: np.ndarray,
+    rng: tuple[float, float],
+    l_min: int,
+    l_max: int,
+    width: int,
+    stats: SearchStats,
+    exclude: int = -1,
+    deleted: set[int] | None = None,
+    early_stop: bool = True,
+) -> list[tuple[float, int]]:
+    """Returns up to ``width`` nearest in-range candidates as (dist, id),
+    sorted ascending by distance."""
+    x, y = rng
+    attrs = store.attrs_list
+    vectors = store.vectors
+    metric = store.metric
+    norms = store.sq_norms
+    q2 = float(np.dot(target, target))
+    m = graph.m
+    layer_rows = [lay for lay in graph.layers]
+    layer_cnts = [cnt for cnt in graph.counts]
+    visited.next_query(store.n)
+    gen = visited.gen
+    cur = visited.cur
+    stats.lowest_layer = l_max
+
+    d_ep = float(store.dist_batch(target, np.asarray([ep]))[0])
+    stats.dc += 1
+    gen[ep] = cur
+    # C: min-heap of unexpanded candidates; U: max-heap (negated) of results.
+    C: list[tuple[float, int]] = [(d_ep, ep)]
+    U: list[tuple[float, int]] = [(-d_ep, ep)]
+
+    dc = 0
+    filter_checks = 0
+    hops = 0
+    lowest = l_max
+    heappush, heappop = heapq.heappush, heapq.heappop
+    while C:
+        d_s, s = heappop(C)
+        if len(U) >= width and d_s > -U[0][0]:
+            break
+        hops += 1
+        # ---- top-down layer sweep (Alg. 2 lines 7-17) ----
+        batch: list[int] = []
+        c_n = 0
+        l = l_max
+        nxt = True
+        while l >= l_min and nxt:
+            nxt = not early_stop  # ablation: always descend (Table 5)
+            if l < lowest:
+                lowest = l
+            cnt = int(layer_cnts[l][s])
+            if cnt:
+                row = layer_rows[l][s, :cnt].tolist()
+                for j in row:
+                    if gen[j] == cur:
+                        continue
+                    filter_checks += 1
+                    a = attrs[j]
+                    if a < x or a > y:
+                        nxt = True
+                    elif c_n <= m:
+                        gen[j] = cur
+                        c_n += 1
+                        batch.append(j)
+            l -= 1
+        # ---- batched distance evaluation + heap pushes ----
+        if batch:
+            xv = vectors[batch]
+            if metric == "l2":
+                # |v|^2 - 2 v.q + |q|^2 with cached |v|^2 (same MXU-friendly
+                # factorisation the Pallas kernel uses)
+                dists = norms[batch] - 2.0 * np.dot(xv, target) + q2
+                np.maximum(dists, 0.0, out=dists)
+            else:
+                dists = 1.0 - np.dot(xv, target)
+            dc += len(batch)
+            for j, dj in zip(batch, dists.tolist()):
+                if j == exclude:
+                    continue
+                if len(U) < width or dj < -U[0][0]:
+                    heappush(C, (dj, j))
+                    # deleted vertices stay traversable but are never results
+                    # (§3.7: "normally traverse it without pushing it into
+                    # the result max-heap").
+                    if deleted is None or j not in deleted:
+                        heappush(U, (-dj, j))
+                        if len(U) > width:
+                            heappop(U)
+    stats.dc += dc
+    stats.filter_checks += filter_checks
+    stats.hops += hops
+    stats.lowest_layer = max(min(stats.lowest_layer, lowest), l_min)
+    out = [(-nd, i) for nd, i in U]
+    out.sort()
+    return out
+
+
+def rng_prune(
+    store: VectorStore,
+    target: np.ndarray,
+    candidates: list[tuple[float, int]],
+    max_m: int,
+) -> list[tuple[float, int]]:
+    """RNG-based neighbor selection (HNSW 'heuristic'; Def. 4 property 1).
+
+    Keep candidate ``c`` (nearest first) iff for every already-kept ``s``:
+    ``dist(target, c) < dist(c, s)`` — i.e. the edge (target, c) is not the
+    longest edge of any triangle with a kept neighbor.  The candidate-to-kept
+    distances come from one BLAS pairwise matrix.
+    """
+    cand = sorted(set(candidates), key=lambda t: t[0])
+    if not cand:
+        return []
+    if len(cand) <= max_m == 1 or len(cand) == 1:
+        return cand[:max_m]
+    ids = np.asarray([j for _, j in cand], dtype=np.int64)
+    xs = store.vectors[ids]
+    if store.metric == "l2":
+        sq = np.einsum("ij,ij->i", xs, xs)
+        pair = sq[:, None] + sq[None, :] - 2.0 * (xs @ xs.T)
+    else:
+        pair = 1.0 - xs @ xs.T
+    selected: list[tuple[float, int]] = []
+    sel_rows: list[int] = []
+    for i, (d, j) in enumerate(cand):
+        if len(selected) >= max_m:
+            break
+        ok = True
+        for r in sel_rows:
+            if pair[i, r] <= d:
+                ok = False
+                break
+        if ok:
+            selected.append((d, j))
+            sel_rows.append(i)
+    return selected

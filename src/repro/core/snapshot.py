@@ -1,0 +1,93 @@
+"""Frozen device snapshot of a WoW index.
+
+The writer (host arenas, ``WoWIndex``) and the reader (device batched search)
+are split: serving takes an immutable snapshot — padded dense tensors that
+device code can gather from.  Deleted vertices are compacted out (the device
+path serves snapshots; traversal-through-deleted is a host-path property that
+matters only between prunes).
+
+Arrays (n = live vertices, L = layers, m = max outdegree):
+
+  vectors      f32[n, d]
+  sq_norms     f32[n]
+  attrs        f32[n]
+  neighbors    i32[L, n, m]       (-1 padded; ids re-mapped post-compaction)
+  uvals        f32[u]             sorted unique attribute values
+  uval_rep     i32[u]             representative (first live) vertex per value
+  ids_map      i64[n]             snapshot id -> original WoWIndex id
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    vectors: np.ndarray
+    sq_norms: np.ndarray
+    attrs: np.ndarray
+    neighbors: np.ndarray
+    uvals: np.ndarray
+    uval_rep: np.ndarray
+    ids_map: np.ndarray
+    m: int
+    o: int
+    metric: str
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def num_layers(self) -> int:
+        return self.neighbors.shape[0]
+
+
+def take_snapshot(index) -> Snapshot:
+    """Build a compacted snapshot from a live ``WoWIndex``."""
+    n_all = index.store.n
+    deleted = index.deleted
+    live = np.asarray([i for i in range(n_all) if i not in deleted], dtype=np.int64)
+    n = len(live)
+    if n == 0:
+        raise ValueError("cannot snapshot an empty index")
+    remap = np.full(n_all, -1, dtype=np.int32)
+    remap[live] = np.arange(n, dtype=np.int32)
+
+    vectors = index.store.vectors[live].astype(np.float32)
+    sq_norms = index.store.sq_norms[live].astype(np.float32)
+    attrs = index.store.attrs[live].astype(np.float32)
+
+    L = index.graph.num_layers
+    m = index.graph.m
+    neighbors = np.full((L, n, m), -1, dtype=np.int32)
+    for l in range(L):
+        rows = index.graph.layers[l][live]  # [n, m] original ids (-1 pad)
+        mapped = np.where(rows >= 0, remap[np.maximum(rows, 0)], -1)
+        # compact each row left so padding is trailing
+        for i in range(n):
+            r = mapped[i][mapped[i] >= 0]
+            neighbors[l, i, : len(r)] = r
+
+    # unique values over live vertices + representative vertex per value
+    order = np.argsort(attrs, kind="stable")
+    sorted_attrs = attrs[order]
+    uniq_mask = np.ones(n, dtype=bool)
+    uniq_mask[1:] = sorted_attrs[1:] != sorted_attrs[:-1]
+    uvals = sorted_attrs[uniq_mask].astype(np.float32)
+    uval_rep = order[uniq_mask].astype(np.int32)
+
+    return Snapshot(
+        vectors=vectors,
+        sq_norms=sq_norms,
+        attrs=attrs,
+        neighbors=neighbors,
+        uvals=uvals,
+        uval_rep=uval_rep,
+        ids_map=live,
+        m=m,
+        o=index.params.o,
+        metric=index.params.metric,
+    )

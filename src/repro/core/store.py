@@ -1,0 +1,115 @@
+"""Grow-only vector/attribute arena + batched distance evaluation.
+
+The paper's cost model counts *distance computations* (DC) and *filter
+checks* — `SearchStats` instruments both exactly.  Distances are evaluated in
+per-hop batches (numpy BLAS on host; the device serving path uses the Pallas
+kernel in ``repro.kernels``) — batching does not change which vertices are
+evaluated (the per-hop ``c_n`` cap and layer priority of Alg. 2 are applied
+before evaluation), so DC counts match the paper's sequential formulation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+METRICS = ("l2", "cosine", "ip")
+
+
+@dataclass
+class SearchStats:
+    """Per-query instrumentation (paper's DC / filter-check accounting)."""
+
+    dc: int = 0  # distance computations
+    filter_checks: int = 0  # attribute range tests
+    hops: int = 0  # beam-search expansions
+    lowest_layer: int = 0  # deepest layer touched (Fig. 6 footprints)
+
+    def merge(self, other: "SearchStats") -> None:
+        self.dc += other.dc
+        self.filter_checks += other.filter_checks
+        self.hops += other.hops
+
+
+@dataclass
+class BuildStats:
+    dc: int = 0
+    searches: int = 0  # SearchCandidates invocations
+    searches_skipped: int = 0  # layers served purely by candidate reuse (Thm 3.1)
+    prunes: int = 0  # two-stage prune triggers
+
+
+class VectorStore:
+    """Vectors (float32) + attributes (float64) with amortised appends."""
+
+    __slots__ = (
+        "dim", "metric", "vectors", "attrs", "attrs_list", "sq_norms", "n", "_cap",
+    )
+
+    def __init__(self, dim: int, metric: str = "l2", capacity: int = 1024):
+        if metric not in METRICS:
+            raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
+        self.dim = int(dim)
+        self.metric = metric
+        self._cap = max(int(capacity), 8)
+        self.vectors = np.zeros((self._cap, dim), dtype=np.float32)
+        self.attrs = np.zeros(self._cap, dtype=np.float64)
+        # python-list mirror of attrs for the scalar-indexed search hot loop
+        self.attrs_list: list[float] = []
+        # cached squared norms for the factorised distance form
+        self.sq_norms = np.zeros(self._cap, dtype=np.float64)
+        self.n = 0
+
+    def __len__(self) -> int:
+        return self.n
+
+    def _grow(self, need: int) -> None:
+        new_cap = self._cap
+        while new_cap < need:
+            new_cap *= 2
+        vec = np.zeros((new_cap, self.dim), dtype=np.float32)
+        vec[: self.n] = self.vectors[: self.n]
+        self.vectors = vec
+        att = np.zeros(new_cap, dtype=np.float64)
+        att[: self.n] = self.attrs[: self.n]
+        self.attrs = att
+        nrm = np.zeros(new_cap, dtype=np.float64)
+        nrm[: self.n] = self.sq_norms[: self.n]
+        self.sq_norms = nrm
+        self._cap = new_cap
+
+    def prepare(self, vec: np.ndarray) -> np.ndarray:
+        v = np.asarray(vec, dtype=np.float32).reshape(self.dim)
+        if self.metric == "cosine":
+            nrm = float(np.linalg.norm(v))
+            if nrm > 0:
+                v = v / nrm
+        return v
+
+    def append(self, vec: np.ndarray, attr: float) -> int:
+        if self.n + 1 > self._cap:
+            self._grow(self.n + 1)
+        i = self.n
+        v = self.prepare(vec)
+        self.vectors[i] = v
+        self.attrs[i] = float(attr)
+        self.attrs_list.append(float(attr))
+        self.sq_norms[i] = float(np.dot(v, v))
+        self.n += 1
+        return i
+
+    # ------------------------------------------------------------- distances
+    def dist_batch(self, q: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """Distances from query ``q`` to rows ``ids`` (exact)."""
+        x = self.vectors[ids]
+        if self.metric == "l2":
+            d = x - q[None, :]
+            return np.einsum("ij,ij->i", d, d)
+        # cosine / ip: vectors are pre-normalised for cosine at insert
+        return 1.0 - x @ q
+
+    def dist_pair(self, a: np.ndarray, b: np.ndarray) -> float:
+        if self.metric == "l2":
+            d = a - b
+            return float(d @ d)
+        return float(1.0 - a @ b)

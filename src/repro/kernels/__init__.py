@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  distance.py         blocked batched query-candidate distances (WoW DC)
+  gather_distance.py  scalar-prefetch fused gather + dot (WoW candidate fetch)
+  rwkv6.py            chunked RWKV-6 WKV recurrence (rwkv6-1.6b, long ctx)
+  flash_attention.py  causal GQA flash attention + sliding window (LM stack)
+  mamba_scan.py       Mamba-1 selective scan, VMEM-resident state (jamba)
+
+``ops.py`` holds the dispatch wrappers (TPU kernel / interpret / jnp ref);
+``ref.py`` holds the pure-jnp oracles tests assert against.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: scalar-prefetch fused gather + dot.
+
+The TPU-native analogue of the CPU index's random-access vector gather: the
+candidate ids are *scalar-prefetched* (``PrefetchScalarGridSpec``) so the
+BlockSpec ``index_map`` can steer the HBM->VMEM DMA to fetch exactly the
+candidate rows the beam search selected — the gather and the distance dot are
+fused in one kernel, and candidate vectors never materialise in HBM as a
+separate [B, K, D] tensor (the XLA fallback does materialise it).
+
+Each grid step (b, kt) DMAs a [rows, D] slab of candidate rows for query b.
+``rows`` trades DMA efficiency against wasted fetch on ragged K.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_dot_kernel(ids_ref, row_ref, q_ref, o_ref):
+    # ids_ref: scalar-prefetch (unused inside the body; it drives index_map)
+    # row_ref: [1, D] the gathered table row; q_ref: [1, D]; o_ref: [1, 1]
+    del ids_ref
+    o_ref[0, 0] = jnp.sum(
+        row_ref[0, :].astype(jnp.float32) * q_ref[0, :].astype(jnp.float32)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_dot(
+    table: jax.Array,  # f32[n, D] vector table (stays in HBM)
+    ids: jax.Array,  # i32[B, K] candidate row ids
+    queries: jax.Array,  # f32[B, D]
+    interpret: bool = True,
+) -> jax.Array:
+    """out[b, k] = <table[ids[b, k]], queries[b]>."""
+    B, K = ids.shape
+    n, D = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K),
+        in_specs=[
+            # index_map receives (grid..., *scalar_refs): pick the table row
+            pl.BlockSpec((1, D), lambda b, k, ids_ref: (ids_ref[b, k], 0)),
+            pl.BlockSpec((1, D), lambda b, k, ids_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, k, ids_ref: (b, k)),
+    )
+    return pl.pallas_call(
+        _gather_dot_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table.astype(jnp.float32), queries.astype(jnp.float32))

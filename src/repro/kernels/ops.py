@@ -1,0 +1,105 @@
+"""Dispatch wrappers: Pallas kernel on TPU, interpret-mode or jnp reference
+elsewhere.
+
+Policy:
+  * ``backend="auto"`` — compiled Pallas on TPU, jnp reference otherwise
+    (interpret mode is for correctness tests, not production CPU perf);
+  * ``backend="pallas"`` — force the kernel (interpret=True off-TPU);
+  * ``backend="ref"`` — force the jnp oracle.
+
+The dry-run/roofline path always lowers the reference implementations so XLA
+cost analysis sees the full computation (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover - no backend at all
+        return False
+
+
+def _resolve(backend: str) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)."""
+    if backend == "ref":
+        return False, False
+    tpu = _on_tpu()
+    if backend == "pallas":
+        return True, not tpu
+    if backend == "auto":
+        return (True, False) if tpu else (False, False)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def batched_dot(vecs, queries, backend: str = "auto", **kw):
+    use, interp = _resolve(backend)
+    if use:
+        from .distance import batched_dot as kern
+
+        return kern(vecs, queries, interpret=interp, **kw)
+    return _ref.batched_dot_ref(vecs, queries)
+
+
+def l2_distance(vecs, queries, sq_norms, backend: str = "auto", **kw):
+    use, interp = _resolve(backend)
+    if use:
+        from .distance import l2_distance as kern
+
+        return kern(vecs, queries, sq_norms, interpret=interp, **kw)
+    return _ref.l2_distance_ref(vecs, queries, sq_norms)
+
+
+def gather_dot(table, ids, queries, backend: str = "auto"):
+    use, interp = _resolve(backend)
+    if use:
+        from .gather_distance import gather_dot as kern
+
+        return kern(table, ids, queries, interpret=interp)
+    return _ref.gather_dot_ref(table, ids, queries)
+
+
+def wkv6(r, k, v, w, u, state=None, backend: str = "auto", chunk: int = 32):
+    use, interp = _resolve(backend)
+    if use:
+        from .rwkv6 import wkv6 as kern
+
+        return kern(r, k, v, w, u, state=state, chunk=chunk, interpret=interp)
+    return _ref.wkv6_ref(r, k, v, w, u, state=state)
+
+
+def mamba_scan(A, dt, Bm, Cm, x, h0, backend: str = "auto", chunk: int = 64):
+    use, interp = _resolve(backend)
+    if use:
+        from .mamba_scan import mamba_scan as kern
+
+        return kern(A, dt, Bm, Cm, x, h0, chunk=chunk, interpret=interp)
+    from repro.models.mamba import _ssm_scan
+
+    return _ssm_scan(A, dt, Bm, Cm, x, h0, chunk)
+
+
+def flash_attention(
+    q, k, v, causal=True, window=None, q_offset=0, backend: str = "auto",
+    block_q: int | None = None, **kw,
+):
+    use, interp = _resolve(backend)
+    if use:
+        from .flash_attention import flash_attention as kern
+
+        return kern(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            interpret=interp, **kw,
+        )
+    if block_q is None:
+        from repro.models.tuning import TUNING
+
+        if q.shape[1] >= TUNING.attn_blocked_min_t:
+            block_q = TUNING.attn_block_q  # statically-blocked span attention
+    return _ref.mha_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, block_q=block_q
+    )

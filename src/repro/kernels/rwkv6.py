@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: chunked RWKV-6 (Finch) WKV recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+The sequential recurrence is re-blocked into chunks of C steps (the standard
+linear-attention chunking, adapted to TPU):
+
+  * inter-chunk: carry S in a VMEM scratch across the (sequential) time grid
+    dimension; the state contribution is one [C,N]x[N,N] MXU matmul,
+  * intra-chunk: pairwise decays D(s,t) = exp(L[t-1]-L[s]) (L = cumulative
+    log-decay) are evaluated with exponents that are <= 0 everywhere they are
+    used (s < t and chunk-end forms), so the kernel is stable for any decay
+    in (0,1) — no 1/cumprod blow-ups,
+  * the data-dependent per-channel decay is what makes RWKV-6 "dynamic";
+    it shows up as the [C,C,N] broadcast term (kept small by C).
+
+Grid: (B*H, T/C); the time dimension is sequential on TPU so the scratch
+state legally carries across chunks and resets at each new (batch, head).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(s0_ref, r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, sout_ref, S):
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _init():
+        S[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)  # [C, N]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # [N]
+
+    lw = jnp.log(w)  # <= 0
+    L = jnp.cumsum(lw, axis=0)  # inclusive cumulative log decay [C, N]
+    L_prev = L - lw  # exclusive (L[t-1]; 0 for t=0)
+
+    # state contribution: y_state[t] = (r[t] * exp(L_prev[t])) @ S
+    r_dec = r * jnp.exp(L_prev)
+    y_state = jax.lax.dot_general(
+        r_dec, S[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [C, N_v]
+
+    # intra-chunk: scores[t, s] = sum_c r[t,c] k[s,c] exp(L_prev[t,c]-L[s,c])
+    C = r.shape[0]
+    expo = L_prev[:, None, :] - L[None, :, :]  # [C, C, N]
+    mask = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])[:, :, None]
+    term = jnp.where(mask, jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+    scores = jnp.sum(r[:, None, :] * k[None, :, :] * term, axis=2)  # [C, C]
+    y_intra = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # diagonal bonus: y_diag[t] = (sum_c r[t,c] u[c] k[t,c]) * v[t]
+    y_diag = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+
+    y_ref[0] = (y_state + y_intra + y_diag).astype(y_ref.dtype)
+
+    # carry: S <- diag(exp(L_end)) S + (k * exp(L_end - L))^T @ v
+    L_end = L[-1]  # [N]
+    k_dec = k * jnp.exp(L_end[None, :] - L)  # exponent <= 0
+    S[...] = jnp.exp(L_end)[:, None] * S[...] + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(t == nt - 1)
+    def _fin():
+        sout_ref[0] = S[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(
+    r: jax.Array,  # [B, H, T, N]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay in (0, 1)
+    u: jax.Array,  # [H, N]
+    state: jax.Array | None = None,  # [B, H, N, N]
+    chunk: int = 32,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    B, H, T, N = r.shape
+    C = min(chunk, T)
+    assert T % C == 0, f"T={T} must be a multiple of chunk={C}"
+    BH = B * H
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def flat(a):
+        return a.reshape(BH, T, N)
+
+    s0 = state.reshape(BH, N, N)
+    u_bh = jnp.broadcast_to(u[None], (B, H, N)).reshape(BH, N)
+
+    grid = (BH, T // C)
+    y, s_out = pl.pallas_call(
+        _wkv6_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N, N), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, C, N), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, C, N), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, C, N), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, C, N), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, N), lambda i, t: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, N), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((1, N, N), lambda i, t: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, N), r.dtype),
+            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(s0, flat(r), flat(k), flat(v), flat(w), u_bh)
+    return y.reshape(B, H, T, N), s_out.reshape(B, H, N, N)

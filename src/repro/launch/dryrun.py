@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell
+on the production mesh and derive the roofline terms.
+
+Must be the process entry point (``python -m repro.launch.dryrun``): the
+XLA_FLAGS assignment above runs before any jax import so ``make_mesh`` can
+build the 512-device production meshes on the CPU host platform.
+
+Per cell:  abstract params/caches (eval_shape — zero allocation) ->
+jit(step).lower(ShapeDtypeStructs) -> compile() -> memory_analysis() +
+cost_analysis() + collective parse (launch/roofline.py) -> JSON record.
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import all_archs, get_arch
+from ..configs.base import ArchConfig
+from ..models.layers import split_tree
+from ..models.model import abstract_params, forward, init_cache
+from ..parallel.logical import (
+    RULES_DP_ONLY,
+    RULES_EP_DATA,
+    RULES_TP_FSDP,
+    param_shardings,
+)
+from ..parallel.sharding import cache_sharding, token_sharding
+from ..train.optimizer import AdamW
+from ..train.train_loop import make_train_step
+from .mesh import make_production_mesh
+from .roofline import (
+    active_param_count,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# target microbatch rows per device for train_4k (activation-memory lever)
+MB_ROWS = {
+    "jamba-1.5-large-398b": 1,
+    "chameleon-34b": 1,
+    "qwen3-14b": 1,
+    "qwen2-7b": 2,
+    "h2o-danube-3-4b": 2,
+    "qwen1.5-4b": 2,
+    "musicgen-large": 2,
+    "qwen2-moe-a2.7b": 4,
+    "deepseek-moe-16b": 4,
+    "rwkv6-1.6b": 4,
+}
+
+BF16_ADAM = {"jamba-1.5-large-398b"}
+
+RULES = {"tp_fsdp": RULES_TP_FSDP, "dp_only": RULES_DP_ONLY, "ep_data": RULES_EP_DATA}
+
+
+def skip_reason(cfg: ArchConfig, shape: str) -> str | None:
+    if shape == "long_500k" and not cfg.subquadratic:
+        return (
+            "full quadratic attention: a 524288-token dense KV at batch 1 is "
+            "outside this arch's operating envelope (see DESIGN.md "
+            "§Arch-applicability); run for SSM/hybrid/SWA archs only"
+        )
+    return None
+
+
+def _dp_size(mesh) -> int:
+    s = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    return s
+
+
+def _inputs_train(cfg: ArchConfig, mesh, seq: int, batch: int):
+    tok_sh = token_sharding(mesh, batch)
+    if cfg.input_kind == "tokens":
+        tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32, sharding=tok_sh)
+    else:
+        tokens = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.d_model), jnp.bfloat16, sharding=tok_sh
+        )
+    labels = jax.ShapeDtypeStruct((batch, seq), jnp.int32, sharding=tok_sh)
+    return tokens, labels
+
+
+def build_cell(
+    arch: str,
+    shape: str,
+    mesh,
+    rules_name: str = "tp_fsdp",
+    microbatches: int | None = None,
+    backend: str = "ref",
+    verbose: bool = False,
+):
+    cfg = get_arch(arch)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape, "skipped": reason}
+    info = SHAPES[shape]
+    rules = RULES[rules_name]
+    seq, batch = info["seq"], info["batch"]
+
+    # per-cell tuning resolution: sequence-parallel attention only pays off
+    # when query heads don't divide the model axis (else head-TP is better).
+    from ..models.tuning import TUNING
+
+    saved_seq_axis = TUNING.attn_seq_axis
+    TUNING.batch_axes = tuple(
+        a for a in ("pod", "data") if a in mesh.shape and batch % mesh.shape[a] == 0
+    )
+    if TUNING.attn_seq_axis is not None and cfg.num_heads % mesh.shape.get("model", 1) == 0:
+        TUNING.attn_seq_axis = None
+
+    params = abstract_params(cfg)
+    values, shardings = param_shardings(params, rules, mesh)
+    t0 = time.time()
+
+    if info["kind"] == "train":
+        dp = _dp_size(mesh)
+        if microbatches is None:
+            rows = MB_ROWS.get(arch, 2)
+            microbatches = max(1, batch // (dp * rows))
+            while batch % microbatches or (batch // microbatches) % dp:
+                microbatches -= 1
+        opt = AdamW(state_dtype="bfloat16" if arch in BF16_ADAM else "float32")
+        opt_state = jax.eval_shape(opt.init, values)
+        from jax.sharding import NamedSharding as NS
+
+        from ..train.optimizer import AdamWState
+
+        opt_sh = AdamWState(
+            step=NS(mesh, P()), m=shardings, v=shardings
+        )
+        # per-unit specs: FSDP all-gather/reduce-scatter at layer granularity
+        from ..parallel.logical import spec_for
+
+        _, axes_tree = split_tree(params)
+        block_specs = jax.tree.map(
+            lambda v, ax: spec_for(tuple(v.shape[1:]), ax[1:], rules, mesh),
+            values["blocks"],
+            axes_tree["blocks"],
+        )
+        step = make_train_step(
+            cfg, opt, microbatches=microbatches, backend=backend,
+            grad_shardings=shardings, block_param_specs=block_specs,
+        )
+        tokens, labels = _inputs_train(cfg, mesh, seq, batch)
+        scalar = NS(mesh, P())
+        jitted = jax.jit(
+            step,
+            in_shardings=(shardings, opt_sh, tokens.sharding, tokens.sharding),
+            out_shardings=(
+                shardings,
+                opt_sh,
+                {k: scalar for k in ("loss", "nll", "aux", "grad_norm", "lr")},
+            ),
+            donate_argnums=(0, 1),
+        )
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(values, opt_state, tokens, labels)
+    elif info["kind"] == "prefill":
+        tok_sh = token_sharding(mesh, batch)
+        if cfg.input_kind == "tokens":
+            inp = jax.ShapeDtypeStruct((batch, seq), jnp.int32, sharding=tok_sh)
+        else:
+            inp = jax.ShapeDtypeStruct(
+                (batch, seq, cfg.d_model), jnp.bfloat16, sharding=tok_sh
+            )
+
+        def prefill_step(values, inputs):
+            caches = init_cache(cfg, batch, seq, jnp.bfloat16)
+            logits, caches, _ = forward(
+                values, cfg, inputs, mode="prefill", caches=caches,
+                cache_len=seq, backend=backend, last_only=True,
+            )
+            return logits, caches
+
+        jitted = jax.jit(prefill_step, in_shardings=(shardings, tok_sh))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(values, inp)
+    else:  # decode
+        tok_sh = token_sharding(mesh, batch)
+        caches = jax.eval_shape(lambda: init_cache(cfg, batch, seq, jnp.bfloat16))
+        cache_sh = cache_sharding(cfg, mesh, batch, seq)(caches)
+        if cfg.input_kind == "tokens":
+            tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32, sharding=tok_sh)
+        else:
+            tok = jax.ShapeDtypeStruct(
+                (batch, 1, cfg.d_model), jnp.bfloat16, sharding=tok_sh
+            )
+        pos = jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=tok_sh)
+
+        def decode_step(values, tok, pos, caches):
+            logits, new_caches, _ = forward(
+                values, cfg, tok, mode="decode", caches=caches, pos=pos,
+                cache_len=seq, backend=backend,
+            )
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok, new_caches
+
+        jitted = jax.jit(
+            decode_step,
+            in_shardings=(shardings, tok_sh, tok_sh, cache_sh),
+            out_shardings=(tok_sh, cache_sh),
+            donate_argnums=(3,),
+        )
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(values, tok, pos, caches)
+
+    lower_s = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t1
+    TUNING.attn_seq_axis = saved_seq_axis
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(compiled.memory_analysis())  # proves it fits
+        print(compiled.cost_analysis())  # FLOPs/bytes for the roofline
+    chips = int(np.prod(list(mesh.shape.values())))
+    hlo_text = compiled.as_text()
+    from .hlo_cost import analyze
+
+    hc = analyze(hlo_text, chips)
+    flops = hc["flops_per_device"]
+    bytes_acc = hc["bytes_per_device"]
+    terms = roofline_terms(flops, bytes_acc, hc["coll_wire_bytes_per_device"],
+                           chips, per_device=True)
+
+    # train: 3 passes over seq*batch tokens; prefill: forward over seq*batch;
+    # decode: forward over batch tokens (params re-read per token).
+    tokens_n = seq * batch if info["kind"] in ("train", "prefill") else batch
+    mf = model_flops(cfg, tokens_n, "train" if info["kind"] == "train" else "infer")
+    flops_all = flops * chips
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": dict(mesh.shape),
+        "chips": chips,
+        "rules": rules_name,
+        "microbatches": microbatches if info["kind"] == "train" else None,
+        "params_active": active_param_count(cfg),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "xla_cost_analysis": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "collectives": {
+            "wire_bytes_per_chip": hc["coll_wire_bytes_per_device"],
+            "by_op": hc["coll_by_op"],
+        },
+        "terms": terms,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / flops_all) if flops_all else None,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            # donated buffers alias their outputs: don't double-count them
+            "total_bytes": max(
+                mem.argument_size_in_bytes - mem.alias_size_in_bytes, 0
+            ) + mem.temp_size_in_bytes + mem.output_size_in_bytes,
+        },
+        "lower_s": round(lower_s, 2),
+        "compile_s": round(compile_s, 2),
+    }
+    return rec
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("skipped"):
+        return f"{r['arch']:>24s} {r['shape']:>12s}  SKIP ({r['skipped'][:60]}...)"
+    t = r["terms"]
+    return (
+        f"{r['arch']:>24s} {r['shape']:>12s}  "
+        f"comp={t['compute_s']:.3e}s mem={t['memory_s']:.3e}s "
+        f"coll={t['collective_s']:.3e}s  dom={t['bottleneck'][:-2]:<10s} "
+        f"ratio={r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 3)} "
+        f"dev_mem={(r['memory']['total_bytes'])/2**30:.1f}GiB "
+        f"compile={r['compile_s']:.0f}s"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--rules", default="tp_fsdp", choices=list(RULES))
+    ap.add_argument("--mb", type=int, default=None, help="microbatch override")
+    ap.add_argument("--all", action="store_true", help="every arch x shape")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument(
+        "--tune", default="",
+        help="comma presets: blocked_attn,bf16_reduce,dense_attn,f32_reduce",
+    )
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args()
+    if args.tune:
+        from ..models.tuning import apply_preset
+
+        apply_preset(args.tune)
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    archs = all_archs() if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    if not args.all and args.arch is None:
+        archs = archs[:1]
+
+    os.makedirs(os.path.join(args.out, args.mesh), exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            try:
+                rec = build_cell(arch, shape, mesh, args.rules, args.mb,
+                                 verbose=not args.all)
+            except Exception as e:  # a failure here is a sharding bug
+                rec = {"arch": arch, "shape": shape, "error": f"{type(e).__name__}: {e}"}
+                print(f"{arch:>24s} {shape:>12s}  ERROR {rec['error'][:140]}", flush=True)
+            tag = f"{arch}__{shape}" + (
+                "" if args.rules == "tp_fsdp" else f"__{args.rules}"
+            ) + (f"__{args.tag}" if args.tag else "")
+            path = os.path.join(args.out, args.mesh, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(fmt_row(rec), flush=True)
+
+
+if __name__ == "__main__":
+    main()

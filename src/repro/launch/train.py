@@ -1,0 +1,76 @@
+"""Training launcher: arch selection, mesh, elasticity, checkpoint/restart.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --steps 100 \
+        --reduced --ckpt /tmp/ckpt
+
+On a real cluster this process runs per host under `jax.distributed`
+(--coordinator/--num-hosts plumb through); the data shard for each step is a
+pure function of (seed, step, healthy_hosts) so elastic restarts resume the
+exact global sample sequence (train/elastic.py).  On this CPU container it
+drives the same code path single-host, optionally with a reduced config.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="repro training launcher")
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable smoke scale)")
+    ap.add_argument("--host", type=int, default=0)
+    ap.add_argument("--hosts", type=int, default=1)
+    ap.add_argument("--coordinator", default=None,
+                    help="jax.distributed coordinator address (multi-host)")
+    args = ap.parse_args()
+
+    if args.coordinator:
+        import jax
+
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.hosts,
+            process_id=args.host,
+        )
+
+    from ..configs import get_arch
+    from ..train import AdamW, DataConfig, TokenSource, Trainer
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, vocab_size=args.vocab)
+    data = TokenSource(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.global_batch, kind="markov",
+    ))
+    tr = Trainer(
+        cfg, AdamW(lr=args.lr, warmup=min(20, args.steps // 5), total_steps=args.steps),
+        data, ckpt_dir=args.ckpt, microbatches=args.microbatches,
+        log_every=10, ckpt_every=50,
+    )
+    print(f"arch={cfg.name} steps={args.steps} resume_at={tr.step_idx} "
+          f"loss_floor={data.entropy_rate():.3f}")
+    hist = tr.run(
+        max(args.steps - tr.step_idx, 0),
+        host=args.host,
+        healthy=list(range(args.hosts)),
+    )
+    tr.finish()
+    for h in hist:
+        print(f"step {h['step']:6d}  loss {h['loss']:.4f}  lr {h['lr']:.2e}  "
+              f"{h['sec_per_step']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

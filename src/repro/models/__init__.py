@@ -1,0 +1,18 @@
+"""LM model zoo: shared layers + per-arch assembly (see configs/)."""
+from .model import (
+    abstract_params,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_count,
+)
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "forward",
+    "init_cache",
+    "loss_fn",
+    "param_count",
+]

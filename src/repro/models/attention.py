@@ -1,0 +1,154 @@
+"""GQA attention: QKV bias (qwen1.5/qwen2), qk-norm (qwen3), sliding window
+(h2o-danube3), RoPE; train/prefill (flash kernel or ref) and decode with a
+KV cache (full or ring/SWA).
+
+KV cache layout: ``k/v: [B, S, Hkv, D]`` plus scalar write position.  For
+sliding-window layers the cache is a ring buffer of ``window`` slots — decode
+cost and memory are O(window), which is what makes `long_500k` runnable for
+SWA archs.  For full-attention decode the cache holds the whole context and
+attends with a validity mask (flash-decoding style partial-softmax combine is
+delegated to XLA via sharded-softmax over the sequence axis; see
+parallel/sharding.py for the long-context KV partitioning).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import (
+    Param, apply_rope, dense_param, ones_param, rms_norm, rope_angles,
+    rp_einsum, zeros_param,
+)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, S, Hkv, D]
+    v: jax.Array  # [B, S, Hkv, D]
+
+
+def attn_init(key, cfg: ArchConfig) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_param(ks[0], (d, hq, hd), ("embed", "heads", "head_dim")),
+        "wk": dense_param(ks[1], (d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": dense_param(ks[2], (d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": dense_param(ks[3], (hq, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_param((hq, hd), ("heads", "head_dim"))
+        p["bk"] = zeros_param((hkv, hd), ("kv_heads", "head_dim"))
+        p["bv"] = zeros_param((hkv, hd), ("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        p["q_norm"] = ones_param((hd,), ("head_dim",))
+        p["k_norm"] = ones_param((hd,), ("head_dim",))
+    return p
+
+
+def _project_qkv(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    sin, cos = rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _maybe_seq_shard(a: jax.Array) -> jax.Array:
+    """Context parallelism: shard the query-sequence dim over the tuning
+    axis (used when heads don't divide the model axis; see tuning.py)."""
+    from .tuning import seq_spec
+
+    sp = seq_spec(extra_dims=a.ndim - 2)
+    if sp is None:
+        return a
+    return jax.lax.with_sharding_constraint(a, sp)
+
+
+def attn_train(p: dict, cfg: ArchConfig, x: jax.Array, backend: str = "ref") -> jax.Array:
+    """Full-sequence causal attention (training / prefill)."""
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    from ..kernels import ops
+
+    q = _maybe_seq_shard(q)
+    window = cfg.sliding_window or None
+    out = ops.flash_attention(q, k, v, causal=True, window=window, backend=backend)
+    out = _maybe_seq_shard(out)
+    return rp_einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+
+
+def attn_prefill(
+    p: dict, cfg: ArchConfig, x: jax.Array, cache_len: int, backend: str = "ref"
+) -> tuple[jax.Array, KVCache]:
+    """Prefill: causal attention + populate a cache of ``cache_len`` slots."""
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    from ..kernels import ops
+
+    q = _maybe_seq_shard(q)
+    window = cfg.sliding_window or None
+    out = ops.flash_attention(q, k, v, causal=True, window=window, backend=backend)
+    out = _maybe_seq_shard(out)
+    slots = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    kc = jnp.zeros((B, slots, *k.shape[2:]), k.dtype)
+    vc = jnp.zeros_like(kc)
+    take = min(T, slots)
+    kc = jax.lax.dynamic_update_slice(kc, k[:, -take:], (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v[:, -take:], (0, 0, 0, 0))
+    y = rp_einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(kc, vc)
+
+
+def attn_decode(
+    p: dict, cfg: ArchConfig, x: jax.Array, cache: KVCache, pos: jax.Array
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode. ``pos``: absolute position of the new token [B].
+
+    Full attention: cache slot ``pos`` is written, attention masked to
+    ``<= pos``.  Sliding window: ring buffer of ``window`` slots (slot =
+    pos % window), all valid slots attended (positions within window by
+    construction).
+    """
+    B, T, _ = x.shape
+    assert T == 1
+    q, k, v = _project_qkv(p, cfg, x, pos[:, None])
+    S = cache.k.shape[1]
+    window = cfg.sliding_window
+    slot = (pos % window) if window else pos
+    oh = jax.nn.one_hot(slot, S, dtype=k.dtype)  # [B, S]
+    kc = cache.k * (1.0 - oh[..., None, None]) + oh[..., None, None] * k
+    vc = cache.v * (1.0 - oh[..., None, None]) + oh[..., None, None] * v
+
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    group = hq // hkv
+    qg = q.reshape(B, 1, hkv, group, -1)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qg, kc) / (q.shape[-1] ** 0.5)
+    if window:
+        valid = jnp.arange(S)[None, :] <= jnp.minimum(pos, S - 1)[:, None]
+    else:
+        valid = jnp.arange(S)[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs, vc).reshape(B, 1, hq, -1)
+    y = rp_einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(kc, vc)
+
+
+def make_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype) -> KVCache:
+    slots = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    shape = (batch, slots, cfg.num_kv_heads, cfg.resolved_head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

@@ -1,0 +1,160 @@
+"""Shared LM building blocks (pure JAX, dict pytrees, logical axis metadata).
+
+Parameters are created through ``Param(value, axes)`` where ``axes`` names
+the *logical* dimension of each array axis; ``split_tree`` separates the
+value pytree (what jit sees) from the axes pytree (what the sharding rules
+consume).  This is the hand-rolled equivalent of flax's logical partitioning,
+kept dependency-free.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """Array + logical axis names. The axes ride along as pytree aux data, so
+    ``eval_shape``/``vmap``/``jit`` over Param trees keep sharding metadata
+    attached to abstract values — the dry-run gets shapes *and* logical axes
+    in one allocation-free pass."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    def __repr__(self):
+        return f"Param({getattr(self.value, 'shape', self.value)}, axes={self.axes})"
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def stack_params(trees: list, axis_name: str = "layers"):
+    """Stack unit param trees along a new leading 'layers' axis (scan)."""
+    return jax.tree.map(
+        lambda *ps: Param(
+            jnp.stack([p.value for p in ps]), (axis_name, *ps[0].axes)
+        ),
+        *trees,
+        is_leaf=is_param,
+    )
+
+
+def split_tree(tree):
+    """(params_with_axes,) -> (values, axes) mirrored pytrees."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def normal(key, shape, scale=0.02, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_param(key, shape, axes, scale=None, dtype=jnp.float32) -> Param:
+    fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    if scale is None:
+        scale = 1.0 / max(fan_in, 1) ** 0.5
+    return Param(normal(key, shape, scale, dtype), axes)
+
+
+def zeros_param(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones_param(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------- RMSNorm
+def rms_norm_init() -> dict:
+    return {}
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions [*, T] -> (sin, cos) each [*, T, head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [B, T, H, D]; sin/cos [B, T, D/2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+def rp_einsum(spec: str, x: jax.Array, w: jax.Array) -> jax.Array:
+    """Row-parallel einsum: the contraction dim is model-sharded, so the SPMD
+    partitioner must sum partial products across the model axis.  The
+    accumulation dtype controls that all-reduce's wire dtype (tuning knob)."""
+    from .tuning import TUNING
+
+    if TUNING.tp_reduce_dtype is not None:
+        out = jnp.einsum(
+            spec, x, w, preferred_element_type=jnp.dtype(TUNING.tp_reduce_dtype)
+        )
+        return out.astype(x.dtype)
+    return jnp.einsum(spec, x, w)
+
+
+# ---------------------------------------------------------------- MLP (SwiGLU)
+def mlp_init(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_param(k1, (d_model, d_ff), ("embed", "mlp")),
+        "wi_up": dense_param(k2, (d_model, d_ff), ("embed", "mlp")),
+        "wo": dense_param(k3, (d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("btd,df->btf", x, p["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("btd,df->btf", x, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return rp_einsum("btf,fd->btd", h, p["wo"].astype(x.dtype))
+
+
+# ------------------------------------------------------------- embeddings
+def embed_init(key, vocab: int, d_model: int) -> Param:
+    return Param(normal(key, (vocab, d_model), 0.02), ("vocab", "embed"))
+
+
+def embed_apply(table: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def logits_apply(table_or_head: jax.Array, x: jax.Array, transpose: bool) -> jax.Array:
+    """Final projection; ``transpose=True`` for tied embedding tables."""
+    w = table_or_head.astype(x.dtype)
+    if transpose:
+        return jnp.einsum("btd,vd->btv", x, w)
+    return jnp.einsum("btd,dv->btv", x, w)

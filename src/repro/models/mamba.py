@@ -1,0 +1,198 @@
+"""Mamba-1 selective SSM mixer (Jamba's dominant layer).
+
+    h_t = exp(dt_t * A) . h_{t-1} + (dt_t * x_t) B_t
+    y_t = C_t . h_t + D * x_t              (per channel, diagonal A)
+
+TPU adaptation of the CUDA selective-scan kernel: the recurrence runs as an
+outer ``lax.scan`` over chunks with a ``jax.checkpoint``-wrapped inner step
+scan.  Only chunk-boundary states are saved for the backward pass; the
+inner C steps are recomputed — the same save-nothing/recompute strategy the
+fused CUDA kernel uses, expressed with JAX remat.  The [*, d_inner, d_state]
+state tensor is never materialised over the full sequence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from .layers import Param, dense_param, rp_einsum, zeros_param
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # [B, d_conv-1, d_inner] trailing inputs
+    h: jax.Array  # [B, d_inner, d_state]
+
+
+def _dims(cfg: ArchConfig):
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return mc, d_inner, dt_rank
+
+
+def mamba_init(key, cfg: ArchConfig) -> dict:
+    mc, di, dtr = _dims(cfg)
+    d, N = cfg.d_model, mc.d_state
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A; dt bias so softplus(dt) spans [1e-3, 1e-1]
+    a = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt = jnp.exp(
+        jax.random.uniform(ks[4], (di,)) * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_param(ks[0], (d, 2 * di), ("embed", "inner")),
+        "conv_w": Param(
+            0.1 * jax.random.normal(ks[1], (mc.d_conv, di)), ("conv", "inner")
+        ),
+        "conv_b": zeros_param((di,), ("inner",)),
+        "x_proj": dense_param(ks[2], (di, dtr + 2 * N), ("inner", "state_proj")),
+        "dt_proj": dense_param(ks[3], (dtr, di), ("state_proj", "inner"), scale=dtr**-0.5),
+        "dt_bias": Param(dt_bias, ("inner",)),
+        "A_log": Param(jnp.log(a), ("inner", "state")),
+        "D": Param(jnp.ones((di,)), ("inner",)),
+        "out_proj": dense_param(ks[5], (di, d), ("inner", "embed")),
+    }
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d; x [B, T, di], w [k, di]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w[:, None, :].astype(x.dtype),  # [k, 1, di] (WIO)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return out + b.astype(x.dtype)
+
+
+def _ssm_scan(
+    A: jax.Array,  # [di, N] (negative)
+    dt: jax.Array,  # [B, T, di]
+    Bm: jax.Array,  # [B, T, N]
+    Cm: jax.Array,  # [B, T, N]
+    xc: jax.Array,  # [B, T, di]
+    h0: jax.Array,  # [B, di, N]
+    chunk: int,
+) -> tuple[jax.Array, jax.Array]:
+    B, T, di = xc.shape
+    C = min(chunk, T)
+    while T % C:  # largest chunk size dividing T (odd T: smaller chunks)
+        C -= 1
+    nc = T // C
+
+    def chunk_fn(h, xs):
+        dt_c, B_c, C_c, x_c = xs  # [C, B, ...]
+
+        def step(h, s):
+            dt_t, B_t, C_t, x_t = s
+            a = jnp.exp(dt_t[..., None] * A)  # [B, di, N]
+            h = a * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, C_t)
+            return h, y
+
+        return jax.lax.scan(step, h, (dt_c, B_c, C_c, x_c))
+
+    chunk_fn = jax.checkpoint(chunk_fn)  # recompute inner steps in backward
+
+    def outer(h, xs):
+        return chunk_fn(h, xs)
+
+    to_chunks = lambda a: jnp.moveaxis(a, 1, 0).reshape(nc, C, *a.shape[:1], *a.shape[2:])
+    hT, ys = jax.lax.scan(
+        outer, h0, (to_chunks(dt), to_chunks(Bm), to_chunks(Cm), to_chunks(xc))
+    )
+    y = jnp.moveaxis(ys.reshape(T, B, di), 0, 1)
+    return y, hT
+
+
+def mamba_train(
+    p: dict, cfg: ArchConfig, x: jax.Array, state: MambaState | None = None,
+    backend: str = "ref",
+) -> tuple[jax.Array, MambaState | None]:
+    mc, di, dtr = _dims(cfg)
+    N = mc.d_state
+    B, T, _ = x.shape
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv_causal(xin, p["conv_w"], p["conv_b"]))
+    dbc = jnp.einsum("btd,dp->btp", xc, p["x_proj"].astype(x.dtype))
+    dt_r, Bm, Cm = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_r, p["dt_proj"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype)
+    ).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])  # [di, N] f32
+    h0 = state.h if state is not None else jnp.zeros((B, di, N), jnp.float32)
+    from .tuning import TUNING
+
+    chunk = TUNING.mamba_chunk or mc.chunk
+    if backend == "ref":
+        y, hT = _ssm_scan(
+            A, dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+            xc.astype(jnp.float32), h0, chunk,
+        )
+    else:  # fused VMEM-state kernel on TPU (kernels/mamba_scan.py)
+        from ..kernels import ops
+
+        y, hT = ops.mamba_scan(
+            A, dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+            xc.astype(jnp.float32), h0, backend=backend, chunk=chunk,
+        )
+    y = (y.astype(x.dtype) + p["D"].astype(x.dtype) * xc) * jax.nn.silu(z)
+    out = rp_einsum("btd,de->bte", y, p["out_proj"].astype(x.dtype))
+    new_state = None
+    if state is not None:
+        k = mc.d_conv
+        conv_tail = xin[:, -(k - 1):, :] if T >= k - 1 else jnp.concatenate(
+            [state.conv[:, T:, :], xin], axis=1
+        )
+        new_state = MambaState(conv=conv_tail, h=hT)
+    return out, new_state
+
+
+def mamba_decode(
+    p: dict, cfg: ArchConfig, x: jax.Array, state: MambaState
+) -> tuple[jax.Array, MambaState]:
+    """One-token step. x [B, 1, d]."""
+    mc, di, dtr = _dims(cfg)
+    N = mc.d_state
+    B = x.shape[0]
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(x.dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)  # [B, 1, di]
+    window = jnp.concatenate([state.conv.astype(x.dtype), xin], axis=1)  # [B, k, di]
+    w = p["conv_w"].astype(x.dtype)  # [k, di]
+    xc = jax.nn.silu(
+        jnp.einsum("bkd,kd->bd", window, w) + p["conv_b"].astype(x.dtype)
+    )[:, None, :]
+    dbc = jnp.einsum("btd,dp->btp", xc, p["x_proj"].astype(x.dtype))
+    dt_r, Bm, Cm = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_r, p["dt_proj"].astype(x.dtype))
+        + p["dt_bias"].astype(x.dtype)
+    ).astype(jnp.float32)[:, 0]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)  # [B, di, N]
+    h = a * state.h + (dt * xc[:, 0].astype(jnp.float32))[..., None] * Bm[
+        :, 0, None, :
+    ].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))[:, None, :]
+    y = (y.astype(x.dtype) + p["D"].astype(x.dtype) * xc) * jax.nn.silu(z)
+    out = rp_einsum("btd,de->bte", y, p["out_proj"].astype(x.dtype))
+    return out, MambaState(conv=window[:, 1:], h=h)
+
+
+def make_mamba_state(cfg: ArchConfig, batch: int, dtype) -> MambaState:
+    mc, di, _ = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+        h=jnp.zeros((batch, di, mc.d_state), jnp.float32),
+    )

@@ -1,0 +1,331 @@
+"""LM assembly: init / train forward / prefill / decode for every arch.
+
+Layer stacking uses ``lax.scan`` over *units* — the smallest repeating block
+that is homogeneous in mixer kind and MoE placement (1 layer for dense
+archs, 8 for Jamba's attn:mamba 1:7 interleave, 2 for every-other-layer
+MoE).  Scanning keeps the HLO O(1) in depth: 512-device SPMD compiles stay
+fast and the dry-run cost analysis stays small.  Units are rematerialised
+(``jax.checkpoint``) in training.
+
+Params are dict pytrees of ``Param(value, logical_axes)``; `abstract_params`
+gives the allocation-free ShapeDtypeStruct tree for dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as att
+from . import mamba as mam
+from . import rwkv as rwk
+from .layers import (
+    Param,
+    embed_init,
+    is_param,
+    logits_apply,
+    mlp_apply,
+    mlp_init,
+    ones_param,
+    rms_norm,
+    split_tree,
+    stack_params,
+)
+from .moe import moe_apply, moe_init
+
+
+# ----------------------------------------------------------------- init
+def _block_init(key, cfg: ArchConfig, layer_idx: int) -> dict:
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    kind = cfg.mixer_kind(layer_idx)
+    p: dict = {"norm1": ones_param((d,), ("embed",))}
+    if kind == "attn":
+        p["attn"] = att.attn_init(k1, cfg)
+    elif kind == "mamba":
+        p["mamba"] = mam.mamba_init(k1, cfg)
+    elif kind == "rwkv":
+        p["rwkv_tm"] = rwk.rwkv_time_mix_init(k1, cfg)
+    else:
+        raise ValueError(f"unknown mixer kind {kind!r}")
+    p["norm2"] = ones_param((d,), ("embed",))
+    if kind == "rwkv":
+        p["rwkv_cm"] = rwk.rwkv_channel_mix_init(k2, cfg)
+    elif cfg.is_moe_layer(layer_idx):
+        p["moe"] = moe_init(k2, cfg.moe, d, cfg.d_ff)
+    else:
+        p["mlp"] = mlp_init(k2, d, cfg.d_ff)
+    return p
+
+
+def _prefix_len(cfg: ArchConfig) -> int:
+    """Leading layers unrolled outside the scan (deepseek-style leading
+    dense layers break unit homogeneity)."""
+    return cfg.moe.first_k_dense if cfg.moe else 0
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    unit = cfg.scan_unit
+    pk = _prefix_len(cfg)
+    assert (cfg.num_layers - pk) % unit == 0
+    n_units = (cfg.num_layers - pk) // unit
+    k_emb, k_pre, k_blocks, k_head = jax.random.split(key, 4)
+    params: dict = {}
+    params["embed"] = embed_init(k_emb, cfg.vocab_size, cfg.d_model)
+    if pk:
+        pkeys = jax.random.split(k_pre, pk)
+        params["prefix"] = {
+            f"p{i}": _block_init(pkeys[i], cfg, i) for i in range(pk)
+        }
+    unit_keys = jax.random.split(k_blocks, n_units)
+    units = []
+    for ui in range(n_units):
+        lkeys = jax.random.split(unit_keys[ui], unit)
+        units.append(
+            {f"l{i}": _block_init(lkeys[i], cfg, pk + i) for i in range(unit)}
+        )
+    params["blocks"] = stack_params(units)
+    params["final_norm"] = ones_param((cfg.d_model,), ("embed",))
+    if not cfg.tie_embeddings:
+        from .layers import dense_param
+
+        params["lm_head"] = dense_param(
+            k_head, (cfg.d_model, cfg.vocab_size), ("embed", "vocab")
+        )
+    return params
+
+
+def abstract_params(cfg: ArchConfig, seed: int = 0):
+    """ShapeDtypeStruct Param tree — no allocation (dry-run path)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg), key)
+
+
+def param_count(params) -> int:
+    vals, _ = split_tree(params)
+    import numpy as np
+
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(vals)))
+
+
+# ---------------------------------------------------------------- states
+def _layer_state(cfg: ArchConfig, layer: int, batch: int, cache_len: int, dtype):
+    kind = cfg.mixer_kind(layer)
+    if kind == "attn":
+        return att.make_cache(cfg, batch, cache_len, dtype)
+    if kind == "mamba":
+        return mam.make_mamba_state(cfg, batch, dtype)
+    return rwk.make_rwkv_state(cfg, batch, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Decode state pytree: unrolled prefix + stacked [n_units, ...] blocks."""
+    unit = cfg.scan_unit
+    pk = _prefix_len(cfg)
+    n_units = (cfg.num_layers - pk) // unit
+    out: dict = {}
+    if pk:
+        out["prefix"] = {
+            f"p{i}": _layer_state(cfg, i, batch, cache_len, dtype)
+            for i in range(pk)
+        }
+    unit_state = {
+        f"l{i}": _layer_state(cfg, pk + i, batch, cache_len, dtype)
+        for i in range(unit)
+    }
+    out["blocks"] = jax.tree.map(
+        lambda a: jnp.zeros((n_units, *a.shape), a.dtype), unit_state
+    )
+    return out
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, cache_len, dtype)
+    )
+
+
+# --------------------------------------------------------------- forward
+def _block_apply(
+    p: dict,
+    cfg: ArchConfig,
+    i: int,
+    x: jax.Array,
+    mode: str,
+    state,
+    pos,
+    cache_len: int,
+    backend: str,
+):
+    """One layer. Returns (x, new_state, aux)."""
+    kind = cfg.mixer_kind(i)
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_state = state
+    if kind == "attn":
+        if mode == "train":
+            h = att.attn_train(p["attn"], cfg, h, backend=backend)
+        elif mode == "prefill":
+            h, new_state = att.attn_prefill(p["attn"], cfg, h, cache_len, backend=backend)
+        else:
+            h, new_state = att.attn_decode(p["attn"], cfg, h, state, pos)
+    elif kind == "mamba":
+        if mode == "train":
+            h, _ = mam.mamba_train(p["mamba"], cfg, h, state=None, backend=backend)
+        elif mode == "prefill":
+            h, new_state = mam.mamba_train(p["mamba"], cfg, h, state=state, backend=backend)
+        else:
+            h, new_state = mam.mamba_decode(p["mamba"], cfg, h, state)
+    else:  # rwkv
+        st = state if mode != "train" else None
+        if mode == "prefill" and st is None:
+            st = rwk.make_rwkv_state(cfg, x.shape[0], x.dtype)
+        h, carry = rwk.rwkv_time_mix(p["rwkv_tm"], cfg, h, state=st, backend=backend)
+    x = x + h
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if kind == "rwkv":
+        x_last_in = None if mode == "train" else (
+            state.x_ffn if mode == "decode" else jnp.zeros_like(x[:, 0])
+        )
+        h, x_ffn_last = rwk.rwkv_channel_mix(p["rwkv_cm"], cfg, h, x_last=x_last_in)
+        if mode != "train":
+            new_state = rwk.RWKVState(x_att=carry[0], x_ffn=x_ffn_last, s=carry[1])
+    elif "moe" in p:
+        h, aux = moe_apply(p["moe"], cfg.moe, h)
+    else:
+        h = mlp_apply(p["mlp"], h)
+    x = x + h
+    return x, new_state, aux
+
+
+def forward(
+    values: dict,
+    cfg: ArchConfig,
+    inputs: jax.Array,
+    mode: str = "train",
+    caches=None,
+    pos=None,
+    cache_len: int = 0,
+    backend: str = "ref",
+    remat: bool = True,
+    compute_dtype=jnp.bfloat16,
+    last_only: bool = False,
+    block_param_specs=None,
+):
+    """values: params value-tree (no Param wrappers).
+
+    inputs: tokens [B, T] int32 (input_kind=="tokens") or embeddings
+    [B, T, d].  Returns (logits [B, T, V], new_caches, aux_loss).
+    ``last_only``: project logits for the final position only (serving
+    prefill returns [B, 1, V] instead of materialising [B, T, V]).
+    ``block_param_specs``: PartitionSpec tree for ONE unit's params (the
+    stacked 'layers' axis removed).  Applied to every unit slice inside the
+    scan body so FSDP lowers to per-layer all-gather (fwd) / reduce-scatter
+    (bwd) instead of whole-stack all-reduces.
+    """
+    unit = cfg.scan_unit
+    pk = _prefix_len(cfg)
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = jnp.take(values["embed"], inputs, axis=0).astype(compute_dtype)
+    else:
+        x = inputs.astype(compute_dtype)
+
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: dict | None = {} if caches is not None else None
+    block_caches = caches["blocks"] if caches is not None else None
+
+    # unrolled prefix layers (first_k_dense)
+    if pk:
+        new_pre = {}
+        for i in range(pk):
+            st = caches["prefix"][f"p{i}"] if caches is not None else None
+            x, nst, a = _block_apply(
+                values["prefix"][f"p{i}"], cfg, i, x, mode, st, pos, cache_len,
+                backend,
+            )
+            if caches is not None:
+                new_pre[f"p{i}"] = nst
+            aux = aux + a
+        if caches is not None:
+            new_caches["prefix"] = new_pre
+
+    def unit_fn(carry, xs):
+        x, aux = carry
+        from .tuning import TUNING
+
+        if TUNING.residual_spec is not None:
+            from jax.sharding import PartitionSpec as _P
+
+            x = jax.lax.with_sharding_constraint(x, _P(*TUNING.residual_spec))
+        block_p, states = xs
+        if block_param_specs is not None:
+            block_p = jax.tree.map(
+                jax.lax.with_sharding_constraint, block_p, block_param_specs
+            )
+        # cast the unit's params to compute dtype while still sharded: FSDP
+        # all-gathers then move bf16, not f32 master weights (2x less wire).
+        block_p = jax.tree.map(
+            lambda v: v.astype(compute_dtype)
+            if jnp.issubdtype(v.dtype, jnp.floating)
+            else v,
+            block_p,
+        )
+        new_states = {} if states is not None else None
+        for i in range(unit):
+            st = states[f"l{i}"] if states is not None else None
+            x, nst, a = _block_apply(
+                block_p[f"l{i}"], cfg, pk + i, x, mode, st, pos, cache_len,
+                backend,
+            )
+            if states is not None:
+                new_states[f"l{i}"] = nst
+            aux = aux + a
+        return (x, aux), new_states
+
+    scan_fn = unit_fn
+    if mode == "train" and remat:
+        scan_fn = jax.checkpoint(
+            unit_fn, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    (x, aux), new_block_caches = jax.lax.scan(
+        scan_fn, (x, aux), (values["blocks"], block_caches)
+    )
+    if caches is not None:
+        new_caches["blocks"] = new_block_caches
+    if last_only:
+        x = x[:, -1:, :]
+    x = rms_norm(x, values["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = logits_apply(values["embed"], x, transpose=True)
+    else:
+        logits = logits_apply(values["lm_head"], x, transpose=False)
+    return logits, new_caches, aux
+
+
+def loss_fn(
+    values: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    labels: jax.Array,
+    backend: str = "ref",
+    aux_weight: float = 0.01,
+    remat: bool = True,
+    block_param_specs=None,
+) -> tuple[jax.Array, dict]:
+    logits, _, aux = forward(
+        values, cfg, tokens, mode="train", backend=backend, remat=remat,
+        block_param_specs=block_param_specs,
+    )
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot einsum instead of take_along_axis: stays partitionable when the
+    # vocab dimension is sharded over the model axis (no logits all-gather).
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("btv,btv->bt", logits, onehot)
+    nll = jnp.mean(logz - gold)
+    total = nll + aux_weight * aux
+    return total, {"nll": nll, "aux": aux}

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k routing,
+capacity-based sort dispatch.
+
+Dispatch is scatter/gather based (no [T, E, C] one-hot combine tensor): the
+expanded token->expert assignment is sorted by expert, each token gets its
+position within its expert's segment, and tokens beyond the capacity
+``C = ceil(T*k/E * capacity_factor)`` are dropped (written to a dump row).
+Expert compute is one batched einsum over [E, C, d] — FLOPs are the *active*
+FLOPs (T*k*capacity_factor per-expert MLPs), which is what the roofline
+accounting needs, and the expert dimension shards over the ``model`` axis
+(expert parallelism; GSPMD inserts the dispatch all-to-alls).
+
+Expert counts that do not divide the model axis (qwen2-moe's 60) are padded
+to ``pad_to`` with dead experts whose router logits are -inf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoECfg
+from .layers import Param, dense_param
+
+
+def moe_init(key, cfg: MoECfg, d_model: int, d_ff_dense: int) -> dict:
+    e = cfg.padded_experts
+    dff = cfg.d_ff_expert or d_ff_dense
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_param(ks[0], (d_model, cfg.num_experts), ("embed", "expert_unsharded")),
+        "wi_gate": dense_param(ks[1], (e, d_model, dff), ("expert", "embed", "mlp")),
+        "wi_up": dense_param(ks[2], (e, d_model, dff), ("expert", "embed", "mlp")),
+        "wo": dense_param(ks[3], (e, dff, d_model), ("expert", "mlp", "embed")),
+    }
+    if cfg.num_shared:
+        from .layers import mlp_init
+
+        p["shared"] = mlp_init(ks[4], d_model, cfg.num_shared * dff)
+    return p
+
+
+def moe_apply(
+    p: dict, cfg: MoECfg, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """x [B, T, d] -> (y [B, T, d], load-balance aux loss)."""
+    B, T, d = x.shape
+    xf = x.reshape(-1, d)
+    Tt = B * T
+    E = cfg.num_experts
+    Ep = cfg.padded_experts
+    k = cfg.top_k
+    # capacity floor: lossless for small token counts (decode steps — a hot
+    # expert must be able to take every token), capacity-factor bound for
+    # large ones (training/prefill; standard drop semantics).
+    C = max(1, int((Tt * k / E) * cfg.capacity_factor), min(Tt * k, 32))
+
+    logits = jnp.einsum("td,de->te", xf, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)  # [Tt, k]
+    topw = (topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    # ---- position-in-expert via stable sort ----
+    flat_e = topi.reshape(-1)  # [Tt*k]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((Ep,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts  # exclusive
+    pos_sorted = jnp.arange(Tt * k, dtype=jnp.int32) - starts[sorted_e]
+    tok_sorted = order // k
+
+    from .tuning import TUNING
+
+    if TUNING.moe_shard_dispatch:
+        # 2-D dispatch expressed as a *gather from the expert's perspective*:
+        # disp[e, c] = tokens[order[starts[e] + c]].  Scatters into a
+        # model-sharded buffer transpose to all-reduces under GSPMD; gathers
+        # shard cleanly over the output's expert axis.
+        from jax.sharding import PartitionSpec as P
+
+        pos_cap = jnp.minimum(pos_sorted, C)
+        cap_counts = jnp.minimum(counts, C)
+        slot_idx = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        valid = jnp.arange(C, dtype=jnp.int32)[None, :] < cap_counts[:, None]
+        src = jnp.where(
+            valid, order[jnp.clip(slot_idx, 0, Tt * k - 1)], Tt * k
+        )  # expanded index or dump
+        tok_of = jnp.where(src < Tt * k, src // k, Tt)
+        xf_pad = jnp.concatenate([xf, jnp.zeros((1, d), x.dtype)])
+        disp = xf_pad[tok_of]  # [Ep, C, d]
+        ax = TUNING.moe_expert_axis
+        disp = jax.lax.with_sharding_constraint(disp, P(ax, None, None))
+        h = disp
+        g = jnp.einsum("ecd,edf->ecf", h, p["wi_gate"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", h, p["wi_up"].astype(x.dtype))
+        a = jax.nn.silu(g) * u
+        ye = jnp.einsum("ecf,efd->ecd", a, p["wo"].astype(x.dtype))
+        ye = jnp.concatenate([ye, jnp.zeros((Ep, 1, d), x.dtype)], axis=1)
+        ye = jax.lax.with_sharding_constraint(ye, P(ax, None, None))
+        pos_unsorted = jnp.zeros((Tt * k,), jnp.int32).at[order].set(pos_cap)
+        gathered = ye[flat_e, pos_unsorted].reshape(Tt, k, d)
+        b = tuple(TUNING.batch_axes) or None
+        gathered = jax.lax.with_sharding_constraint(gathered, P(b, None, None))
+    else:
+        slot_sorted = jnp.where(pos_sorted < C, sorted_e * C + pos_sorted, Ep * C)
+        disp = jnp.zeros((Ep * C + 1, d), x.dtype).at[slot_sorted].set(xf[tok_sorted])
+        h = disp[: Ep * C].reshape(Ep, C, d)
+        g = jnp.einsum("ecd,edf->ecf", h, p["wi_gate"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", h, p["wi_up"].astype(x.dtype))
+        a = jax.nn.silu(g) * u
+        ye = jnp.einsum("ecf,efd->ecd", a, p["wo"].astype(x.dtype))
+        ye_flat = jnp.concatenate([ye.reshape(Ep * C, d), jnp.zeros((1, d), x.dtype)])
+        slots = jnp.zeros((Tt * k,), jnp.int32).at[order].set(slot_sorted)
+        gathered = ye_flat[slots].reshape(Tt, k, d)
+    y = jnp.sum(gathered * topw[..., None], axis=1)
+
+    if "shared" in p:
+        from .layers import mlp_apply
+
+        y = y + mlp_apply(p["shared"], x).reshape(Tt, d)
+
+    # switch-style load-balance loss
+    frac_tokens = counts[:E].astype(jnp.float32) / jnp.maximum(Tt * k, 1)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_prob)
+    return y.reshape(B, T, d), aux

@@ -1,0 +1,189 @@
+"""RWKV-6 ("Finch") block: data-dependent-decay time mix + channel mix.
+
+Attention-free: the time-mix state is a per-head [N, N] matrix (O(1) in
+sequence length), which is why rwkv6 runs the ``long_500k`` shape natively.
+Training uses the chunked WKV (Pallas kernel on TPU, the identical-math jnp
+chunked form elsewhere); decode is the exact single-step recurrence.
+
+Token-shift mixes use the paper's ddlerp (low-rank data-dependent
+interpolation with the previous token); the decay ``w`` is per-channel and
+data-dependent through its own LoRA: w = exp(-exp(w0 + tanh(x A_w) B_w)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import Param, dense_param, ones_param, rp_einsum, zeros_param
+
+_MIX = ("w", "k", "v", "r", "g")
+
+
+class RWKVState(NamedTuple):
+    x_att: jax.Array  # [B, d] last token into time-mix
+    x_ffn: jax.Array  # [B, d] last token into channel-mix
+    s: jax.Array  # [B, H, N, N] wkv state
+
+
+def _dims(cfg: ArchConfig):
+    rc = cfg.rwkv
+    N = rc.head_dim
+    H = cfg.d_model // N
+    return rc, H, N
+
+
+def rwkv_time_mix_init(key, cfg: ArchConfig) -> dict:
+    rc, H, N = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 16)
+    p: dict = {
+        "mu_x": zeros_param((d,), ("embed",)),
+        "w0": Param(-5.0 * jnp.ones((d,)), ("embed",)),
+        "u": Param(0.3 * jax.random.normal(ks[0], (H, N)), ("heads", "head_dim")),
+        "ln_scale": ones_param((d,), ("embed",)),
+        "ln_bias": zeros_param((d,), ("embed",)),
+    }
+    for i, nm in enumerate(_MIX):
+        p[f"mu_{nm}"] = zeros_param((d,), ("embed",))
+        p[f"lora_a_{nm}"] = dense_param(
+            ks[1 + i], (d, rc.mix_lora), ("embed", "lora")
+        )
+        p[f"lora_b_{nm}"] = Param(
+            jnp.zeros((rc.mix_lora, d)), ("lora", "embed")
+        )
+    p["decay_a"] = dense_param(ks[8], (d, rc.decay_lora), ("embed", "lora"))
+    p["decay_b"] = Param(jnp.zeros((rc.decay_lora, d)), ("lora", "embed"))
+    for i, nm in enumerate(("r", "k", "v", "g", "o")):
+        p[f"w{nm}"] = dense_param(ks[9 + i], (d, d), ("embed", "heads_x_dim"))
+    return p
+
+
+def _ddlerp(p: dict, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent token-shift interpolations for w,k,v,r,g."""
+    delta = x_prev - x
+    xx = x + delta * p["mu_x"].astype(x.dtype)
+    outs = {}
+    for nm in _MIX:
+        lora = jnp.tanh(xx @ p[f"lora_a_{nm}"].astype(x.dtype)) @ p[
+            f"lora_b_{nm}"
+        ].astype(x.dtype)
+        outs[nm] = x + delta * (p[f"mu_{nm}"].astype(x.dtype) + lora)
+    return outs
+
+
+def _heads(a: jax.Array, H: int, N: int) -> jax.Array:
+    """[B, T, d] -> [B, H, T, N]."""
+    B, T, _ = a.shape
+    return jnp.moveaxis(a.reshape(B, T, H, N), 2, 1)
+
+
+def _group_norm(y: jax.Array, scale, bias, eps: float) -> jax.Array:
+    """Per-head LayerNorm of the wkv output. y [B, T, H, N] flattened last."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps)
+
+
+def rwkv_time_mix(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    state: RWKVState | None = None,
+    backend: str = "ref",
+) -> tuple[jax.Array, tuple | None]:
+    rc, H, N = _dims(cfg)
+    B, T, d = x.shape
+    if state is not None and T == 1:
+        x_prev = state.x_att[:, None, :].astype(x.dtype)
+    else:
+        pad = (
+            state.x_att[:, None, :].astype(x.dtype)
+            if state is not None
+            else jnp.zeros_like(x[:, :1])
+        )
+        x_prev = jnp.concatenate([pad, x[:, :-1]], axis=1)
+    mixes = _ddlerp(p, x, x_prev)
+    r = _heads(mixes["r"] @ p["wr"].astype(x.dtype), H, N)
+    k = _heads(mixes["k"] @ p["wk"].astype(x.dtype), H, N)
+    v = _heads(mixes["v"] @ p["wv"].astype(x.dtype), H, N)
+    g = jax.nn.silu(mixes["g"] @ p["wg"].astype(x.dtype))
+    decay = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(mixes["w"] @ p["decay_a"].astype(x.dtype))
+        @ p["decay_b"].astype(x.dtype)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay))  # (0, 1)
+    w = _heads(w, H, N)
+
+    s0 = state.s if state is not None else None
+    if T == 1 and state is not None:
+        # exact single-step recurrence for decode
+        rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+        kv = kf[..., 0, :, None] * vf[..., 0, None, :]  # [B, H, N, N]
+        u = p["u"].astype(jnp.float32)
+        y = jnp.einsum(
+            "bhn,bhnm->bhm", rf[..., 0, :], s0 + u[None, :, :, None] * kv
+        )[:, :, None, :]
+        s_new = w[..., 0, :, None].astype(jnp.float32) * s0 + kv
+    else:
+        from ..kernels import ops, ref
+
+        from .tuning import TUNING
+
+        chunk = TUNING.rwkv_chunk or rc.chunk
+        if backend == "ref":
+            y, s_new = ref.wkv6_chunked(r, k, v, w, p["u"], state=s0, chunk=chunk)
+        else:
+            y, s_new = ops.wkv6(r, k, v, w, p["u"], state=s0, backend=backend, chunk=chunk)
+    y = jnp.moveaxis(y.astype(x.dtype), 1, 2)  # [B, T, H, N]
+    y = _group_norm(y, None, None, cfg.norm_eps).reshape(B, T, d)
+    y = y * p["ln_scale"].astype(x.dtype) + p["ln_bias"].astype(x.dtype)
+    y = (y * g) @ p["wo"].astype(x.dtype)
+    carry = (x[:, -1, :], s_new) if state is not None else None
+    return y, carry
+
+
+def rwkv_channel_mix_init(key, cfg: ArchConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": zeros_param((d,), ("embed",)),
+        "mu_r": zeros_param((d,), ("embed",)),
+        "wk": dense_param(ks[0], (d, ff), ("embed", "mlp")),
+        "wv": dense_param(ks[1], (ff, d), ("mlp", "embed")),
+        "wr": dense_param(ks[2], (d, d), ("embed", "embed_out")),
+    }
+
+
+def rwkv_channel_mix(
+    p: dict, cfg: ArchConfig, x: jax.Array, x_last: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array | None]:
+    B, T, d = x.shape
+    if x_last is not None and T == 1:
+        x_prev = x_last[:, None, :].astype(x.dtype)
+    else:
+        pad = (
+            x_last[:, None, :].astype(x.dtype)
+            if x_last is not None
+            else jnp.zeros_like(x[:, :1])
+        )
+        x_prev = jnp.concatenate([pad, x[:, :-1]], axis=1)
+    delta = x_prev - x
+    xk = x + delta * p["mu_k"].astype(x.dtype)
+    xr = x + delta * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    kv = rp_einsum("btf,fd->btd", k, p["wv"].astype(x.dtype))
+    y = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * kv
+    carry = x[:, -1, :] if x_last is not None else None
+    return y, carry
+
+
+def make_rwkv_state(cfg: ArchConfig, batch: int, dtype) -> RWKVState:
+    rc, H, N = _dims(cfg)
+    return RWKVState(
+        x_att=jnp.zeros((batch, cfg.d_model), dtype),
+        x_ffn=jnp.zeros((batch, cfg.d_model), dtype),
+        s=jnp.zeros((batch, H, N, N), jnp.float32),
+    )

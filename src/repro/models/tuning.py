@@ -1,0 +1,109 @@
+"""Process-wide performance knobs (the §Perf hillclimb levers).
+
+Defaults are the conservative baseline; ``repro.launch.dryrun --tune ...``
+flips individual knobs so every EXPERIMENTS.md §Perf iteration is exactly
+reproducible.
+
+  attn_blocked_min_t   use statically-blocked span attention when the query
+                       length reaches this (dense score matrix below it).
+                       32k prefill always needs blocking to fit; 8192 keeps
+                       train_4k on the dense baseline path.
+  attn_block_q         q-block size for the blocked path.
+  tp_reduce_dtype      accumulation dtype for row-parallel (TP) einsums whose
+                       contraction dim is model-sharded.  None keeps jnp's
+                       f32 accumulation semantics -> the SPMD partitioner
+                       all-reduces partial sums in f32; "bfloat16" halves
+                       that wire traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Tuning:
+    attn_blocked_min_t: int = 8192
+    attn_block_q: int = 2048
+    tp_reduce_dtype: str | None = None
+    # sequence-parallel attention over this mesh axis (context parallelism):
+    # used when query heads don't divide the model axis — otherwise every
+    # model rank redundantly computes all heads (16x waste for qwen2's 28
+    # heads on a 16-way axis).  K/V are all-gathered (small under GQA), the
+    # score/PV work shards over the query-sequence dim.
+    attn_seq_axis: str | None = None
+    batch_axes: tuple = ()
+    # decode KV caches of non-divisible-head archs shard their *sequence*
+    # dim over model (flash-decoding split): cuts both cache memory and the
+    # redundant decode attention flops per model rank.
+    cache_seq_shard: bool = False
+    # MoE: [E, C+1, d] 2-D dispatch scatter + explicit EP sharding
+    # constraints (dispatch buffers pinned to the expert/model axis, combine
+    # gathers pinned to the batch axes) instead of the flat [E*C+1, d]
+    # scatter whose sharding GSPMD cannot infer.
+    moe_shard_dispatch: bool = False
+    # mesh axis the MoE dispatch buffers are pinned to ("model" = classic
+    # EP-over-TP; "data" = EP=DP layout where dispatch is an all-to-all
+    # within the token axis)
+    moe_expert_axis: str = "model"
+    # residual-stream sharding constraint applied inside the layer scan,
+    # e.g. (("data", "model"), None, None) for DP-over-both-axes training.
+    residual_spec: tuple | None = None
+    # mamba selective-scan chunk override (0 = config value)
+    mamba_chunk: int = 0
+    # rwkv chunked-WKV chunk override (0 = config value)
+    rwkv_chunk: int = 0
+
+
+TUNING = Tuning()
+
+
+def set_tuning(**kw) -> Tuning:
+    for k, v in kw.items():
+        if not hasattr(TUNING, k):
+            raise AttributeError(f"unknown tuning knob {k!r}")
+        setattr(TUNING, k, v)
+    return TUNING
+
+
+def apply_preset(names: str) -> Tuning:
+    """Comma-separated preset list, e.g. 'blocked_attn,bf16_reduce'."""
+    for name in filter(None, names.split(",")):
+        if name == "blocked_attn":
+            TUNING.attn_blocked_min_t = 2048
+        elif name == "bf16_reduce":
+            TUNING.tp_reduce_dtype = "bfloat16"
+        elif name == "dense_attn":
+            TUNING.attn_blocked_min_t = 1 << 30
+        elif name == "f32_reduce":
+            TUNING.tp_reduce_dtype = None
+        elif name == "seq_parallel_attn":
+            TUNING.attn_seq_axis = "model"
+        elif name == "cache_seq_shard":
+            TUNING.cache_seq_shard = True
+        elif name == "moe2d":
+            TUNING.moe_shard_dispatch = True
+        elif name == "moe_ep_data":
+            TUNING.moe_shard_dispatch = True
+            TUNING.moe_expert_axis = "data"
+        elif name.startswith("mamba_chunk="):
+            TUNING.mamba_chunk = int(name.split("=")[1])
+        elif name.startswith("rwkv_chunk="):
+            TUNING.rwkv_chunk = int(name.split("=")[1])
+        elif name == "opt":  # the full optimized set (§Perf)
+            apply_preset(
+                "blocked_attn,bf16_reduce,seq_parallel_attn,cache_seq_shard,"
+                "moe2d,rwkv_chunk=256"
+            )
+        else:
+            raise ValueError(f"unknown tuning preset {name!r}")
+    return TUNING
+
+
+def seq_spec(extra_dims: int = 2):
+    """PartitionSpec (batch_axes, attn_seq_axis, *None) or None if unset."""
+    from jax.sharding import PartitionSpec as P
+
+    if TUNING.attn_seq_axis is None:
+        return None
+    b = tuple(TUNING.batch_axes) or None
+    return P(b, TUNING.attn_seq_axis, *([None] * extra_dims))

@@ -1,0 +1,12 @@
+"""Distribution: logical axis rules + per-shape sharding specs."""
+from .logical import RULES_DP_ONLY, RULES_TP_FSDP, param_shardings, spec_for
+from .sharding import cache_sharding, token_sharding
+
+__all__ = [
+    "RULES_TP_FSDP",
+    "RULES_DP_ONLY",
+    "param_shardings",
+    "spec_for",
+    "token_sharding",
+    "cache_sharding",
+]

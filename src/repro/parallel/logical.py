@@ -1,0 +1,103 @@
+"""Logical-axis -> mesh-axis rules (MaxText-style, hand-rolled).
+
+Every parameter carries logical axis names (see models/layers.Param).  A rule
+set maps logical names to mesh axes; ``spec_for`` additionally enforces
+divisibility (a dimension that does not divide the mesh axis size is
+replicated instead — e.g. qwen1.5's 20 query heads on a 16-way model axis,
+or 8 KV heads: FSDP on the embed axis still shards those weights over data).
+
+Parallelism inventory (see DESIGN.md §4):
+  DP/FSDP   batch over (pod, data); parameters & optimizer state sharded
+            over data via the "embed"/"vocab-in" rules (ZeRO-3: per-layer
+            all-gathers under the scan, reduce-scatter of grads — inserted
+            by the SPMD partitioner).
+  TP        heads / mlp / experts / mamba-inner / vocab over model.
+  EP        the "expert" axis over model: expert weights never gathered.
+  SP        long-context KV/sequence over data (serve path).
+  PP        the pod axis is repurposable as a 2-stage pipeline
+            (train/pipeline.py); default multi-pod rule keeps pod as a pure
+            batch axis with optionally-compressed cross-pod gradients.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.layers import is_param, split_tree
+
+# base rules: logical axis name -> mesh axis name (None = replicate)
+RULES_TP_FSDP: dict[str, str | None] = {
+    "vocab": "model",
+    "heads": "model",
+    "heads_x_dim": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "inner": "model",
+    "embed": "data",  # FSDP / ZeRO-3
+    "layers": None,
+    "head_dim": None,
+    "conv": None,
+    "state": None,
+    "state_proj": None,
+    "lora": None,
+    "embed_out": None,
+    "expert_unsharded": None,
+}
+
+# pure data-parallel baseline (the paper-faithful "no model parallelism"
+# reference point for the perf log)
+RULES_DP_ONLY: dict[str, str | None] = {k: None for k in RULES_TP_FSDP}
+
+# EP=DP variant: experts shard over the data axis (tokens and experts live
+# on the same axis, so MoE dispatch/combine lower to all-to-alls *within*
+# that axis instead of scatter/all-reduce across axes); expert hidden dims
+# stay on model.  The "embed" FSDP rule yields to the expert axis on expert
+# weights via spec_for's single-use-per-axis fallback.
+RULES_EP_DATA: dict[str, str | None] = dict(RULES_TP_FSDP, expert="data")
+
+
+def mesh_axis_size(mesh: Mesh, axis: str | None) -> int:
+    if axis is None:
+        return 1
+    return mesh.shape[axis]
+
+
+def spec_for(
+    shape: tuple[int, ...],
+    axes: tuple[str, ...],
+    rules: Mapping[str, str | None],
+    mesh: Mesh,
+) -> P:
+    """PartitionSpec for one parameter, with divisibility fallback and
+    single-use-per-mesh-axis enforcement."""
+    assert len(shape) == len(axes), (shape, axes)
+    used: set[str] = set()
+    parts: list[str | None] = []
+    for dim, name in zip(shape, axes):
+        mx = rules.get(name)
+        if mx is None or mx in used or dim % mesh_axis_size(mesh, mx) != 0:
+            parts.append(None)
+        else:
+            parts.append(mx)
+            used.add(mx)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(params_tree, rules, mesh: Mesh):
+    """Param tree (values may be concrete or ShapeDtypeStruct) ->
+    (values_tree, NamedSharding tree)."""
+    values, axes = split_tree(params_tree)
+    def one(v, ax):
+        return NamedSharding(mesh, spec_for(tuple(v.shape), ax, rules, mesh))
+    shardings = jax.tree.map(one, values, axes)
+    return values, shardings
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that jointly shard the global batch."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

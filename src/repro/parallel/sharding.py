@@ -1,0 +1,77 @@
+"""Per-(arch x shape x mesh) input/state sharding specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .logical import batch_axes
+
+
+def _dp(mesh: Mesh, batch: int) -> tuple[str, ...] | None:
+    """Largest prefix of (pod, data) that divides the batch."""
+    axes = []
+    size = 1
+    for a in batch_axes(mesh):
+        if batch % (size * mesh.shape[a]) == 0:
+            axes.append(a)
+            size *= mesh.shape[a]
+    return tuple(axes) or None
+
+
+def token_sharding(mesh: Mesh, batch: int) -> NamedSharding:
+    return NamedSharding(mesh, P(_dp(mesh, batch)))
+
+
+def seq_shard_axis(mesh: Mesh, batch: int, seq: int) -> str | None:
+    """Sequence-parallel axis for long-context serving: used when the batch
+    cannot occupy the data axis (long_500k: batch 1)."""
+    if batch % mesh.shape["data"] != 0 and seq % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def cache_sharding(cfg: ArchConfig, mesh: Mesh, batch: int, seq: int):
+    """NamedSharding tree for a decode cache pytree (rank-based).
+
+    KV caches [B, S, Hkv, D]: batch over (pod, data) when divisible, else the
+    *sequence* axis shards over data (flash-decoding style; softmax over the
+    sharded axis becomes an XLA all-reduce).  SSM states [B, ...]: batch axis
+    if divisible, else replicated (they are O(1)-sized).
+    """
+    dp = _dp(mesh, batch)
+    sp = seq_shard_axis(mesh, batch, seq)
+
+    def spec_of(leaf) -> P:
+        shp = leaf.shape
+        # stacked leading layer axis from init_cache: [n_units, B, ...]
+        if len(shp) >= 3 and shp[1] == batch:
+            core = len(shp) - 1  # rank without the layers axis
+            if core == 4 and shp[2] >= min(seq, 1024) // 2:  # [B, S, Hkv, D] KV
+                # heads shard over model when divisible: the fresh K/V are
+                # produced head-sharded by the TP'd projections, so a
+                # head-replicated cache would force a full-cache all-gather
+                # at the output boundary every decode step.
+                hx = "model" if shp[3] % mesh.shape["model"] == 0 else None
+                sx = None
+                if hx is None:
+                    from ..models.tuning import TUNING
+
+                    if TUNING.cache_seq_shard and shp[2] % mesh.shape["model"] == 0:
+                        sx = "model"  # flash-decoding sequence split
+                if dp is not None:
+                    return P(None, dp, sx, hx, None)
+                if sp is not None and shp[2] % mesh.shape["data"] == 0:
+                    return P(None, None, sp, hx, None)
+                return P(None, None, None, hx, None)
+            if dp is not None:
+                return P(None, dp)
+            return P()
+        if len(shp) >= 2 and shp[0] == batch and dp is not None:
+            return P(dp)
+        return P()
+
+    return lambda tree: jax.tree.map(
+        lambda leaf: NamedSharding(mesh, spec_of(leaf)), tree
+    )

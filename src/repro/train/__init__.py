@@ -1,0 +1,12 @@
+"""Training substrate: optimizer, loop, checkpointing, data, elasticity."""
+from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+from .data import DataConfig, TokenSource
+from .elastic import Coordinator, shard_rows
+from .optimizer import AdamW, AdamWState
+from .train_loop import Trainer, jit_train_step, make_train_step
+
+__all__ = [
+    "AdamW", "AdamWState", "make_train_step", "jit_train_step", "Trainer",
+    "save", "restore", "latest_step", "AsyncCheckpointer",
+    "DataConfig", "TokenSource", "Coordinator", "shard_rows",
+]

@@ -1,0 +1,88 @@
+"""AdamW with global-norm clipping — dependency-free, shard-inheriting.
+
+Optimizer state mirrors the parameter pytree (m, v in f32), so pjit gives
+the state exactly the parameter sharding (ZeRO: optimizer state is sharded
+wherever the parameter is).  Master params are f32; the model casts to the
+compute dtype at use sites (mixed precision).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+class AdamW(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # bf16 moments for memory-bound giants (jamba-398b): 8 B/param total
+    # optimizer+master footprint instead of 12.
+    state_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda t: jax.tree.map(lambda p: jnp.zeros_like(p, dt), t)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(params), v=zeros(params))
+
+    def schedule(self, step) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(self.warmup, 1), 1.0)
+        prog = jnp.clip(
+            (step - self.warmup) / max(self.total_steps - self.warmup, 1), 0.0, 1.0
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        frac = self.min_lr_frac + (1 - self.min_lr_frac) * cos
+        return self.lr * warm * frac
+
+    def update(self, grads, state: AdamWState, params):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        dt = jnp.dtype(self.state_dtype)
+        m = jax.tree.map(
+            lambda m, g: (self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g).astype(dt),
+            state.m, grads,
+        )
+        v = jax.tree.map(
+            lambda v, g: (self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g).astype(dt),
+            state.v, grads,
+        )
+
+        def upd(p, m_, v_):
+            u = (m_.astype(jnp.float32) / b1c) / (
+                jnp.sqrt(v_.astype(jnp.float32) / b2c) + self.eps
+            )
+            wd = self.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            return (p.astype(jnp.float32) - lr * (u + wd)).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v), {
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    )
+    return jnp.sqrt(sq)

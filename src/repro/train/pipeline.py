@@ -1,0 +1,87 @@
+"""GPipe-style pipeline parallelism over a mesh axis (shard_map primitive).
+
+The multi-pod mesh's ``pod`` axis can be repurposed as a pipeline axis:
+stage s holds its stage's parameters (stacked on a leading axis sharded over
+``pod``), M microbatches flow through the classic GPipe schedule — at tick t,
+stage s runs microbatch (t - s) and hands its activation to stage s+1 via
+``collective_permute``.  Bubble fraction = (S-1)/(M+S-1).
+
+This is the collective-schedule primitive; wiring a full LM through it is a
+launcher-level choice (the default multi-pod config keeps pod as a data
+axis — see DESIGN.md §4).  Tests drive it over a host-device mesh and check
+exactness vs the sequential composition of stages.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def gpipe_local(
+    stage_fn: Callable,
+    my_stage_params,
+    x_mbs: jax.Array,  # [M, mb, ...] microbatches (meaningful on stage 0)
+    axis_name: str,
+    num_stages: int,
+):
+    """Runs inside shard_map over ``axis_name``. Returns [M, mb, ...]
+    outputs (meaningful on the last stage)."""
+    M = x_mbs.shape[0]
+    sidx = jax.lax.axis_index(axis_name)
+    total = M + num_stages - 1
+    perm = [(i, i + 1) for i in range(num_stages - 1)]
+
+    out0 = jnp.zeros_like(x_mbs)
+    buf0 = jnp.zeros_like(x_mbs[0])
+
+    def tick(carry, t):
+        buf, out = carry
+        mb_idx = t - sidx
+        valid = jnp.logical_and(mb_idx >= 0, mb_idx < M)
+        safe = jnp.clip(mb_idx, 0, M - 1)
+        x_in = jnp.where(sidx == 0, x_mbs[safe], buf)
+        y = stage_fn(my_stage_params, x_in)
+        y = jnp.where(valid, y, jnp.zeros_like(y))
+        out = jax.lax.dynamic_update_index_in_dim(
+            out, jnp.where(valid, y, out[safe]), safe, 0
+        )
+        nxt = jax.lax.ppermute(y, axis_name, perm)
+        return (nxt, out), None
+
+    (_, out), _ = jax.lax.scan(tick, (buf0, out0), jnp.arange(total))
+    return out
+
+
+def make_gpipe(
+    mesh: Mesh,
+    stage_fn: Callable,
+    axis_name: str = "pod",
+):
+    """jit-compiled pipeline: (stage_params_stacked [S, ...], x_mbs [M, ...])
+    -> outputs [M, ...] (valid on the last stage, replicated out)."""
+    num_stages = mesh.shape[axis_name]
+
+    def run(stage_params, x_mbs):
+        def local(sp, xs):
+            sp = jax.tree.map(lambda a: a[0], sp)  # [1, ...] -> stage-local
+            out = gpipe_local(stage_fn, sp, xs, axis_name, num_stages)
+            # broadcast the last stage's result to every stage (masked psum)
+            is_last = jax.lax.axis_index(axis_name) == num_stages - 1
+            return jax.lax.psum(
+                jnp.where(is_last, out, jnp.zeros_like(out)), axis_name
+            )
+
+        other = tuple(a for a in mesh.axis_names if a != axis_name)
+        return jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axis_name), P()),
+            out_specs=P(),
+            check_vma=False,
+        )(stage_params, x_mbs)
+
+    return jax.jit(run)

@@ -1,0 +1,179 @@
+"""Train-step factory + host-side Trainer (checkpoint/restart, elastic data).
+
+``make_train_step`` builds the jitted step for any (arch x mesh):
+  * microbatch gradient accumulation (lax.scan) — the activation-memory
+    lever for the big archs,
+  * value_and_grad over models.loss_fn (remat inside the model scan),
+  * AdamW update with optimizer state inheriting parameter sharding,
+  * optional donation of params/opt-state buffers.
+
+The host ``Trainer`` wires the deterministic data source, async atomic
+checkpoints, resume-by-manifest, and the straggler/elastic coordinator
+(simulated control plane at laptop scale — same code path the multi-host
+launcher drives).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models.model import loss_fn
+from .optimizer import AdamW, AdamWState
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt: AdamW,
+    microbatches: int = 1,
+    backend: str = "ref",
+    remat: bool = True,
+    grad_shardings=None,
+    block_param_specs=None,
+):
+    """-> step(values, opt_state, tokens, labels) -> (values, opt, metrics).
+
+    ``grad_shardings``: parameter sharding tree; constrains the accumulation
+    buffer so per-microbatch gradient sync lowers to a reduce-scatter into
+    FSDP-sharded accumulators instead of an all-reduce into replicated ones.
+    ``block_param_specs``: per-unit PartitionSpec tree forwarded into the
+    layer scan (FSDP per-layer AG/RS; see models.forward).
+    """
+
+    def grads_of(values, tokens, labels):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            values, cfg, tokens, labels, backend=backend, remat=remat,
+            block_param_specs=block_param_specs,
+        )
+        return loss, metrics, grads
+
+    def constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_shardings)
+
+    def step(values, opt_state, tokens, labels):
+        if microbatches == 1:
+            loss, metrics, grads = grads_of(values, tokens, labels)
+        else:
+            B = tokens.shape[0]
+            assert B % microbatches == 0
+            mb = B // microbatches
+            tok = tokens.reshape(microbatches, mb, *tokens.shape[1:])
+            lab = labels.reshape(microbatches, mb, *labels.shape[1:])
+
+            def acc(carry, xs):
+                g_acc, l_acc = carry
+                t, l = xs
+                loss, _, grads = grads_of(values, t, l)
+                g_acc = constrain(jax.tree.map(jnp.add, g_acc, grads))
+                return (g_acc, l_acc + loss), None
+
+            g0 = constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), values)
+            )
+            (grads, loss_sum), _ = jax.lax.scan(acc, (g0, 0.0), (tok, lab))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"nll": loss, "aux": jnp.zeros(())}
+        new_values, new_opt, om = opt.update(grads, opt_state, values)
+        return new_values, new_opt, {"loss": loss, **metrics, **om}
+
+    return step
+
+
+def jit_train_step(
+    step,
+    mesh: Mesh,
+    param_shardings,
+    batch_sharding,
+    donate: bool = True,
+):
+    opt_shardings = AdamWState(
+        step=NamedSharding(mesh, P()), m=param_shardings, v=param_shardings
+    )
+    scalar = NamedSharding(mesh, P())
+    return jax.jit(
+        step,
+        in_shardings=(param_shardings, opt_shardings, batch_sharding, batch_sharding),
+        out_shardings=(
+            param_shardings,
+            opt_shardings,
+            jax.tree.map(lambda _: scalar, {"loss": 0, "nll": 0, "aux": 0, "grad_norm": 0, "lr": 0}),
+        ),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+class Trainer:
+    """Single-host end-to-end loop (examples/train_lm.py)."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        opt: AdamW,
+        data,
+        ckpt_dir: str | None = None,
+        seed: int = 0,
+        microbatches: int = 1,
+        log_every: int = 10,
+        ckpt_every: int = 100,
+    ):
+        from ..models.layers import split_tree
+        from ..models.model import init_params
+
+        self.cfg, self.opt, self.data = cfg, opt, data
+        self.ckpt_dir = ckpt_dir
+        self.log_every, self.ckpt_every = log_every, ckpt_every
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+        self.values, self.axes = split_tree(params)
+        self.opt_state = opt.init(self.values)
+        self.step_idx = 0
+        self._step = jax.jit(
+            make_train_step(cfg, opt, microbatches=microbatches), donate_argnums=(0, 1)
+        )
+        self._ckpt = None
+        if ckpt_dir:
+            from .checkpoint import AsyncCheckpointer, latest_step, restore
+
+            last = latest_step(ckpt_dir)
+            if last is not None:
+                state = restore(
+                    ckpt_dir, last, {"params": self.values, "opt": self.opt_state}
+                )
+                self.values = jax.tree.map(jnp.asarray, state["params"])
+                self.opt_state = jax.tree.map(jnp.asarray, state["opt"])
+                self.step_idx = last
+            self._ckpt = AsyncCheckpointer(ckpt_dir)
+
+    def run(self, num_steps: int, host: int = 0, healthy=None) -> list[dict]:
+        healthy = healthy if healthy is not None else [0]
+        history = []
+        for _ in range(num_steps):
+            t0 = time.time()
+            tokens, labels = self.data.host_batch(self.step_idx, host, healthy)
+            self.values, self.opt_state, metrics = self._step(
+                self.values, self.opt_state, jnp.asarray(tokens), jnp.asarray(labels)
+            )
+            self.step_idx += 1
+            if self.step_idx % self.log_every == 0 or self.step_idx == 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = self.step_idx
+                m["sec_per_step"] = time.time() - t0
+                history.append(m)
+            if self._ckpt and self.step_idx % self.ckpt_every == 0:
+                self._ckpt.save(
+                    self.step_idx, {"params": self.values, "opt": self.opt_state}
+                )
+        return history
+
+    def finish(self):
+        if self._ckpt:
+            self._ckpt.save(self.step_idx, {"params": self.values, "opt": self.opt_state})
+            self._ckpt.wait()

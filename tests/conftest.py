@@ -1,0 +1,53 @@
+"""Shared fixtures. Single-threaded BLAS (1-core box); 1 JAX device —
+multi-device tests spawn subprocesses with XLA_FLAGS so smoke tests and
+benches keep seeing a single device (see dry-run spec)."""
+import os
+
+os.environ.setdefault("OMP_NUM_THREADS", "1")
+os.environ.setdefault("OPENBLAS_NUM_THREADS", "1")
+os.environ.setdefault("MKL_NUM_THREADS", "1")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_workload():
+    from repro.core import make_workload
+
+    return make_workload(n=1500, d=16, nq=40, seed=0, k=10)
+
+
+@pytest.fixture(scope="session")
+def built_index(small_workload):
+    from repro.core import WoWIndex
+
+    wl = small_workload
+    idx = WoWIndex(dim=wl.vectors.shape[1], m=12, ef_construction=48, o=4, seed=0)
+    for v, a in zip(wl.vectors, wl.attrs):
+        idx.insert(v, a)
+    return idx
+
+
+def _run_subprocess(code: str, devices: int = 8, timeout: int = 420) -> str:
+    """Run a snippet in a fresh process with N fake XLA devices."""
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert res.returncode == 0, f"subprocess failed:\n{res.stdout}\n{res.stderr}"
+    return res.stdout
+
+
+@pytest.fixture(scope="session")
+def run_subprocess():
+    return _run_subprocess

@@ -1,0 +1,88 @@
+"""Device batched search: parity with the instrumented host path."""
+import numpy as np
+import pytest
+
+from repro.core import WoWIndex
+from repro.core.device_search import search_batch
+from repro.core.snapshot import take_snapshot
+
+
+@pytest.fixture(scope="module")
+def grid_index():
+    # integer-grid vectors: exact f32 arithmetic, no rounding tie-breaks
+    rng = np.random.default_rng(0)
+    n, d = 900, 8
+    vecs = rng.integers(-8, 8, size=(n, d)).astype(np.float32)
+    attrs = rng.permutation(n).astype(np.float64)
+    idx = WoWIndex(dim=d, m=8, ef_construction=48, o=4, seed=0)
+    for v, a in zip(vecs, attrs):
+        idx.insert(v, a)
+    return idx, vecs, attrs
+
+
+def _queries(n, attrs, nq=24, seed=1):
+    rng = np.random.default_rng(seed)
+    qs = rng.integers(-8, 8, size=(nq, 8)).astype(np.float32)
+    sorted_a = np.sort(attrs)
+    ranges = np.empty((nq, 2))
+    for i in range(nq):
+        f = [1.0, 0.3, 0.05, 0.01][i % 4]
+        n_in = max(2, int(n * f))
+        s = int(rng.integers(0, max(1, n - n_in)))
+        ranges[i] = (sorted_a[s], sorted_a[s + n_in - 1])
+    return qs, ranges
+
+
+def test_host_device_parity(grid_index):
+    idx, vecs, attrs = grid_index
+    snap = take_snapshot(idx)
+    qs, ranges = _queries(len(attrs), attrs)
+    res = search_batch(snap, qs, ranges, k=10, width=48)
+    dev_ids = np.asarray(res.ids)
+    overlap, dc_close = [], 0
+    for i in range(len(qs)):
+        ids, _, st = idx.search(qs[i], tuple(ranges[i]), k=10, ef=48)
+        h = set(ids.tolist())
+        d = set(int(snap.ids_map[j]) for j in dev_ids[i] if j >= 0)
+        overlap.append(len(h & d) / max(len(h), 1))
+        dc_close += abs(st.dc - int(res.dc[i])) <= 4
+    assert np.mean(overlap) >= 0.98
+    assert dc_close >= len(qs) - 2  # DC accounting matches (tie-order slack)
+
+
+def test_device_no_oor_and_sorted(grid_index):
+    idx, vecs, attrs = grid_index
+    snap = take_snapshot(idx)
+    qs, ranges = _queries(len(attrs), attrs, nq=12, seed=3)
+    res = search_batch(snap, qs, ranges, k=10, width=32)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    for i in range(len(qs)):
+        got = ids[i][ids[i] >= 0]
+        a = snap.attrs[got]
+        assert np.all((a >= ranges[i][0] - 1e-5) & (a <= ranges[i][1] + 1e-5))
+        dd = dists[i][: len(got)]
+        assert np.all(np.diff(dd) >= -1e-6)  # ascending
+
+
+def test_device_empty_range(grid_index):
+    idx, vecs, attrs = grid_index
+    snap = take_snapshot(idx)
+    qs = np.zeros((2, 8), np.float32)
+    ranges = np.array([[1e9, 2e9], [0.0, 5.0]])
+    res = search_batch(snap, qs, ranges, k=5, width=16)
+    assert np.all(np.asarray(res.ids)[0] == -1)
+    assert np.asarray(res.dc)[0] == 0
+
+
+def test_snapshot_compacts_deleted(grid_index):
+    idx, vecs, attrs = grid_index
+    idx.delete(3)
+    idx.delete(7)
+    try:
+        snap = take_snapshot(idx)
+        assert snap.n == idx.store.n - 2
+        assert 3 not in set(snap.ids_map.tolist())
+        assert np.all(snap.neighbors < snap.n)
+    finally:
+        idx.deleted.clear()

@@ -1,0 +1,141 @@
+"""WoW index behaviour: structure invariants, recall across selectivity,
+duplicates, deletion, incremental stability, landing-layer selection."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import SearchStats, WoWIndex, brute_force, make_workload, recall
+
+
+def test_structure_invariants(built_index, small_workload):
+    idx = built_index
+    n = idx.store.n
+    o, m = idx.params.o, idx.params.m
+    # top layer window covers the whole dataset
+    assert 2 * o**idx.top >= idx.num_unique
+    # degrees bounded; neighbor ids valid; no self loops
+    for l in range(idx.graph.num_layers):
+        cnt = idx.graph.counts[l][:n]
+        assert cnt.max() <= m
+        for v in range(0, n, 97):
+            nbrs = idx.graph.neighbors(l, v)
+            assert np.all((nbrs >= 0) & (nbrs < n))
+            assert v not in set(nbrs.tolist())
+
+
+def test_window_property_of_fresh_edges(small_workload):
+    """Forward edges of a just-inserted vertex respect the window property
+    (rank distance <= o^l) at insertion time."""
+    wl = small_workload
+    idx = WoWIndex(dim=wl.vectors.shape[1], m=8, ef_construction=32, o=4, seed=1)
+    for v, a in zip(wl.vectors[:400], wl.attrs[:400]):
+        vid = idx.insert(v, a)
+        ranks = {float(val): i for i, val in enumerate(idx.wbt.in_order())}
+        ra = ranks[float(a)]
+        for l in range(idx.graph.num_layers):
+            for j in idx.graph.neighbors(l, vid):
+                rj = ranks[float(idx.store.attrs[j])]
+                assert abs(rj - ra) <= idx.params.o**l, (l, ra, rj)
+
+
+@pytest.mark.parametrize("fraction", [1.0, 0.25, 0.05, 0.01])
+def test_recall_by_selectivity(built_index, small_workload, fraction):
+    wl = small_workload
+    idx = built_index
+    n = len(wl.attrs)
+    sorted_a = np.sort(wl.attrs)
+    rng = np.random.default_rng(3)
+    recs = []
+    for i in range(25):
+        n_in = max(5, int(n * fraction))
+        s = int(rng.integers(0, n - n_in + 1))
+        r = (sorted_a[s], sorted_a[s + n_in - 1])
+        q = wl.queries[i % len(wl.queries)]
+        ids, _, _ = idx.search(q, r, k=10, ef=80)
+        gold = brute_force(idx.store.vectors[: idx.store.n], idx.store.attrs[: idx.store.n], q, r, 10)
+        recs.append(recall(ids, gold))
+    assert np.mean(recs) >= 0.93, f"fraction {fraction}: recall {np.mean(recs)}"
+
+
+def test_no_oor_results(built_index, small_workload):
+    wl = small_workload
+    idx = built_index
+    for i in range(10):
+        r = tuple(wl.ranges[i])
+        ids, _, st = idx.search(wl.queries[i], r, k=10, ef=64)
+        a = idx.store.attrs[ids]
+        assert np.all((a >= r[0]) & (a <= r[1]))
+
+
+def test_empty_and_degenerate_ranges(built_index):
+    idx = built_index
+    q = np.zeros(idx.dim, np.float32)
+    ids, _, _ = idx.search(q, (1e9, 2e9), k=5)
+    assert len(ids) == 0
+    ids, _, _ = idx.search(q, (5.0, 1.0), k=5)  # inverted range
+    assert len(ids) == 0
+    # singleton range
+    a0 = float(idx.store.attrs[0])
+    ids, _, _ = idx.search(q, (a0, a0), k=5)
+    assert len(ids) >= 1 and float(idx.store.attrs[ids[0]]) == a0
+
+
+def test_landing_layer_formula(built_index):
+    idx = built_index
+    o, top = idx.params.o, idx.top
+    for n_prime in [1, 2, 7, 8, 32, 100, 500, 1400]:
+        l_d = idx.landing_layer(n_prime)
+        assert 0 <= l_d <= top
+        # paper restriction: l_d in {l_h, l_h+1}
+        l_h = max(0, min(int(math.floor(math.log(max(n_prime, 2) / 2, o))), top))
+        assert l_d in (l_h, min(l_h + 1, top)) or n_prime < 2
+
+
+def test_duplicate_attribute_values():
+    wl = make_workload(n=800, d=8, nq=20, seed=5, n_unique=50, k=5)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+    for v, a in zip(wl.vectors, wl.attrs):
+        idx.insert(v, a)
+    assert idx.num_unique <= 50
+    # fewer layers than without duplicates (space complexity claim §3.7)
+    assert idx.graph.num_layers == math.ceil(math.log(max(idx.num_unique / 2, 1), 4)) + 1
+    recs = []
+    for i in range(len(wl.queries)):
+        ids, _, _ = idx.search(wl.queries[i], tuple(wl.ranges[i]), k=5, ef=48)
+        recs.append(recall(ids, wl.gt[i]))
+    assert np.mean(recs) >= 0.9
+
+
+def test_deletion_mark_and_exclude(built_index, small_workload):
+    import copy
+
+    wl = small_workload
+    idx = built_index
+    q = wl.queries[0]
+    full = (float(np.min(wl.attrs)), float(np.max(wl.attrs)))
+    ids, _, _ = idx.search(q, full, k=5, ef=64)
+    victim = int(ids[0])
+    idx.delete(victim)
+    try:
+        ids2, _, _ = idx.search(q, full, k=5, ef=64)
+        assert victim not in set(ids2.tolist())
+    finally:
+        idx.deleted.discard(victim)  # restore shared fixture
+
+
+def test_incremental_equals_from_scratch_quality(small_workload):
+    """Recall after fully-incremental build matches a re-built index on the
+    same data (no degradation from unordered insertion — Challenge 1)."""
+    wl = small_workload
+    order = np.random.default_rng(0).permutation(len(wl.vectors))
+    idx = WoWIndex(dim=wl.vectors.shape[1], m=12, ef_construction=48, o=4, seed=0)
+    for i in order:  # a different (shuffled) insertion order
+        idx.insert(wl.vectors[i], wl.attrs[i])
+    recs = []
+    for i in range(len(wl.queries)):
+        ids, _, _ = idx.search(wl.queries[i], tuple(wl.ranges[i]), k=10, ef=64)
+        gold = wl.gt[i]
+        # map: index ids refer to insertion order; translate to original ids
+        recs.append(recall(order[ids], gold))
+    assert np.mean(recs) >= 0.9

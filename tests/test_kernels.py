@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.distance import batched_dot, l2_distance
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gather_distance import gather_dot
+from repro.kernels.rwkv6 import wkv6
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("B,K,D", [(1, 1, 8), (3, 17, 24), (8, 128, 64), (5, 200, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_dot_sweep(B, K, D, dtype):
+    vecs = jnp.asarray(RNG.normal(size=(B, K, D)), dtype)
+    qs = jnp.asarray(RNG.normal(size=(B, D)), dtype)
+    out = batched_dot(vecs, qs, interpret=True)
+    exp = ref.batched_dot_ref(vecs.astype(jnp.float32), qs.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out, exp, rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("B,K,D", [(2, 9, 16), (4, 64, 32)])
+def test_l2_distance_sweep(B, K, D):
+    vecs = jnp.asarray(RNG.normal(size=(B, K, D)), jnp.float32)
+    qs = jnp.asarray(RNG.normal(size=(B, D)), jnp.float32)
+    nr = jnp.sum(vecs**2, -1)
+    out = l2_distance(vecs, qs, nr, interpret=True)
+    exp = ref.l2_distance_ref(vecs, qs, nr)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+    # exactness property: distance to itself is ~0
+    same = l2_distance(qs[:, None, :], qs, jnp.sum(qs**2, -1, keepdims=True), interpret=True)
+    assert float(jnp.max(same)) < 1e-3
+
+
+@pytest.mark.parametrize("n,B,K,D", [(50, 2, 7, 16), (200, 4, 33, 8)])
+def test_gather_dot_sweep(n, B, K, D):
+    table = jnp.asarray(RNG.normal(size=(n, D)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, n, size=(B, K)), jnp.int32)
+    qs = jnp.asarray(RNG.normal(size=(B, D)), jnp.float32)
+    out = gather_dot(table, ids, qs, interpret=True)
+    np.testing.assert_allclose(out, ref.gather_dot_ref(table, ids, qs), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,T,N,chunk", [(1, 1, 16, 8, 4), (2, 3, 64, 16, 16), (1, 2, 96, 32, 32)])
+def test_wkv6_kernel_vs_ref(B, H, T, N, chunk):
+    r = jnp.asarray(RNG.normal(size=(B, H, T, N)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, H, T, N)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, H, T, N)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.05, 0.999, size=(B, H, T, N)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(H, N)), jnp.float32)
+    s0 = jnp.asarray(RNG.normal(size=(B, H, N, N)), jnp.float32)
+    y1, s1 = wkv6(r, k, v, w, u, state=s0, chunk=chunk, interpret=True)
+    y2, s2 = ref.wkv6_ref(r, k, v, w, u, state=s0)
+    np.testing.assert_allclose(y1, y2, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(s1, s2, rtol=3e-4, atol=3e-4)
+
+
+def test_wkv6_chunked_jnp_matches_step():
+    B, H, T, N = 2, 2, 48, 16
+    r = jnp.asarray(RNG.normal(size=(B, H, T, N)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, H, T, N)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, H, T, N)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.2, 0.99, size=(B, H, T, N)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(H, N)), jnp.float32)
+    y1, s1 = ref.wkv6_chunked(r, k, v, w, u, chunk=12)
+    y2, s2 = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(y1, y2, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(s1, s2, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("window", [None, 16])
+def test_flash_attention_sweep(Hq, Hkv, window):
+    B, T, D = 2, 64, 16
+    q = jnp.asarray(RNG.normal(size=(B, T, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, Hkv, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, Hkv, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=16, block_k=16, interpret=True)
+    exp = ref.mha_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, exp, rtol=2e-4, atol=2e-4)
+
+
+def test_mha_blocked_span_equals_dense():
+    B, T, Hq, Hkv, D = 2, 96, 4, 2, 16
+    q = jnp.asarray(RNG.normal(size=(B, T, Hq, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, Hkv, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, Hkv, D)), jnp.float32)
+    for window in (None, 32):
+        dense = ref.mha_ref(q, k, v, causal=True, window=window)
+        blocked = ref.mha_ref(q, k, v, causal=True, window=window, block_q=16)
+        np.testing.assert_allclose(dense, blocked, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_decode_offset():
+    """q_offset semantics: one-row attention against a longer K."""
+    B, Tk, H, D = 1, 32, 2, 8
+    q = jnp.asarray(RNG.normal(size=(B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Tk, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Tk, H, D)), jnp.float32)
+    out = ref.mha_ref(q, k, v, causal=True, q_offset=Tk - 1)
+    # equals full attention's last row
+    qf = jnp.concatenate([jnp.zeros((B, Tk - 1, H, D), jnp.float32), q], axis=1)
+    full = ref.mha_ref(qf, k, v, causal=True)
+    np.testing.assert_allclose(out[:, 0], full[:, -1], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,T,di,N,chunk,tile", [(1, 12, 4, 4, 4, 4), (2, 32, 16, 8, 8, 8)])
+def test_mamba_scan_kernel_vs_ref(B, T, di, N, chunk, tile):
+    from repro.kernels.mamba_scan import mamba_scan
+    from repro.models.mamba import _ssm_scan
+
+    A = -jnp.asarray(RNG.uniform(0.1, 2.0, size=(di, N)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(B, T, di)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, T, N)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(B, T, di)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(size=(B, di, N)), jnp.float32)
+    y1, h1 = mamba_scan(A, dt, Bm, Cm, x, h0, chunk=chunk, di_tile=tile, interpret=True)
+    y2, h2 = _ssm_scan(A, dt, Bm, Cm, x, h0, chunk=max(chunk - 1, 1))
+    np.testing.assert_allclose(y1, y2, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(h1, h2, rtol=2e-5, atol=2e-5)

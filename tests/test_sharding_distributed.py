@@ -1,0 +1,141 @@
+"""Distribution: logical rules, sharded train-step correctness (8 fake
+devices), pipeline parallelism, sharded WoW serving, baselines."""
+import numpy as np
+import pytest
+
+from repro.core import PostFiltering, PreFiltering, SingleGraphInFilter, recall
+from repro.parallel.logical import RULES_TP_FSDP, spec_for
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_spec_for_divisibility_fallback():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # qwen1.5: 20 heads don't divide 16 -> replicated; embed dim shards
+    s = spec_for((2560, 20, 128), ("embed", "heads", "head_dim"), RULES_TP_FSDP, mesh)
+    assert s == __import__("jax").sharding.PartitionSpec("data")
+    s = spec_for((2560, 32, 128), ("embed", "heads", "head_dim"), RULES_TP_FSDP, mesh)
+    assert s == __import__("jax").sharding.PartitionSpec("data", "model")
+    # same mesh axis never used twice
+    s = spec_for((64, 64), ("mlp", "mlp"), RULES_TP_FSDP, mesh)
+    assert s == __import__("jax").sharding.PartitionSpec("model")
+
+
+def test_sharded_train_step_matches_single_device(run_subprocess):
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.models.layers import split_tree
+from repro.parallel.logical import RULES_TP_FSDP, param_shardings
+from repro.train import AdamW, make_train_step
+from repro.train.optimizer import AdamWState
+
+cfg = get_arch("qwen2-7b").reduced(num_layers=2, vocab_size=64, d_model=32,
+                                   d_ff=64, num_heads=4, num_kv_heads=2, head_dim=16)
+params = init_params(jax.random.PRNGKey(0), cfg)
+values, _ = split_tree(params)
+opt = AdamW(lr=1e-3, warmup=0)
+state = opt.init(values)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab_size)
+labels = jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0, cfg.vocab_size)
+step = make_train_step(cfg, opt, microbatches=2)
+# single device
+nv1, _, m1 = jax.jit(step)(values, state, tokens, labels)
+# 2x4 mesh with TP+FSDP rules
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+vals_sh, shardings = param_shardings(params, RULES_TP_FSDP, mesh)
+opt_sh = AdamWState(step=NamedSharding(mesh, P()), m=shardings, v=shardings)
+tok_sh = NamedSharding(mesh, P("data"))
+jstep = jax.jit(step, in_shardings=(shardings, opt_sh, tok_sh, tok_sh))
+nv2, _, m2 = jstep(values, state, tokens, labels)
+assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3, (m1["loss"], m2["loss"])
+# grad norm parity (elementwise param compare is Adam-sign-brittle in bf16)
+g1, g2 = float(m1["grad_norm"]), float(m2["grad_norm"])
+assert abs(g1 - g2) / max(g1, 1e-9) < 2e-2, (g1, g2)
+print("OK sharded == single", float(m1["loss"]))
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK sharded == single" in out
+
+
+def test_gpipe_matches_sequential(run_subprocess):
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.train.pipeline import make_gpipe
+mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+S, M, mb, d = 4, 6, 3, 16
+ws = jax.random.normal(jax.random.PRNGKey(0), (S, d, d)) * 0.5
+xs = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
+pipe = make_gpipe(mesh, stage_fn, "pod")
+got = pipe(ws, xs)
+exp = xs
+for s in range(S):
+    exp = jnp.tanh(exp @ ws[s])
+np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5, atol=2e-5)
+print("OK gpipe")
+"""
+    out = run_subprocess(code, devices=4)
+    assert "OK gpipe" in out
+
+
+def test_sharded_wow_serving(run_subprocess):
+    code = """
+import jax, numpy as np
+from repro.core import WoWIndex
+from repro.core.snapshot import take_snapshot
+from repro.core.distributed import make_serving_fn
+from repro.core.device_search import search_batch
+rng = np.random.default_rng(0)
+n, d = 600, 8
+vecs = rng.integers(-8, 8, size=(n, d)).astype(np.float32)
+attrs = rng.permutation(n).astype(np.float64)
+idx = WoWIndex(dim=d, m=8, ef_construction=32, o=4, seed=0)
+for v, a in zip(vecs, attrs):
+    idx.insert(v, a)
+snap = take_snapshot(idx)
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+serve = make_serving_fn(mesh, snap, k=5, width=32)
+qs = rng.integers(-8, 8, size=(8, d)).astype(np.float32)
+ranges = np.tile(np.array([[0.0, n - 1.0]]), (8, 1))
+res = serve(qs, ranges)
+base = search_batch(snap, qs, ranges, k=5, width=32)
+np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(base.ids))
+print("OK sharded serving")
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK sharded serving" in out
+
+
+def test_partition_bounds():
+    from repro.core.distributed import partition_bounds
+
+    attrs = np.arange(100)
+    parts = partition_bounds(attrs, 4, halo=5)
+    assert len(parts) == 4
+    covered = []
+    for lo, hi, hlo, hhi in parts:
+        covered.extend(range(lo, hi))
+        assert hlo <= lo and hhi >= hi
+    assert covered == list(range(100))
+
+
+def test_baselines_recall(small_workload):
+    wl = small_workload
+    pre = PreFiltering(wl.vectors, wl.attrs)
+    post = PostFiltering(wl.vectors, wl.attrs, m=12, ef_construction=48, seed=0)
+    recs_pre, recs_post = [], []
+    for i in range(12):
+        r = tuple(wl.ranges[i])
+        ids, _ = pre.search(wl.queries[i], r, k=10)
+        recs_pre.append(recall(ids, wl.gt[i]))
+        ids, _ = post.search(wl.queries[i], r, k=10, ef=64)
+        recs_post.append(recall(ids, wl.gt[i]))
+    assert np.mean(recs_pre) == 1.0  # exact
+    assert np.mean(recs_post) >= 0.7

@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests: WoW vs baselines quality ordering, oracle
+proximity, and the dry-run driver on the production mesh (subprocess)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    SearchStats,
+    SingleGraphInFilter,
+    WoWIndex,
+    brute_force,
+    build_oracle_graph,
+    make_workload,
+    recall,
+)
+
+
+def test_wow_beats_single_graph_on_selective_filters():
+    """The paper's core claim vs flat in-filtering: under selective filters a
+    single proximity graph loses frontier connectivity; WoW keeps recall."""
+    wl = make_workload(n=1500, d=16, nq=30, fractions=[2**-6], seed=7, k=10)
+    wow = WoWIndex(dim=16, m=12, ef_construction=48, o=4, seed=0)
+    for v, a in zip(wl.vectors, wl.attrs):
+        wow.insert(v, a)
+    flat = SingleGraphInFilter(wl.vectors, wl.attrs, m=12, ef_construction=48, seed=0)
+    r_wow, r_flat, dc_wow = [], [], []
+    for i in range(len(wl.queries)):
+        rng = tuple(wl.ranges[i])
+        ids, _, st = wow.search(wl.queries[i], rng, k=10, ef=64)
+        r_wow.append(recall(ids, wl.gt[i]))
+        dc_wow.append(st.dc)
+        ids2, _ = flat.search(wl.queries[i], rng, k=10, ef=64)
+        r_flat.append(recall(ids2, wl.gt[i]))
+    assert np.mean(r_wow) >= 0.95
+    assert np.mean(r_wow) >= np.mean(r_flat) + 0.05, (np.mean(r_wow), np.mean(r_flat))
+
+
+def test_dc_within_factor_of_oracle_graph():
+    """Fig. 5 claim: WoW's DC at matched recall is close to the oracle graph
+    built on exactly the in-range subset."""
+    wl = make_workload(n=1200, d=16, nq=10, fractions=[2**-3], seed=11, k=10)
+    wow = WoWIndex(dim=16, m=12, ef_construction=48, o=4, seed=0)
+    for v, a in zip(wl.vectors, wl.attrs):
+        wow.insert(v, a)
+    rng0 = tuple(wl.ranges[0])
+    wl.ranges[:] = wl.ranges[0]  # all queries share one range (oracle reuse)
+    oracle, ids_map = build_oracle_graph(wl.vectors, wl.attrs, rng0, m=12, ef_construction=48)
+    wow_dc, orc_dc = [], []
+    for i in range(len(wl.queries)):
+        st = SearchStats()
+        ids, _, st = wow.search(wl.queries[i], rng0, k=10, ef=64, stats=st)
+        gold = brute_force(wl.vectors, wl.attrs, wl.queries[i], rng0, 10)
+        if recall(ids, gold) < 0.8:
+            continue
+        wow_dc.append(st.dc)
+        st2 = SearchStats()
+        oracle.search(wl.queries[i], k=10, ef=64, stats=st2)
+        orc_dc.append(st2.dc)
+    assert len(wow_dc) >= 3
+    assert np.mean(wow_dc) <= 3.0 * np.mean(orc_dc), (np.mean(wow_dc), np.mean(orc_dc))
+
+
+def test_early_stop_reduces_filter_checks():
+    """Table 5: without early-stop the sweep always descends to layer 0,
+    paying more filter checks (and >= DC) at equal recall."""
+    wl = make_workload(n=1200, d=16, nq=25, fractions=[2**-4], seed=13, k=10)
+    wow = WoWIndex(dim=16, m=12, ef_construction=48, o=4, seed=0)
+    for v, a in zip(wl.vectors, wl.attrs):
+        wow.insert(v, a)
+    stats = {}
+    for flag in (True, False):
+        dc, fc, rec = [], [], []
+        for i in range(len(wl.queries)):
+            st = SearchStats()
+            ids, _, st = wow.search(
+                wl.queries[i], tuple(wl.ranges[i]), k=10, ef=48, stats=st,
+                early_stop=flag,
+            )
+            dc.append(st.dc)
+            fc.append(st.filter_checks)
+            rec.append(recall(ids, wl.gt[i]))
+        stats[flag] = (np.mean(dc), np.mean(fc), np.mean(rec))
+    assert stats[True][2] > 0.9
+    assert stats[False][1] > stats[True][1], stats  # more filter checks
+    assert stats[False][0] >= stats[True][0] - 1, stats  # no DC savings lost
+
+
+@pytest.mark.slow
+def test_dryrun_production_mesh_cell(run_subprocess):
+    """One real dry-run cell on the 16x16 production mesh (512 fake devices):
+    lower + compile + roofline terms must succeed."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+mesh = make_production_mesh()
+rec = build_cell("rwkv6-1.6b", "decode_32k", mesh)
+assert "error" not in rec, rec
+assert rec["terms"]["compute_s"] > 0
+assert rec["memory"]["total_bytes"] < 16 * 2**30, rec["memory"]
+print("OK dryrun cell", rec["terms"]["bottleneck"])
+"""
+    out = run_subprocess(code, devices=512, timeout=580)
+    assert "OK dryrun cell" in out

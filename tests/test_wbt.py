@@ -1,0 +1,102 @@
+"""WBT unit + property tests: order statistics vs a sorted-list oracle,
+BB[alpha] balance invariants, Algorithm 4/5 semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.wbt import WBT
+
+
+def _oracle_rank(vals, x):
+    return int(np.searchsorted(np.sort(vals), x, side="left"))
+
+
+def test_insert_rank_select_basic():
+    t = WBT()
+    vals = [5.0, 1.0, 9.0, 3.0, 7.0]
+    for v in vals:
+        assert t.insert(v)
+    assert not t.insert(5.0)  # duplicate
+    assert len(t) == 5
+    assert t.rank(5.0) == 2
+    assert t.rank(0.0) == 0
+    assert t.rank(10.0) == 5
+    assert [t.select(i) for i in range(5)] == [1.0, 3.0, 5.0, 7.0, 9.0]
+    assert t.count_range(3.0, 7.0) == 3
+    assert t.count_range(3.5, 6.9) == 1
+    assert t.count_range(7.0, 3.0) == 0
+    t.check_invariants()
+
+
+def test_window_semantics_match_paper_figures():
+    # Fig. 2/3 style: window = o^l-th closest strictly below/above, clipped.
+    t = WBT()
+    for v in [10, 35, 48, 55, 60, 72, 74, 81, 98, 99]:
+        t.insert(float(v))
+    # paper: W_74^1 (o=4, l=1): 4th smaller of 74 is 48; right clips to 99
+    assert t.window(74.0, 4) == (48.0, 99.0)
+    # inserting value not in tree: W_73^0 = [72, 74]
+    assert t.window(73.0, 1) == (72.0, 74.0)
+    assert t.window(73.0, 4) == (48.0, 99.0)
+    # fully clipped
+    assert t.window(10.0, 100) == (10.0, 99.0)
+
+
+def test_closest_in_range():
+    t = WBT()
+    for v in [1.0, 4.0, 9.0, 16.0]:
+        t.insert(v)
+    assert t.closest_in_range(5.0, 2.0, 10.0) == 4.0
+    assert t.closest_in_range(8.0, 2.0, 10.0) == 9.0
+    assert t.closest_in_range(5.0, 20.0, 30.0) is None
+    assert t.closest_in_range(0.0, 3.9, 4.1) == 4.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=-10_000, max_value=10_000), min_size=1, max_size=300))
+def test_property_order_statistics(xs):
+    t = WBT()
+    uniq = sorted(set(xs))
+    for x in xs:
+        t.insert(float(x))
+    t.check_invariants()
+    assert len(t) == len(uniq)
+    assert list(t.in_order()) == [float(u) for u in uniq]
+    arr = np.asarray(uniq, dtype=float)
+    for probe in list(xs[:10]) + [min(xs) - 1, max(xs) + 1]:
+        assert t.rank(float(probe)) == _oracle_rank(arr, probe)
+    for k in range(0, len(uniq), max(1, len(uniq) // 7)):
+        assert t.select(k) == float(uniq[k])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=2000), min_size=3, max_size=200),
+    st.integers(min_value=1, max_value=64),
+)
+def test_property_window_oracle(xs, half):
+    """window(a, h) == [h-th strictly below, h-th strictly above], clipped."""
+    t = WBT()
+    for x in xs:
+        t.insert(float(x))
+    uniq = sorted(set(xs))
+    a = float(xs[len(xs) // 2])
+    lo, hi = t.window(a, half)
+    below = [u for u in uniq if u < a]
+    above = [u for u in uniq if u > a]
+    exp_lo = float(below[-half]) if len(below) >= half else float(uniq[0])
+    exp_hi = float(above[half - 1]) if len(above) >= half else float(uniq[-1])
+    assert lo == min(exp_lo, a)
+    assert hi == max(exp_hi, a)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6, allow_nan=False), min_size=1, max_size=200))
+def test_property_count_range(xs):
+    t = WBT()
+    for x in xs:
+        t.insert(x)
+    uniq = np.array(sorted(set(xs)))
+    lo, hi = np.percentile(uniq, [20, 80]) if len(uniq) > 1 else (uniq[0], uniq[0])
+    expect = int(((uniq >= lo) & (uniq <= hi)).sum())
+    assert t.count_range(float(lo), float(hi)) == expect
