@@ -1,19 +1,111 @@
 """Beyond-paper: device batched search (the TPU serving path) — throughput
-vs the host reference, result parity, batch scaling."""
+vs the host reference, old vs new hop pipeline (end-to-end and per stage),
+result parity, batch scaling.
+
+Emits the usual CSV rows plus a machine-readable ``BENCH_device.json`` at
+the repo root so the serving-path perf trajectory is tracked across PRs:
+
+  stages.{dedupe,merge}.{reference,fused}_us   per-call stage latency
+  eval.{reference,fused}_us                    candidate distance evaluation
+  device_search.<B>.{reference,fused}_qps      end-to-end hop-pipeline QPS
+  host_qps                                     instrumented host reference
+
+The end-to-end numbers are authoritative: stage timings are standalone
+jitted calls and carry per-dispatch overhead that the real hop body (where
+the stages fuse into the ``while_loop``) does not pay.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
 from .common import BENCH_D, BENCH_N, build_wow, emit, write_csv
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _time_us(fn, reps=20):
+    fn()  # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _stage_bench(snap, W=48, B=128, seed=0):
+    """Per-stage microbenchmark: old vs new dedupe / merge / distance eval."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import hop_reference as hr
+    from repro.core.device_search import (
+        _dedupe_sorted,
+        _merge_sorted,
+        to_device_index,
+    )
+    from repro.kernels.ops import gather_norm_dot
+
+    rng = np.random.default_rng(seed)
+    di = to_device_index(snap)
+    L, n, m = di.neighbors.shape
+    F, K = L * m, m + 1
+    d = di.vectors.shape[1]
+
+    ids_f = jnp.asarray(rng.integers(0, n, size=(B, F)), jnp.int32)
+    rank_f = np.argsort(rng.random((B, F))).astype(np.int32)
+    rank_f[rng.random((B, F)) < 0.5] = 2**30
+    rank_f = jnp.asarray(rank_f)
+
+    res_d = jnp.asarray(np.sort(rng.random((B, W)).astype(np.float32), axis=1))
+    res_i = jnp.asarray(rng.integers(0, n, size=(B, W)), jnp.int32)
+    res_e = jnp.asarray(rng.random((B, W)) < 0.5)
+    dd = jnp.asarray(rng.random((B, K)).astype(np.float32))
+    new_i = jnp.asarray(rng.integers(0, n, size=(B, K)), jnp.int32)
+    new_e = jnp.asarray(rng.random((B, K)) < 0.2)
+
+    sel = jnp.asarray(rng.integers(0, n, size=(B, K)), jnp.int32)
+    qs = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+
+    ded_ref = jax.jit(lambda i, r: hr.dedupe_pairwise(i, r)[1])
+    ded_new = jax.jit(lambda i, r: _dedupe_sorted(i, r, n, F)[1])
+    mrg_ref = jax.jit(lambda *a: hr.merge_full_sort(*a, W)[0])
+    mrg_new = jax.jit(lambda *a: _merge_sorted(*a, W)[0])
+    ev_ref = jax.jit(
+        lambda s, q: hr.eval_materialized(di.vectors, di.sq_norms, s, q, "ref")[0]
+    )
+    ev_new = jax.jit(lambda s, q: gather_norm_dot(di.vectors, s, q)[0])
+
+    return {
+        "shape": {"B": B, "F": F, "W": W, "K": K, "n": n, "d": d},
+        "dedupe": {
+            "reference_us": _time_us(lambda: ded_ref(ids_f, rank_f).block_until_ready()),
+            "fused_us": _time_us(lambda: ded_new(ids_f, rank_f).block_until_ready()),
+        },
+        "merge": {
+            "reference_us": _time_us(
+                lambda: mrg_ref(res_d, res_i, res_e, dd, new_i, new_e).block_until_ready()
+            ),
+            "fused_us": _time_us(
+                lambda: mrg_new(res_d, res_i, res_e, dd, new_i, new_e).block_until_ready()
+            ),
+        },
+        "eval": {
+            "reference_us": _time_us(lambda: ev_ref(sel, qs).block_until_ready()),
+            "fused_us": _time_us(lambda: ev_new(sel, qs).block_until_ready()),
+        },
+    }
+
 
 def run() -> list[list]:
-    from repro.core import make_workload, recall
-    from repro.core.device_search import search_batch, to_device_index, device_search
-    from repro.core.snapshot import take_snapshot
+    import jax
     import jax.numpy as jnp
+
+    from repro.core import make_workload
+    from repro.core.device_search import device_search, to_device_index
+    from repro.core.snapshot import take_snapshot
 
     rows = []
     n = max(BENCH_N // 2, 1200)
@@ -32,24 +124,48 @@ def run() -> list[list]:
     di = to_device_index(snap)
     qs = jnp.asarray(wl.queries, jnp.float32)
     rr = jnp.asarray(wl.ranges, jnp.float32)
+    e2e = {}
     for B in (16, 64, 128):
         qb, rb = qs[:B], rr[:B]
-        res = device_search(di, qb, rb, k=10, width=48, m=snap.m, o=snap.o)
-        res.ids.block_until_ready()  # compile
-        t0 = time.perf_counter()
-        reps = 3
-        for _ in range(reps):
-            res = device_search(di, qb, rb, k=10, width=48, m=snap.m, o=snap.o)
-            res.ids.block_until_ready()
-        dev_qps = B * reps / (time.perf_counter() - t0)
-        ov = []
-        dev_ids = np.asarray(res.ids)
-        for i in range(B):
-            got = set(int(snap.ids_map[j]) for j in dev_ids[i] if j >= 0)
-            ov.append(len(got & host_res[i]) / max(len(host_res[i]), 1))
-        rows.append(["device", B, round(dev_qps, 1), round(float(np.mean(ov)), 4)])
-        emit(f"device_search_b{B}", 1e6 / dev_qps,
-             f"overlap={np.mean(ov):.3f};host_qps={host_qps:.0f}")
+        e2e[str(B)] = {}
+        for pipeline in ("reference", "fused"):
+            res = device_search(di, qb, rb, k=10, width=48, m=snap.m, o=snap.o,
+                                pipeline=pipeline)
+            res.ids.block_until_ready()  # compile
+            t0 = time.perf_counter()
+            reps = 3
+            for _ in range(reps):
+                res = device_search(di, qb, rb, k=10, width=48, m=snap.m,
+                                    o=snap.o, pipeline=pipeline)
+                res.ids.block_until_ready()
+            dev_qps = B * reps / (time.perf_counter() - t0)
+            e2e[str(B)][f"{pipeline}_qps"] = round(dev_qps, 1)
+            ov = []
+            dev_ids = np.asarray(res.ids)
+            for i in range(B):
+                got = set(int(snap.ids_map[j]) for j in dev_ids[i] if j >= 0)
+                ov.append(len(got & host_res[i]) / max(len(host_res[i]), 1))
+            rows.append([pipeline, B, round(dev_qps, 1),
+                         round(float(np.mean(ov)), 4)])
+            emit(f"device_search_{pipeline}_b{B}", 1e6 / dev_qps,
+                 f"overlap={np.mean(ov):.3f};host_qps={host_qps:.0f}")
     rows.append(["host", 1, round(host_qps, 1), 1.0])
+
+    stages = _stage_bench(snap)
+    for st in ("dedupe", "merge", "eval"):
+        emit(f"hop_{st}_reference", stages[st]["reference_us"])
+        emit(f"hop_{st}_fused", stages[st]["fused_us"])
+
+    record = {
+        "platform": jax.devices()[0].platform,
+        "workload": {"n": n, "d": BENCH_D, "nq": len(wl.queries),
+                     "m": snap.m, "o": snap.o, "k": 10, "width": 48},
+        "host_qps": round(host_qps, 1),
+        "device_search": e2e,
+        "stages": stages,
+    }
+    with open(os.path.join(_REPO_ROOT, "BENCH_device.json"), "w") as f:
+        json.dump(record, f, indent=1)
+
     write_csv("bench_device.csv", ["path", "batch", "qps", "host_overlap"], rows)
     return rows

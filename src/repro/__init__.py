@@ -1,0 +1,8 @@
+"""repro — WoW (window-to-window RFANNS) reproduction on jax/Pallas.
+
+Importing the package installs small forward-compat shims for older jax
+runtimes (see ``repro._compat``); everything else lives in subpackages.
+"""
+from . import _compat as _jax_compat
+
+_jax_compat.install()

@@ -1,0 +1,63 @@
+"""Forward-compat shims so code written for current jax runs on older jax.
+
+The repo targets the modern public API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``); older
+runtimes (e.g. 0.4.x) predate parts of it.  ``install()`` patches the gaps
+in-place at ``repro`` import time:
+
+  * ``jax.sharding.AxisType`` — enum stub (Auto/Explicit/Manual);
+  * ``jax.make_mesh`` — accept-and-drop ``axis_types`` (older meshes are
+    implicitly Auto, which is the only mode this repo uses);
+  * ``jax.shard_map`` — alias of ``jax.experimental.shard_map.shard_map``
+    with ``check_vma`` mapped to the old ``check_rep``.
+
+Each shim is installed only when the attribute is missing, so on current jax
+this module is a no-op.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+
+def install() -> None:
+    import jax
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic wrappers
+        params = {}
+    if "axis_types" not in params:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+            del axis_types  # pre-AxisType meshes behave as Auto
+            return _make_mesh(axis_shapes, axis_names, *args, **kw)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        # ``with jax.set_mesh(mesh):`` — Mesh has always been a context
+        # manager, so handing the mesh back covers the scoped usage.
+        jax.set_mesh = lambda mesh: mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, *args, check_vma=None, **kw):
+            if check_vma is not None:
+                kw.setdefault("check_rep", check_vma)
+            return _shard_map(f, *args, **kw)
+
+        jax.shard_map = shard_map

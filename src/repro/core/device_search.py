@@ -13,12 +13,49 @@ Executes Algorithm 2+3 for B queries in lock-step inside one
   4. selects at most ``m+1`` eligible (valid, unvisited, in-range) neighbors
      by layer-priority rank (the ``c_n`` cap with high-layer priority),
      deduplicated across layers,
-  5. evaluates their distances in one batched matmul (the MXU-friendly
-     factorised ``|v|^2 - 2 v.q + |q|^2`` — same math the Pallas kernel in
-     ``repro.kernels.distance`` implements; set ``use_kernel=True`` on TPU),
+  5. evaluates their distances with the fused gather+distance kernel (the
+     MXU-friendly factorised ``|v|^2 - 2 v.q + |q|^2``),
   6. merges them into its sorted fixed-width result array (heap semantics:
      the width-W sorted array is exactly the paper's U; entries beyond W can
      never be expanded by the paper's algorithm either).
+
+Hop-pipeline design (the fused path; ``repro.core.hop_reference`` keeps the
+pre-refactor stages as the parity oracle):
+
+  * **Sort-based dedupe** — the F = L*m flattened (id, rank) pairs are
+    packed into one uint32 key ``id*(F+1) + rank`` (eligible ranks are < F
+    by construction — (l_d-l)*m + col is injective over slots — and
+    ineligible slots pack as F), sorted with a *single-key single-operand*
+    ``lax.sort`` (markedly cheaper than a variadic lexsort on every
+    backend), and unpacked; an entry is dropped iff its sorted predecessor
+    carries the same id: within an equal-id run ranks ascend, so the
+    predecessor is either a better-ranked *eligible* entry (drop is correct
+    — the host marks the id visited at the better slot first) or already
+    ineligible, in which case the entry itself is ineligible and the drop
+    is a no-op.  The surviving set and its rank order are exactly those of
+    the O(F^2) all-pairs mask, with O(F log F) work and no [B, F, F]
+    intermediate.  When ``n*(F+1)`` would overflow 32 bits the packing
+    falls back to the equivalent two-key lexsort.  The subsequent top-k
+    runs directly in id-sorted order — rank order is preserved under any
+    permutation, so no unsort is needed.
+  * **Two-way counting merge** — the width-W result array is sorted at all
+    times (the invariant: it is only ever produced by merging two sorted
+    sequences), so the K = m+1 new entries merge *without any sort*: a
+    [B, K, K] comparison matrix gives each new entry its stable rank among
+    the new entries (ties broken by slot index), a [B, W, K] ``<=`` matrix
+    counts cross positions (pos_A[i] = i + #{j : new[j] < res[i]},
+    pos_B[j] = rank_new[j] + #{i : res[i] <= new[j]} — the asymmetric
+    comparison reproduces the stable tie-break of the old full sort, result
+    entries before new entries), one scatter (``mode="drop"``) writes the
+    *source index* of each surviving slot, and three gathers produce the
+    merged (dist, id, expanded) arrays.  No [B, W+K] full-width sort.
+  * **Fused slab gather** — candidate vectors are fetched by the blocked
+    Pallas kernel in ``repro.kernels.gather_distance``: ids are
+    scalar-prefetched, [rows, D] slabs are assembled in VMEM by
+    double-buffered row DMAs, and both the query dot and the squared norm
+    are produced in-kernel, so candidate vectors never round-trip through
+    HBM as a [B, K, d] tensor (VMEM budget: 2*rows*D*4 bytes of slab
+    scratch; see the kernel docstring).
 
 Termination per query: no unexpanded candidates, or the nearest unexpanded is
 farther than the current worst of a full result set (Alg. 2 line 6).
@@ -28,6 +65,12 @@ and is shardable over the query batch (see ``repro.core.distributed``).
 Out-of-range vertices are never distance-evaluated, preserving the paper's
 no-OOR property; per-query DC and hop counters are returned for parity tests
 against the instrumented host path.
+
+Knobs (both static): ``backend`` dispatches the distance kernel like every
+other kernel in ``repro.kernels.ops`` ("auto" = compiled Pallas on TPU, jnp
+reference elsewhere; "pallas" forces the kernel, interpreted off-TPU; "ref"
+forces the jnp oracle); ``pipeline`` selects "fused" (production) or
+"reference" (the pre-refactor hop, for parity and benchmarks).
 """
 from __future__ import annotations
 
@@ -39,6 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from . import hop_reference as _hop_ref
 from .snapshot import Snapshot
 
 _INF = jnp.float32(np.inf)
@@ -103,9 +147,60 @@ def _landing_and_entry(di: DeviceIndex, ranges: jax.Array, o: int, num_layers: i
     return l_d, ep, has
 
 
+def _dedupe_sorted(ids_f: jax.Array, rank_f: jax.Array, n: int, F: int):
+    """Sort-based cross-layer dedupe (see module docstring).  Returns the
+    (id-sorted ids, masked ranks) pair — order differs from the input, which
+    is fine for the rank top-k that follows."""
+    if n * (F + 1) < 2**32:  # packed single-key sort (the common case)
+        rix = jnp.where(rank_f < _BIG, rank_f, F).astype(jnp.uint32)
+        skey = lax.sort(ids_f.astype(jnp.uint32) * jnp.uint32(F + 1) + rix,
+                        dimension=1)
+        sid = (skey // jnp.uint32(F + 1)).astype(jnp.int32)
+        srank = (skey % jnp.uint32(F + 1)).astype(jnp.int32)
+        srank = jnp.where(srank >= F, _BIG, srank)
+    else:  # huge tables: equivalent two-key lexsort
+        sid, srank = lax.sort((ids_f, rank_f), dimension=1, num_keys=2)
+    dup = sid[:, 1:] == sid[:, :-1]
+    srank = srank.at[:, 1:].set(jnp.where(dup, _BIG, srank[:, 1:]))
+    return sid, srank
+
+
+def _merge_sorted(res_d, res_i, res_e, dd, new_i, new_e, W: int):
+    """Stable sort-free two-way merge of the sorted width-W result arrays
+    with K (unsorted) new entries; keeps the W nearest.  Exactly reproduces
+    the old full-width stable sort of [res | new] without materialising or
+    sorting [B, W+K]."""
+    B, K = dd.shape
+    row = jnp.arange(B)[:, None]
+    kio = jnp.arange(K, dtype=jnp.int32)
+    # stable rank of each new entry among the K new entries (K = m+1 is
+    # tiny: one [B, K, K] comparison matrix beats any sort)
+    lt = dd[:, :, None] > dd[:, None, :]
+    eq_earlier = (dd[:, :, None] == dd[:, None, :]) & (
+        kio[None, :, None] > kio[None, None, :]
+    )
+    rank_new = jnp.sum(lt | eq_earlier, axis=2, dtype=jnp.int32)  # [B, K]
+    cmp = (res_d[:, :, None] <= dd[:, None, :]).astype(jnp.int32)  # [B, W, K]
+    pos_a = jnp.arange(W, dtype=jnp.int32)[None, :] + (K - jnp.sum(cmp, axis=2))
+    pos_b = rank_new + jnp.sum(cmp, axis=1)
+    # merged positions 0..W+K-1 are a bijection; slots >= W fall off the
+    # end.  One scatter of source indices, then gather all three payloads.
+    src = jnp.zeros((B, W), jnp.int32)
+    src = src.at[row, pos_a].set(
+        jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32), (B, W)), mode="drop"
+    )
+    src = src.at[row, pos_b].set(W + jnp.broadcast_to(kio, (B, K)), mode="drop")
+    out_d = jnp.take_along_axis(jnp.concatenate([res_d, dd], axis=1), src, 1)
+    out_i = jnp.take_along_axis(jnp.concatenate([res_i, new_i], axis=1), src, 1)
+    out_e = jnp.take_along_axis(jnp.concatenate([res_e, new_e], axis=1), src, 1)
+    return out_d, out_i, out_e
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "width", "m", "o", "metric", "max_hops", "use_kernel"),
+    static_argnames=(
+        "k", "width", "m", "o", "metric", "max_hops", "backend", "pipeline"
+    ),
 )
 def device_search(
     di: DeviceIndex,
@@ -118,8 +213,11 @@ def device_search(
     o: int = 4,
     metric: str = "l2",
     max_hops: int | None = None,
-    use_kernel: bool = False,
+    backend: str = "auto",
+    pipeline: str = "fused",
 ) -> SearchResult:
+    if pipeline not in ("fused", "reference"):
+        raise ValueError(f"unknown pipeline {pipeline!r}")
     B, d = queries.shape
     L, n, _ = di.neighbors.shape
     W = max(width, k)
@@ -130,6 +228,11 @@ def device_search(
         max_hops = 8 * W + 64
 
     queries = queries.astype(jnp.float32)
+    if metric != "l2":
+        # cosine: match the host path, which normalises the query at search
+        # time (stored vectors are pre-normalised at insert)
+        qn = jnp.sqrt(jnp.sum(queries * queries, axis=1, keepdims=True))
+        queries = queries / jnp.where(qn > 0, qn, 1.0)
     q2 = jnp.sum(queries * queries, axis=1)  # [B]
     x, y = ranges[:, 0].astype(jnp.float32), ranges[:, 1].astype(jnp.float32)
     l_d, ep, has = _landing_and_entry(di, ranges.astype(jnp.float32), o, L)
@@ -140,15 +243,17 @@ def device_search(
 
     def eval_dists(ids: jax.Array, valid: jax.Array) -> jax.Array:
         idc = jnp.clip(ids, 0, n - 1)
-        vecs = di.vectors[idc]  # [B, K, d]
-        if use_kernel:
-            from repro.kernels.ops import batched_dot
-
-            dots = batched_dot(vecs, queries)
+        if pipeline == "reference":
+            dots, v2 = _hop_ref.eval_materialized(
+                di.vectors, di.sq_norms, idc, queries, backend
+            )
         else:
-            dots = jnp.einsum("bkd,bd->bk", vecs, queries)
+            # fused gather+distance: no [B, K, d] HBM intermediate
+            from repro.kernels.ops import gather_norm_dot
+
+            dots, v2 = gather_norm_dot(di.vectors, idc, queries, backend=backend)
         if metric == "l2":
-            dd = jnp.maximum(di.sq_norms[idc] - 2.0 * dots + q2[:, None], 0.0)
+            dd = jnp.maximum(v2 - 2.0 * dots + q2[:, None], 0.0)
         else:
             dd = 1.0 - dots
         return jnp.where(valid, dd, _INF)
@@ -222,10 +327,10 @@ def device_search(
         rank_f = rank.reshape(B, F)
         # dedupe across layers: drop an entry if a better-ranked eligible
         # entry carries the same id (the host marks it visited first).
-        eq = ids_f[:, :, None] == ids_f[:, None, :]  # [B, F, F]
-        better = rank_f[:, None, :] < rank_f[:, :, None]
-        dup = jnp.any(eq & better & (rank_f[:, None, :] < _BIG), axis=2)
-        rank_f = jnp.where(dup, _BIG, rank_f)
+        if pipeline == "reference":
+            ids_f, rank_f = _hop_ref.dedupe_pairwise(ids_f, rank_f)
+        else:
+            ids_f, rank_f = _dedupe_sorted(ids_f, rank_f, n, F)
 
         neg, sel_pos = lax.top_k(-rank_f, K)  # best (smallest) K ranks
         sel_valid = (-neg) < _BIG
@@ -239,20 +344,21 @@ def device_search(
         )
         vbits2 = vbits.at[jnp.arange(B)[:, None], wsel].add(bsel.astype(jnp.uint32))
 
-        # ---- batched distance evaluation ----
+        # ---- fused gather + distance evaluation ----
         dd = eval_dists(sel_ids, sel_valid)  # [B, K]
         dc2 = dc + jnp.sum(sel_valid, axis=1).astype(jnp.int32)
 
         # ---- merge into the sorted fixed-width result set ----
         new_i = jnp.where(sel_valid, sel_ids, -1)
         new_e = ~sel_valid  # invalid entries act as expanded padding
-        cat_d = jnp.concatenate([res_d, dd], axis=1)
-        cat_i = jnp.concatenate([res_i, new_i], axis=1)
-        cat_e = jnp.concatenate([res_e2, new_e], axis=1)
-        srt_d, srt_i, srt_e = lax.sort(
-            (cat_d, cat_i, cat_e.astype(jnp.int32)), dimension=1, num_keys=1
-        )
-        nres_d, nres_i, nres_e = srt_d[:, :W], srt_i[:, :W], srt_e[:, :W] > 0
+        if pipeline == "reference":
+            nres_d, nres_i, nres_e = _hop_ref.merge_full_sort(
+                res_d, res_i, res_e2, dd, new_i, new_e, W
+            )
+        else:
+            nres_d, nres_i, nres_e = _merge_sorted(
+                res_d, res_i, res_e2, dd, new_i, new_e, W
+            )
 
         # ---- commit only for queries that worked this hop ----
         res_d = jnp.where(act[:, None], nres_d, res_d)
@@ -276,7 +382,8 @@ def search_batch(
     ranges: np.ndarray,
     k: int = 10,
     width: int = 64,
-    use_kernel: bool = False,
+    backend: str = "auto",
+    pipeline: str = "fused",
 ) -> SearchResult:
     """Convenience host wrapper: snapshot -> device arrays -> search."""
     di = to_device_index(snap)
@@ -289,5 +396,6 @@ def search_batch(
         m=snap.m,
         o=snap.o,
         metric="l2" if snap.metric == "l2" else "cosine",
-        use_kernel=use_kernel,
+        backend=backend,
+        pipeline=pipeline,
     )

@@ -36,7 +36,8 @@ def make_serving_fn(
     k: int = 10,
     width: int = 64,
     data_axis: str = "data",
-    use_kernel: bool = False,
+    backend: str = "auto",
+    pipeline: str = "fused",
 ):
     """jit-compiled query-sharded serving function.
 
@@ -54,7 +55,8 @@ def make_serving_fn(
         m=snap.m,
         o=snap.o,
         metric="l2" if snap.metric == "l2" else "cosine",
-        use_kernel=use_kernel,
+        backend=backend,
+        pipeline=pipeline,
     )
     di = DeviceIndex(
         vectors=jnp.asarray(snap.vectors, jnp.float32),

@@ -1,0 +1,63 @@
+"""Pre-refactor ``device_search`` hop stages — kept as the parity oracle.
+
+These are the original (correct but slow) implementations of the three hop
+stages that the fused pipeline in ``device_search`` replaced:
+
+  * ``dedupe_pairwise``   — O(F^2) all-pairs duplicate mask ([B, F, F]
+    intermediate, F = L*m);
+  * ``merge_full_sort``   — full-width ``lax.sort`` over [B, W+K] to merge K
+    new candidates into the already-sorted width-W result array;
+  * ``eval_materialized`` — XLA gather of a [B, K, d] candidate tensor
+    followed by a batched dot (the HBM round-trip the slab kernel fuses
+    away), with the cached per-vertex squared norms gathered separately.
+
+``device_search(..., pipeline="reference")`` runs the hop with these stages;
+parity tests assert bitwise-identical ids and matching DC/hop counters
+against the fused pipeline, and benchmarks time old vs new.  Do not use in
+production serving — every stage here is strictly dominated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# numpy (not jnp) scalars: this module may first be imported inside a jit
+# trace, and jnp constants created there would leak as tracers
+_INF = np.float32(np.inf)
+_BIG = np.int32(2**30)
+
+
+def dedupe_pairwise(ids_f: jax.Array, rank_f: jax.Array):
+    """All-pairs dedupe: drop an entry if a better-ranked eligible entry
+    carries the same id (the host marks it visited first).  Returns the
+    (ids, masked ranks) pair in the original flattened order."""
+    eq = ids_f[:, :, None] == ids_f[:, None, :]  # [B, F, F]
+    better = rank_f[:, None, :] < rank_f[:, :, None]
+    dup = jnp.any(eq & better & (rank_f[:, None, :] < _BIG), axis=2)
+    return ids_f, jnp.where(dup, _BIG, rank_f)
+
+
+def merge_full_sort(res_d, res_i, res_e, dd, new_i, new_e, W: int):
+    """Merge K new entries by sorting the full [B, W+K] concatenation."""
+    cat_d = jnp.concatenate([res_d, dd], axis=1)
+    cat_i = jnp.concatenate([res_i, new_i], axis=1)
+    cat_e = jnp.concatenate([res_e, new_e], axis=1)
+    srt_d, srt_i, srt_e = lax.sort(
+        (cat_d, cat_i, cat_e.astype(jnp.int32)), dimension=1, num_keys=1
+    )
+    return srt_d[:, :W], srt_i[:, :W], srt_e[:, :W] > 0
+
+
+def eval_materialized(vectors, sq_norms, idc, queries, backend: str):
+    """Gather a [B, K, d] candidate tensor in HBM, then dot.  Returns
+    (dots, v2) with v2 taken from the cached norm table."""
+    vecs = vectors[idc]
+    if backend == "ref":
+        dots = jnp.einsum("bkd,bd->bk", vecs, queries)
+    else:
+        from repro.kernels.ops import batched_dot
+
+        dots = batched_dot(vecs, queries, backend=backend)
+    return dots, sq_norms[idc]

@@ -174,11 +174,20 @@ def rng_prune(
     ``dist(target, c) < dist(c, s)`` — i.e. the edge (target, c) is not the
     longest edge of any triangle with a kept neighbor.  The candidate-to-kept
     distances come from one BLAS pairwise matrix.
+
+    Leftover slots are backfilled with the nearest pruned candidates
+    (hnswlib's ``keepPrunedConnections``): in duplicate-heavy attribute
+    regions the RNG filter alone can leave vertices under-connected, which
+    measurably costs recall.
     """
     cand = sorted(set(candidates), key=lambda t: t[0])
     if not cand:
         return []
-    if len(cand) <= max_m == 1 or len(cand) == 1:
+    # Short-circuit: a candidate set that already fits needs no pruning, and
+    # with max_m == 1 the prune always keeps exactly the nearest candidate.
+    # (Historically written as the chained comparison `len(cand) <= max_m
+    # == 1`, which only ever fired for max_m == 1.)
+    if len(cand) <= max_m or max_m == 1:
         return cand[:max_m]
     ids = np.asarray([j for _, j in cand], dtype=np.int64)
     xs = store.vectors[ids]
@@ -189,6 +198,7 @@ def rng_prune(
         pair = 1.0 - xs @ xs.T
     selected: list[tuple[float, int]] = []
     sel_rows: list[int] = []
+    pruned: list[tuple[float, int]] = []
     for i, (d, j) in enumerate(cand):
         if len(selected) >= max_m:
             break
@@ -200,4 +210,8 @@ def rng_prune(
         if ok:
             selected.append((d, j))
             sel_rows.append(i)
+        else:
+            pruned.append((d, j))
+    if len(selected) < max_m:  # keepPrunedConnections backfill
+        selected.extend(pruned[: max_m - len(selected)])
     return selected

@@ -40,8 +40,12 @@ def batched_dot(
     queries: jax.Array,  # f32[B, D]
     block_b: int = 8,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:  # default: compiled on TPU, interpreter elsewhere
+        from .ops import _on_tpu
+
+        interpret = not _on_tpu()
     B, K, D = vecs.shape
     bB = min(block_b, B)
     bK = min(block_k, K)

@@ -54,13 +54,23 @@ def l2_distance(vecs, queries, sq_norms, backend: str = "auto", **kw):
     return _ref.l2_distance_ref(vecs, queries, sq_norms)
 
 
-def gather_dot(table, ids, queries, backend: str = "auto"):
+def gather_dot(table, ids, queries, backend: str = "auto", **kw):
     use, interp = _resolve(backend)
     if use:
         from .gather_distance import gather_dot as kern
 
-        return kern(table, ids, queries, interpret=interp)
+        return kern(table, ids, queries, interpret=interp, **kw)
     return _ref.gather_dot_ref(table, ids, queries)
+
+
+def gather_norm_dot(table, ids, queries, backend: str = "auto", **kw):
+    """Fused candidate gather -> (dots, sq-norms); the serving hot path."""
+    use, interp = _resolve(backend)
+    if use:
+        from .gather_distance import gather_norm_dot as kern
+
+        return kern(table, ids, queries, interpret=interp, **kw)
+    return _ref.gather_norm_dot_ref(table, ids, queries)
 
 
 def wkv6(r, k, v, w, u, state=None, backend: str = "auto", chunk: int = 32):

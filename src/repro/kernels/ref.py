@@ -26,6 +26,19 @@ def gather_dot_ref(
     return jnp.einsum("bkd,bd->bk", table[ids], queries)
 
 
+def gather_norm_dot_ref(
+    table: jax.Array, ids: jax.Array, queries: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """-> (<table[ids[b,k]], queries[b]>, |table[ids[b,k]]|^2)."""
+    n = table.shape[0]
+    idc = jnp.clip(ids, 0, n - 1)
+    vecs = table[idc]
+    return (
+        jnp.einsum("bkd,bd->bk", vecs, queries),
+        jnp.einsum("bkd,bkd->bk", vecs, vecs),
+    )
+
+
 def wkv6_ref(
     r: jax.Array,  # [B, H, T, N]
     k: jax.Array,  # [B, H, T, N]

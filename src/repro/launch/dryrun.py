@@ -227,6 +227,8 @@ def build_cell(
     TUNING.attn_seq_axis = saved_seq_axis
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     if verbose:
         print(compiled.memory_analysis())  # proves it fits

@@ -20,6 +20,11 @@ def main() -> None:
     ap.add_argument("--ef-construction", type=int, default=64)
     ap.add_argument("--o", type=int, default=4)
     ap.add_argument("--mesh", default="", help='e.g. "4x2" -> (data, model)')
+    ap.add_argument("--backend", default="auto", choices=("auto", "pallas", "ref"),
+                    help="distance-kernel dispatch (see repro.kernels.ops)")
+    ap.add_argument("--pipeline", default="fused", choices=("fused", "reference"),
+                    help="hop pipeline: fused (production) or the pre-refactor "
+                         "reference (parity/benchmark oracle)")
     args = ap.parse_args()
 
     import numpy as np
@@ -46,12 +51,15 @@ def main() -> None:
 
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = make_host_mesh((d, m), ("data", "model"))
-        serve = make_serving_fn(mesh, snap, k=args.k, width=args.width)
+        serve = make_serving_fn(mesh, snap, k=args.k, width=args.width,
+                                backend=args.backend, pipeline=args.pipeline)
         res = serve(wl.queries, wl.ranges)
     else:
         from ..core.device_search import search_batch
 
-        res = search_batch(snap, wl.queries, wl.ranges, k=args.k, width=args.width)
+        res = search_batch(snap, wl.queries, wl.ranges, k=args.k,
+                           width=args.width, backend=args.backend,
+                           pipeline=args.pipeline)
     import numpy as np
 
     ids = np.asarray(res.ids)

@@ -87,15 +87,23 @@ class LMServer:
 
 
 class RagPipeline:
-    """WoW-backed range-filtered retrieval for LM serving."""
+    """WoW-backed range-filtered retrieval for LM serving.
+
+    ``backend`` selects the distance-kernel dispatch for the batched device
+    path (``repro.kernels.ops`` policy: "auto" = compiled Pallas on TPU, jnp
+    reference elsewhere); single-query ``retrieve`` stays on the host index.
+    """
 
     def __init__(self, server: LMServer, dim: int, m: int = 16,
-                 ef_construction: int = 64, o: int = 4):
+                 ef_construction: int = 64, o: int = 4, backend: str = "auto"):
         from ..core import WoWIndex
 
         self.server = server
         self.index = WoWIndex(dim=dim, m=m, ef_construction=ef_construction, o=o)
         self.docs: list = []
+        self.backend = backend
+        self._snap = None
+        self._snap_key = None
 
     def add_document(self, doc_tokens: np.ndarray, attr: float, payload=None) -> int:
         emb = self.server.embed(doc_tokens[None, :])[0]
@@ -108,3 +116,28 @@ class RagPipeline:
         q = self.server.embed(query_tokens[None, :])[0]
         ids, dists, stats = self.index.search(q, attr_range, k=k, ef=ef)
         return ids, dists, stats
+
+    def retrieve_batch(self, query_tokens: np.ndarray, attr_ranges: np.ndarray,
+                       k: int = 5, width: int = 48):
+        """Batched retrieval on the device path (fused hop pipeline).
+
+        ``query_tokens`` [B, T] int32, ``attr_ranges`` [B, 2] -> (ids, dists)
+        with ids mapped back to WoWIndex vertex ids (-1 padded).  Snapshots
+        the index lazily and reuses the snapshot until new documents arrive.
+        """
+        from ..core.device_search import search_batch
+        from ..core.snapshot import take_snapshot
+
+        # store.n is monotonic and deletions change the deleted set, so this
+        # key changes on any mutation (len(index) alone would miss a
+        # delete-then-insert pair)
+        key = (self.index.store.n, len(self.index.deleted))
+        if self._snap is None or self._snap_key != key:
+            self._snap = take_snapshot(self.index)
+            self._snap_key = key
+        qs = self.server.embed(query_tokens)
+        res = search_batch(self._snap, qs, np.asarray(attr_ranges, np.float32),
+                           k=k, width=width, backend=self.backend)
+        ids = np.asarray(res.ids)
+        mapped = np.where(ids >= 0, self._snap.ids_map[np.clip(ids, 0, None)], -1)
+        return mapped, np.asarray(res.dists)

@@ -1,0 +1,86 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The container image doesn't ship hypothesis and nothing may be installed, so
+the property tests fall back to this stub: ``@given`` draws a fixed number of
+pseudo-random examples from a seed derived from the test name (deterministic
+across runs), ``@settings`` only honours ``max_examples``.  Shrinking,
+the database, and rich strategies are intentionally out of scope — this
+keeps the property tests as *randomised regression tests* rather than
+skipping them wholesale.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 25
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 100):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan: bool = False, **_kw):
+        return _Strategy(
+            lambda rng: float(rng.uniform(float(min_value), float(max_value)))
+        )
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+              unique: bool = False):
+        def draw(rng: np.random.Generator):
+            size = int(rng.integers(min_size, max_size + 1))
+            if not unique:
+                return [elements.example(rng) for _ in range(size)]
+            out: list = []
+            seen = set()
+            for _ in range(50 * max(size, 1)):
+                if len(out) >= size:
+                    break
+                v = elements.example(rng)
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+            return out
+
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strats))
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -3,7 +3,11 @@ straggler coordination, gradient compression with error feedback."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # image has no hypothesis; see the stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.train.compress import dequantize, init_error_feedback, quantize
 from repro.train.elastic import Coordinator, shard_rows

@@ -139,3 +139,28 @@ def test_incremental_equals_from_scratch_quality(small_workload):
         # map: index ids refer to insertion order; translate to original ids
         recs.append(recall(order[ids], gold))
     assert np.mean(recs) >= 0.9
+
+
+def test_rng_prune_short_circuit_and_prune():
+    """Regression for the chained-comparison bug (`len(cand) <= max_m == 1`
+    parsed as `len(cand) <= max_m and max_m == 1`): the fits-already
+    short-circuit must fire for max_m > 1, and real pruning must still
+    apply when the candidate set exceeds max_m."""
+    from repro.core.search import rng_prune
+    from repro.core.store import VectorStore
+
+    store = VectorStore(dim=2)
+    target = np.array([0.0, 0.0], np.float32)
+    # c1 shadows c2 under the RNG rule: dist(c1, c2) < dist(target, c2)
+    pts = [(1.0, 0.0), (1.2, 0.1), (0.0, 3.0)]
+    ids = [store.append(np.array(p, np.float32), float(i)) for i, p in enumerate(pts)]
+    d = [float(np.sum((np.array(p) - target) ** 2)) for p in pts]
+    cand = sorted(zip(d, ids))
+
+    # fits already (3 <= 4): short-circuit keeps all three, no RNG filtering
+    assert rng_prune(store, target, cand, max_m=4) == cand
+    # needs pruning (3 > 2): the shadowed c2 is dropped, not just truncated
+    kept = rng_prune(store, target, cand, max_m=2)
+    assert [j for _, j in kept] == [ids[0], ids[2]]
+    # max_m == 1 short-circuit: exactly the nearest candidate
+    assert rng_prune(store, target, cand, max_m=1) == cand[:1]

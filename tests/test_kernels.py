@@ -7,7 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.distance import batched_dot, l2_distance
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gather_distance import gather_dot
+from repro.kernels.gather_distance import gather_dot, gather_norm_dot
 from repro.kernels.rwkv6 import wkv6
 
 RNG = np.random.default_rng(0)
@@ -44,6 +44,49 @@ def test_gather_dot_sweep(n, B, K, D):
     qs = jnp.asarray(RNG.normal(size=(B, D)), jnp.float32)
     out = gather_dot(table, ids, qs, interpret=True)
     np.testing.assert_allclose(out, ref.gather_dot_ref(table, ids, qs), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,B,K,D,rows", [
+    (50, 2, 7, 16, 4),    # ragged K: padded up to a rows multiple
+    (200, 4, 33, 8, 8),
+    (33, 1, 1, 5, 8),     # rows clamped to K
+    (64, 5, 9, 128, 3),
+])
+def test_gather_norm_dot_slab_sweep(n, B, K, D, rows):
+    """Blocked slab kernel: fused dots + in-kernel squared norms, with
+    double-buffered row DMAs and K padding."""
+    table = jnp.asarray(RNG.normal(size=(n, D)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, n, size=(B, K)), jnp.int32)
+    qs = jnp.asarray(RNG.normal(size=(B, D)), jnp.float32)
+    dots, v2 = gather_norm_dot(table, ids, qs, rows=rows, interpret=True)
+    ed, ev = ref.gather_norm_dot_ref(table, ids, qs)
+    np.testing.assert_allclose(dots, ed, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(v2, ev, rtol=1e-5, atol=1e-5)
+    # out-of-range ids are clipped, not OOB
+    bad = jnp.full((B, K), n + 99, jnp.int32)
+    dots_b, _ = gather_norm_dot(table, bad, qs, rows=rows, interpret=True)
+    np.testing.assert_allclose(
+        dots_b, jnp.broadcast_to(table[n - 1] @ qs.T, (K, B)).T, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_interpret_default_resolves_from_platform():
+    """The kernels' `interpret=None` default must resolve from the platform
+    (interpreter off-TPU, compiled kernel on TPU) — direct callers shouldn't
+    need to pass it.  Off-TPU this exercises the interpret fallback; on TPU
+    the same calls exercise the compiled path."""
+    table = jnp.asarray(RNG.normal(size=(20, 8)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, 20, size=(2, 4)), jnp.int32)
+    qs = jnp.asarray(RNG.normal(size=(2, 8)), jnp.float32)
+    dots, _ = gather_norm_dot(table, ids, qs)  # no interpret kwarg
+    np.testing.assert_allclose(
+        dots, ref.gather_dot_ref(table, ids, qs), rtol=1e-5, atol=1e-5
+    )
+    vecs = jnp.asarray(RNG.normal(size=(2, 4, 8)), jnp.float32)
+    out = batched_dot(vecs, qs)  # no interpret kwarg
+    np.testing.assert_allclose(
+        out, ref.batched_dot_ref(vecs, qs), rtol=1e-5, atol=1e-5
+    )
 
 
 @pytest.mark.parametrize("B,H,T,N,chunk", [(1, 1, 16, 8, 4), (2, 3, 64, 16, 16), (1, 2, 96, 32, 32)])

@@ -2,7 +2,11 @@
 BB[alpha] balance invariants, Algorithm 4/5 semantics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # image has no hypothesis; see the stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.wbt import WBT
 
