@@ -1,18 +1,32 @@
 """Beyond-paper: device batched search (the TPU serving path) — throughput
-vs the host reference, old vs new hop pipeline (end-to-end and per stage),
+vs the host reference, hop-pipeline variants (end-to-end and per stage),
 result parity, batch scaling.
 
 Emits the usual CSV rows plus a machine-readable ``BENCH_device.json`` at
 the repo root so the serving-path perf trajectory is tracked across PRs:
 
   stages.{dedupe,merge}.{reference,fused}_us   per-call stage latency
+  stages.writeback.{scatter,onehot}_us         counting-merge src writeback
   eval.{reference,fused}_us                    candidate distance evaluation
-  device_search.<B>.{reference,fused}_qps      end-to-end hop-pipeline QPS
+  device_search.<B>.<variant>_qps              end-to-end hop-loop QPS for
+      variants: reference (pre-refactor stages), fused (PR 1 pipeline,
+      bitmap visited, lock-step), fused_hash (hashed visited filter),
+      fused_compact (ragged-batch compaction), fused_hash_compact (both —
+      the production configuration at scale)
+  hop_histogram                                hops-to-termination per query
+      (counts per bucket + percentiles) — the raggedness that compaction
+      reclaims: a lock-step batch pays max, a compacted batch ~p50
   host_qps                                     instrumented host reference
 
 The end-to-end numbers are authoritative: stage timings are standalone
 jitted calls and carry per-dispatch overhead that the real hop body (where
 the stages fuse into the ``while_loop``) does not pay.
+
+CLI: ``python -m benchmarks.bench_device [--smoke] [--profile DIR]``.
+``--smoke`` runs a tiny workload (CI: exercises every variant end to end
+without the full build); ``--profile DIR`` wraps one fused run per batch
+size in a ``jax.profiler`` trace for per-hop attribution in TensorBoard /
+Perfetto.
 """
 from __future__ import annotations
 
@@ -26,6 +40,21 @@ from .common import BENCH_D, BENCH_N, build_wow, emit, write_csv
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# end-to-end variants: name -> device_search overrides.  The compaction
+# schedule (16, 8) matches the bench workload's hop histogram (mean 30,
+# p50 46, max 55): the first boundary retires the short-hop third of the
+# batch, and the 8-hop long phase tracks the straggler tail down through
+# the 1.5x-granularity buckets (96 -> 64 -> 48 -> ...); boundaries are
+# cheap because harvest reads are deferred and same-bucket boundaries
+# skip the gather.
+_VARIANTS = {
+    "reference": dict(pipeline="reference"),
+    "fused": dict(),
+    "fused_hash": dict(visited="hash"),
+    "fused_compact": dict(compact=(16, 8)),
+    "fused_hash_compact": dict(visited="hash", compact=(16, 8)),
+}
+
 
 def _time_us(fn, reps=20):
     fn()  # compile / warm up
@@ -36,7 +65,8 @@ def _time_us(fn, reps=20):
 
 
 def _stage_bench(snap, W=48, B=128, seed=0):
-    """Per-stage microbenchmark: old vs new dedupe / merge / distance eval."""
+    """Per-stage microbenchmark: old vs new dedupe / merge / distance eval,
+    plus the two counting-merge writeback formulations."""
     import jax
     import jax.numpy as jnp
 
@@ -46,7 +76,7 @@ def _stage_bench(snap, W=48, B=128, seed=0):
         _merge_sorted,
         to_device_index,
     )
-    from repro.kernels.ops import gather_norm_dot
+    from repro.kernels.ops import gather_norm_dot, merge_src_indices
 
     rng = np.random.default_rng(seed)
     di = to_device_index(snap)
@@ -65,6 +95,10 @@ def _stage_bench(snap, W=48, B=128, seed=0):
     dd = jnp.asarray(rng.random((B, K)).astype(np.float32))
     new_i = jnp.asarray(rng.integers(0, n, size=(B, K)), jnp.int32)
     new_e = jnp.asarray(rng.random((B, K)) < 0.2)
+    # a valid merged-position bijection for the writeback bench
+    perm = np.argsort(rng.random((B, W + K)), axis=1).astype(np.int32)
+    pos_a = jnp.asarray(perm[:, :W])
+    pos_b = jnp.asarray(perm[:, W:])
 
     sel = jnp.asarray(rng.integers(0, n, size=(B, K)), jnp.int32)
     qs = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
@@ -73,6 +107,8 @@ def _stage_bench(snap, W=48, B=128, seed=0):
     ded_new = jax.jit(lambda i, r: _dedupe_sorted(i, r, n, F)[1])
     mrg_ref = jax.jit(lambda *a: hr.merge_full_sort(*a, W)[0])
     mrg_new = jax.jit(lambda *a: _merge_sorted(*a, W)[0])
+    wb_sc = jax.jit(lambda a, b: merge_src_indices(a, b, W, K, "scatter"))
+    wb_oh = jax.jit(lambda a, b: merge_src_indices(a, b, W, K, "onehot"))
     ev_ref = jax.jit(
         lambda s, q: hr.eval_materialized(di.vectors, di.sq_norms, s, q, "ref")[0]
     )
@@ -92,6 +128,10 @@ def _stage_bench(snap, W=48, B=128, seed=0):
                 lambda: mrg_new(res_d, res_i, res_e, dd, new_i, new_e).block_until_ready()
             ),
         },
+        "writeback": {
+            "scatter_us": _time_us(lambda: wb_sc(pos_a, pos_b).block_until_ready()),
+            "onehot_us": _time_us(lambda: wb_oh(pos_a, pos_b).block_until_ready()),
+        },
         "eval": {
             "reference_us": _time_us(lambda: ev_ref(sel, qs).block_until_ready()),
             "fused_us": _time_us(lambda: ev_new(sel, qs).block_until_ready()),
@@ -99,7 +139,31 @@ def _stage_bench(snap, W=48, B=128, seed=0):
     }
 
 
-def run() -> list[list]:
+def _hop_histogram(hops: np.ndarray) -> dict:
+    """Hops-to-termination distribution — the lock-step waste estimator."""
+    edges = [0, 8, 16, 32, 64, 128, 256, 1024]
+    counts, _ = np.histogram(hops, bins=edges)
+    pct = np.percentile(hops, [50, 90, 99, 100])
+    return {
+        "bin_edges": edges,
+        "counts": [int(c) for c in counts],
+        "p50": float(pct[0]),
+        "p90": float(pct[1]),
+        "p99": float(pct[2]),
+        "max": float(pct[3]),
+        "mean": round(float(np.mean(hops)), 1),
+    }
+
+
+def _block(res):
+    """Works for both device-array and (compacted) host-array results."""
+    ids = res.ids
+    if hasattr(ids, "block_until_ready"):
+        ids.block_until_ready()
+    return res
+
+
+def run(smoke: bool = False, profile_dir: str | None = None) -> list[list]:
     import jax
     import jax.numpy as jnp
 
@@ -108,8 +172,11 @@ def run() -> list[list]:
     from repro.core.snapshot import take_snapshot
 
     rows = []
-    n = max(BENCH_N // 2, 1200)
-    wl = make_workload(n=n, d=BENCH_D, nq=128, seed=8, k=10)
+    if smoke:
+        n, nq, batches, reps = 300, 32, (16, 32), 1
+    else:
+        n, nq, batches, reps = max(BENCH_N // 2, 1200), 128, (16, 64, 128), 10
+    wl = make_workload(n=n, d=BENCH_D, nq=nq, seed=8, k=10)
     idx = build_wow(wl)
     snap = take_snapshot(idx)
 
@@ -125,36 +192,53 @@ def run() -> list[list]:
     qs = jnp.asarray(wl.queries, jnp.float32)
     rr = jnp.asarray(wl.ranges, jnp.float32)
     e2e = {}
-    for B in (16, 64, 128):
+    hop_hist = None
+    for B in batches:
         qb, rb = qs[:B], rr[:B]
         e2e[str(B)] = {}
-        for pipeline in ("reference", "fused"):
-            res = device_search(di, qb, rb, k=10, width=48, m=snap.m, o=snap.o,
-                                pipeline=pipeline)
-            res.ids.block_until_ready()  # compile
-            t0 = time.perf_counter()
-            reps = 3
-            for _ in range(reps):
-                res = device_search(di, qb, rb, k=10, width=48, m=snap.m,
-                                    o=snap.o, pipeline=pipeline)
-                res.ids.block_until_ready()
-            dev_qps = B * reps / (time.perf_counter() - t0)
-            e2e[str(B)][f"{pipeline}_qps"] = round(dev_qps, 1)
+        calls, results = {}, {}
+        for name, kw in _VARIANTS.items():
+            calls[name] = (lambda kw=kw: device_search(
+                di, qb, rb, k=10, width=48, m=snap.m, o=snap.o, **kw))
+            results[name] = _block(calls[name]())  # compile / warm buckets
+        # interleave the variants across timing windows and keep each
+        # variant's best window: box noise hits all variants alike instead
+        # of whichever ran last
+        best = {name: 0.0 for name in _VARIANTS}
+        for _ in range(reps):
+            for name in _VARIANTS:
+                t0 = time.perf_counter()
+                results[name] = _block(calls[name]())
+                best[name] = max(best[name],
+                                 B / (time.perf_counter() - t0))
+        for name in _VARIANTS:
+            dev_qps = best[name]
+            res = results[name]
+            e2e[str(B)][f"{name}_qps"] = round(dev_qps, 1)
             ov = []
             dev_ids = np.asarray(res.ids)
             for i in range(B):
                 got = set(int(snap.ids_map[j]) for j in dev_ids[i] if j >= 0)
                 ov.append(len(got & host_res[i]) / max(len(host_res[i]), 1))
-            rows.append([pipeline, B, round(dev_qps, 1),
+            rows.append([name, B, round(dev_qps, 1),
                          round(float(np.mean(ov)), 4)])
-            emit(f"device_search_{pipeline}_b{B}", 1e6 / dev_qps,
+            emit(f"device_search_{name}_b{B}", 1e6 / dev_qps,
                  f"overlap={np.mean(ov):.3f};host_qps={host_qps:.0f}")
+            if name == "fused":
+                hop_hist = _hop_histogram(np.asarray(res.hops))
+        if profile_dir:  # per-hop attribution: trace one fused run
+            with jax.profiler.trace(os.path.join(profile_dir, f"b{B}")):
+                _block(device_search(di, qb, rb, k=10, width=48, m=snap.m,
+                                     o=snap.o))
+            emit(f"profile_trace_b{B}", 0.0, f"dir={profile_dir}/b{B}")
     rows.append(["host", 1, round(host_qps, 1), 1.0])
 
-    stages = _stage_bench(snap)
+    stages = _stage_bench(snap, B=64 if smoke else 128)
     for st in ("dedupe", "merge", "eval"):
         emit(f"hop_{st}_reference", stages[st]["reference_us"])
         emit(f"hop_{st}_fused", stages[st]["fused_us"])
+    emit("merge_writeback_scatter", stages["writeback"]["scatter_us"])
+    emit("merge_writeback_onehot", stages["writeback"]["onehot_us"])
 
     record = {
         "platform": jax.devices()[0].platform,
@@ -162,10 +246,29 @@ def run() -> list[list]:
                      "m": snap.m, "o": snap.o, "k": 10, "width": 48},
         "host_qps": round(host_qps, 1),
         "device_search": e2e,
+        "hop_histogram": hop_hist,
         "stages": stages,
     }
-    with open(os.path.join(_REPO_ROOT, "BENCH_device.json"), "w") as f:
-        json.dump(record, f, indent=1)
+    if not smoke:  # smoke runs must not clobber the tracked numbers
+        with open(os.path.join(_REPO_ROOT, "BENCH_device.json"), "w") as f:
+            json.dump(record, f, indent=1)
 
     write_csv("bench_device.csv", ["path", "batch", "qps", "host_overlap"], rows)
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description="device serving-path bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload: exercise every variant (CI)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="write jax.profiler traces of one fused run per "
+                         "batch size under DIR")
+    args = ap.parse_args()
+    run(smoke=args.smoke, profile_dir=args.profile)
+
+
+if __name__ == "__main__":
+    main()

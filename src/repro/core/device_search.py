@@ -1,7 +1,7 @@
 """Batched WoW search on device — the TPU serving path.
 
-Executes Algorithm 2+3 for B queries in lock-step inside one
-``lax.while_loop``.  Per hop, every active query:
+Executes Algorithm 2+3 for B queries inside a jitted hop loop.  Per hop,
+every active query:
 
   1. selects its nearest unexpanded candidate (the paper's min-heap pop),
   2. gathers that vertex's neighbor block across all layers [0, l_d],
@@ -46,35 +46,89 @@ pre-refactor stages as the parity oracle):
     counts cross positions (pos_A[i] = i + #{j : new[j] < res[i]},
     pos_B[j] = rank_new[j] + #{i : res[i] <= new[j]} — the asymmetric
     comparison reproduces the stable tie-break of the old full sort, result
-    entries before new entries), one scatter (``mode="drop"``) writes the
-    *source index* of each surviving slot, and three gathers produce the
-    merged (dist, id, expanded) arrays.  No [B, W+K] full-width sort.
+    entries before new entries), the *source index* of each surviving slot
+    is written back either by one dropping scatter or by an MXU one-hot
+    matmul (``repro.kernels.ops.merge_src_indices``; XLA scatter serialises
+    on TPU, the scatter benches faster on CPU — ``merge="auto"`` picks per
+    platform), and three gathers produce the merged (dist, id, expanded)
+    arrays.  No [B, W+K] full-width sort.
   * **Fused slab gather** — candidate vectors are fetched by the blocked
     Pallas kernel in ``repro.kernels.gather_distance``: ids are
     scalar-prefetched, [rows, D] slabs are assembled in VMEM by
     double-buffered row DMAs, and both the query dot and the squared norm
     are produced in-kernel, so candidate vectors never round-trip through
-    HBM as a [B, K, d] tensor (VMEM budget: 2*rows*D*4 bytes of slab
-    scratch; see the kernel docstring).
+    HBM as a [B, K, d] tensor.
 
-Termination per query: no unexpanded candidates, or the nearest unexpanded is
-farther than the current worst of a full result set (Alg. 2 line 6).
+Visited-set state (``visited=`` static knob) — the per-hop cost must not
+scale with the corpus:
 
-The search is a pure jittable function of (snapshot arrays, queries, ranges)
-and is shardable over the query batch (see ``repro.core.distributed``).
+  * **"bitmap"** (exact oracle) — a [B, n/32 + 1] packed bitmap.  One word
+    gather per candidate, one ``.add`` scatter per selected id (safe:
+    a selected id is by construction unvisited, so its bit is unset).
+    O(n) per-query *state*, O(1) per-candidate work.
+  * **"hash"** (production at scale) — a constant-size double-hashed
+    *blocked* Bloom filter: ``v_bits`` bits per query (power of two, sized
+    by ``visited_filter_bits`` from the expected O(width) hop budget at
+    the ``visited_fp`` false-positive target, with a 1.5x allowance for
+    block clustering), where murmur3-finalizer hash h1 picks an id's
+    32-bit *block* word and h2 derives ``v_hashes`` distinct bit offsets inside
+    it (``(b0 + i*step) & 31`` with odd step).  Blocking is the classic
+    cache/SIMD-friendly Bloom variant and is what keeps the per-hop cost
+    at bitmap parity: membership is ONE word gather (same width as the
+    bitmap path) plus an AND-mask compare, regardless of ``v_hashes``.
+    Marking must be an OR (unlike the bitmap, probe bits of an *unvisited*
+    id may already be set by other ids), which XLA scatters cannot express
+    directly: per-id 2-bit masks landing in the same word are OR-combined
+    via a tiny [K, K] equal-word ``lax.reduce``, merged with the gathered
+    current words, and written with a ``.set`` scatter (colliding lanes
+    write identical values).  A false positive only *skips* a candidate —
+    it can never cause an out-of-range vertex to be evaluated — so the
+    no-OOR property is invariant and recall degrades gracefully with
+    filter load.
+
+Scheduling (``compact=`` knob) — the hop loop must not run at the pace of
+the slowest query in the batch:
+
+  * ``compact=None`` — one lock-step ``lax.while_loop`` over the whole
+    batch (the only mode usable inside an outer jit, e.g. the sharded
+    serving function).
+  * ``compact=(h0, h)`` — ragged-batch compaction: the hop state is an
+    explicit ``HopState`` pytree, so the loop runs as resumable chunks of
+    ``h0`` (first phase) then ``h`` (long phase) hops; between chunks the
+    still-active queries are compacted into the next power-of-two batch
+    bucket (each bucket size compiles once) and only the survivors resume.
+    The short/long schedule lets the fast majority of a ragged batch exit
+    after the first chunk while stragglers continue in a small bucket.
+    Finished queries are harvested at chunk boundaries; per-query
+    trajectories are iteration-indexed and independent, so results are
+    bitwise identical to the lock-step loop.
+
+Entry-point fold: hop 0 *is* the entry-point evaluation — the seed
+iteration injects the entry vertex as the sole selected candidate through
+the same select/eval/merge lanes as every other hop (no standalone K=1
+kernel dispatch, no separate visited seeding).  The seed iteration does not
+count as a hop, preserving the host path's DC/hop accounting.
+
+Termination per query: no unexpanded candidates, or the nearest unexpanded
+is farther than the current worst of a full result set (Alg. 2 line 6).
+
+The lock-step search is a pure jittable function of (snapshot arrays,
+queries, ranges) and is shardable over the query batch — all per-query
+state including the visited filter is leading-dim-B, so it shards over the
+``data`` axis by propagation (see ``repro.core.distributed``).
 Out-of-range vertices are never distance-evaluated, preserving the paper's
-no-OOR property; per-query DC and hop counters are returned for parity tests
-against the instrumented host path.
+no-OOR property; per-query DC and hop counters are returned for parity
+tests against the instrumented host path.
 
-Knobs (both static): ``backend`` dispatches the distance kernel like every
-other kernel in ``repro.kernels.ops`` ("auto" = compiled Pallas on TPU, jnp
-reference elsewhere; "pallas" forces the kernel, interpreted off-TPU; "ref"
-forces the jnp oracle); ``pipeline`` selects "fused" (production) or
-"reference" (the pre-refactor hop, for parity and benchmarks).
+Knobs (all static): ``backend`` dispatches the distance kernel like every
+other kernel in ``repro.kernels.ops``; ``pipeline`` selects "fused"
+(production) or "reference" (the pre-refactor hop, for parity and
+benchmarks); ``visited``, ``compact`` and ``merge`` as above.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple
 
 import jax
@@ -87,6 +141,7 @@ from .snapshot import Snapshot
 
 _INF = jnp.float32(np.inf)
 _BIG = jnp.int32(2**30)
+_MIN_BUCKET = 8  # smallest compaction bucket (avoid degenerate compiles)
 
 
 class DeviceIndex(NamedTuple):
@@ -118,6 +173,225 @@ class SearchResult(NamedTuple):
     hops: jax.Array  # i32[B]
 
 
+class HopCfg(NamedTuple):
+    """Static hop-loop configuration (hashable jit key)."""
+
+    k: int
+    width: int
+    m: int
+    o: int
+    metric: str
+    max_hops: int
+    backend: str
+    pipeline: str
+    visited: str  # "bitmap" | "hash"
+    v_words: int  # hash-filter words per query (0 for bitmap)
+    v_hashes: int
+    merge: str  # counting-merge writeback: "auto" | "scatter" | "onehot"
+
+
+class HopState(NamedTuple):
+    """Resumable per-query hop state — every field is leading-dim B except
+    the scalar iteration counter ``t``, so chunk-boundary compaction is one
+    row gather and query sharding propagates to the whole state."""
+
+    queries: jax.Array  # f32[B, d] (normalised for cosine)
+    q2: jax.Array  # f32[B]
+    x: jax.Array  # f32[B] range lo
+    y: jax.Array  # f32[B] range hi
+    l_d: jax.Array  # i32[B] landing layer
+    ep: jax.Array  # i32[B] entry vertex (clipped; consumed by the seed hop)
+    res_d: jax.Array  # f32[B, W] sorted result distances
+    res_i: jax.Array  # i32[B, W]
+    res_e: jax.Array  # bool[B, W] expanded
+    vstate: jax.Array  # u32[B, Vw+1] visited filter (+1 trash word)
+    active: jax.Array  # bool[B]
+    dc: jax.Array  # i32[B]
+    hops: jax.Array  # i32[B]
+    t: jax.Array  # i32 scalar — global iteration counter (0 = seed)
+
+
+def _pow2ceil(x: int) -> int:
+    return 1 << max(0, (int(x) - 1)).bit_length()
+
+
+def _bucket_ceil(x: int) -> int:
+    """Compaction bucket size: smallest of {pow2, 1.5*pow2} >= x.  The
+    half-step granularity (8, 12, 16, 24, 32, 48, 64, 96, 128, ...) is what
+    makes mid-drain compaction pay: a 128-batch with 68 survivors shrinks
+    to 96 instead of staying at 128, at a bounded number of compiled
+    bucket shapes."""
+    x = max(int(x), _MIN_BUCKET)
+    p = 1 << (x - 1).bit_length()
+    return p * 3 // 4 if p * 3 // 4 >= x else p
+
+
+def visited_filter_bits(
+    width: int,
+    m: int,
+    max_hops: int,
+    fp: float = 0.02,
+    hashes: int = 2,
+) -> int:
+    """Hash-filter size (bits, power of two) for the search budget.
+
+    At most ``m+1`` ids are inserted per hop; the *expected* hop budget is
+    O(width) — the sorted beam drains after about ``width`` expansions, so
+    sizing to ``min(max_hops, 2*width + 64)`` hops covers real searches
+    with margin while keeping the state small (a runaway query that
+    exceeds the budget degrades to graceful extra skipping, not to O(n) or
+    O(max_hops) state).  The classic Bloom load formula
+    ``fp = (1 - exp(-nh*I/bits))^nh`` is solved for ``bits`` at that
+    insertion budget, padded 1.5x as a clustering allowance for the 32-bit
+    blocked layout, and rounded up to a power of two (so block indices
+    reduce with a mask, not a modulo).
+    """
+    budget = (min(max_hops, 2 * width + 64) + 1) * (m + 1)
+    p1 = fp ** (1.0 / hashes)
+    need = 1.5 * hashes * budget / -math.log1p(-p1)
+    return 1 << max(10, math.ceil(math.log2(need)))
+
+
+def _hash_probe(ids: jax.Array):
+    """One murmur3-fmix32 hash per id -> (block hash, first bit offset b0,
+    odd offset stride).  The single 5-op mix keeps per-hop hashing cheap
+    enough that the filter test matches the exact bitmap's cost; reusing
+    one hash for block and offsets is fine for a visited filter (ids are
+    not adversarial).  Must stay bit-identical to the numpy twin
+    ``repro.core.search.hash_positions_np``."""
+    h = ids.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    b0 = (h >> 16) & 31
+    step = ((h >> 21) & 31) | jnp.uint32(1)
+    return h, b0, step
+
+
+def _hash_wordmask(ids: jax.Array, v_words: int, nh: int):
+    """Blocked-Bloom probe of each id: -> (block word index i32[...],
+    nh-bit in-word mask u32[...]): the hash's low bits pick the block,
+    the distinct in-word bit offsets are ``(b0 + i*step) & 31``."""
+    h, b0, step = _hash_probe(ids)
+    word = (h & jnp.uint32(v_words - 1)).astype(jnp.int32)
+    mask = jnp.zeros_like(h)
+    for i in range(nh):
+        mask = mask | (jnp.uint32(1) << ((b0 + i * step) & 31))
+    return word, mask
+
+
+def _hash_positions(ids: jax.Array, v_bits: int, nh: int) -> jax.Array:
+    """Flat probe bit positions: ids i32[...] -> u32[..., nh] in
+    [0, v_bits) — the blocked layout expressed as positions (all probes of
+    one id share a 32-bit block), for the dense oracle and host twin."""
+    h, b0, step = _hash_probe(ids)
+    word = h & jnp.uint32(v_bits // 32 - 1)
+    i = jnp.arange(nh, dtype=jnp.uint32)
+    bits = (b0[..., None] + i * step[..., None]) & 31
+    return word[..., None] * 32 + bits
+
+
+def _visited_test(vstate: jax.Array, ids: jax.Array, valid: jax.Array,
+                  cfg: HopCfg) -> jax.Array:
+    """Membership of clipped ids [B, ...] in the visited filter -> bool.
+    Invalid lanes return arbitrary values (callers mask with ``valid``).
+    Both modes cost exactly one word gather per candidate."""
+    B = vstate.shape[0]
+    trash = vstate.shape[1] - 1
+    if cfg.visited == "bitmap":
+        word = jnp.where(valid, ids >> 5, trash)
+        got = jnp.take_along_axis(
+            vstate, word.reshape(B, -1), axis=1
+        ).reshape(ids.shape)
+        return ((got >> (ids & 31).astype(jnp.uint32)) & 1) > 0
+    word, mask = _hash_wordmask(ids, trash, cfg.v_hashes)
+    got = jnp.take_along_axis(
+        vstate, word.reshape(B, -1), axis=1
+    ).reshape(ids.shape)
+    return (got & mask) == mask  # AND over the block's probe bits
+
+
+def _visited_mark(vstate: jax.Array, sel_ids: jax.Array, sel_valid: jax.Array,
+                  cfg: HopCfg) -> jax.Array:
+    """Insert the selected ids [B, K] into the filter."""
+    B, K = sel_ids.shape
+    rows = jnp.arange(B)[:, None]
+    trash = vstate.shape[1] - 1
+    if cfg.visited == "bitmap":
+        # a selected id is unvisited by construction, so its bit is unset
+        # and ``add`` == OR; post-dedupe ids are distinct within a row.
+        w = jnp.where(sel_valid, sel_ids >> 5, trash)
+        b = jnp.where(
+            sel_valid, jnp.uint32(1) << (sel_ids & 31).astype(jnp.uint32), 0
+        )
+        return vstate.at[rows, w].add(b.astype(jnp.uint32))
+    word, mask = _hash_wordmask(sel_ids, trash, cfg.v_hashes)
+    w = jnp.where(sel_valid, word, trash)
+    mask = jnp.where(sel_valid, mask, 0)
+    # marking must be an OR (probe bits of an unvisited id may already be
+    # set): OR-combine masks of ids sharing a block via a [K, K] equal-word
+    # reduce, merge with the gathered current words, and write back with a
+    # ``set`` scatter — lanes sharing a word write identical values.
+    eqw = w[:, :, None] == w[:, None, :]  # [B, K, K] (tiny)
+    comb = lax.reduce(
+        jnp.where(eqw, mask[:, None, :], jnp.uint32(0)),
+        np.uint32(0), lax.bitwise_or, [2],
+    )
+    cur = jnp.take_along_axis(vstate, w, axis=1)
+    return vstate.at[rows, w].set(cur | comb)
+
+
+def _dedupe_sorted(ids_f: jax.Array, rank_f: jax.Array, n: int, F: int):
+    """Sort-based cross-layer dedupe (see module docstring).  Returns the
+    (id-sorted ids, masked ranks) pair — order differs from the input, which
+    is fine for the rank top-k that follows."""
+    if n * (F + 1) < 2**32:  # packed single-key sort (the common case)
+        rix = jnp.where(rank_f < _BIG, rank_f, F).astype(jnp.uint32)
+        skey = lax.sort(ids_f.astype(jnp.uint32) * jnp.uint32(F + 1) + rix,
+                        dimension=1)
+        sid = (skey // jnp.uint32(F + 1)).astype(jnp.int32)
+        srank = (skey % jnp.uint32(F + 1)).astype(jnp.int32)
+        srank = jnp.where(srank >= F, _BIG, srank)
+    else:  # huge tables: equivalent two-key lexsort
+        sid, srank = lax.sort((ids_f, rank_f), dimension=1, num_keys=2)
+    dup = sid[:, 1:] == sid[:, :-1]
+    srank = srank.at[:, 1:].set(jnp.where(dup, _BIG, srank[:, 1:]))
+    return sid, srank
+
+
+def _merge_sorted(res_d, res_i, res_e, dd, new_i, new_e, W: int,
+                  method: str = "auto"):
+    """Stable sort-free two-way merge of the sorted width-W result arrays
+    with K (unsorted) new entries; keeps the W nearest.  Exactly reproduces
+    the old full-width stable sort of [res | new] without materialising or
+    sorting [B, W+K].  ``method`` selects the source-index writeback (see
+    ``repro.kernels.ops.merge_src_indices``)."""
+    from repro.kernels.ops import merge_src_indices
+
+    B, K = dd.shape
+    kio = jnp.arange(K, dtype=jnp.int32)
+    # stable rank of each new entry among the K new entries (K = m+1 is
+    # tiny: one [B, K, K] comparison matrix beats any sort)
+    lt = dd[:, :, None] > dd[:, None, :]
+    eq_earlier = (dd[:, :, None] == dd[:, None, :]) & (
+        kio[None, :, None] > kio[None, None, :]
+    )
+    rank_new = jnp.sum(lt | eq_earlier, axis=2, dtype=jnp.int32)  # [B, K]
+    cmp = (res_d[:, :, None] <= dd[:, None, :]).astype(jnp.int32)  # [B, W, K]
+    pos_a = jnp.arange(W, dtype=jnp.int32)[None, :] + (K - jnp.sum(cmp, axis=2))
+    pos_b = rank_new + jnp.sum(cmp, axis=1)
+    # merged positions 0..W+K-1 are a bijection; slots >= W fall off the
+    # end.  Write back the source index of each surviving slot, then gather
+    # all three payloads.
+    src = merge_src_indices(pos_a, pos_b, W, K, method=method)
+    out_d = jnp.take_along_axis(jnp.concatenate([res_d, dd], axis=1), src, 1)
+    out_i = jnp.take_along_axis(jnp.concatenate([res_i, new_i], axis=1), src, 1)
+    out_e = jnp.take_along_axis(jnp.concatenate([res_e, new_e], axis=1), src, 1)
+    return out_d, out_i, out_e
+
+
 def _landing_and_entry(di: DeviceIndex, ranges: jax.Array, o: int, num_layers: int):
     """Alg. 3 steps 1: selectivity (via unique values), landing layer, entry."""
     x, y = ranges[:, 0], ranges[:, 1]
@@ -147,61 +421,285 @@ def _landing_and_entry(di: DeviceIndex, ranges: jax.Array, o: int, num_layers: i
     return l_d, ep, has
 
 
-def _dedupe_sorted(ids_f: jax.Array, rank_f: jax.Array, n: int, F: int):
-    """Sort-based cross-layer dedupe (see module docstring).  Returns the
-    (id-sorted ids, masked ranks) pair — order differs from the input, which
-    is fine for the rank top-k that follows."""
-    if n * (F + 1) < 2**32:  # packed single-key sort (the common case)
-        rix = jnp.where(rank_f < _BIG, rank_f, F).astype(jnp.uint32)
-        skey = lax.sort(ids_f.astype(jnp.uint32) * jnp.uint32(F + 1) + rix,
-                        dimension=1)
-        sid = (skey // jnp.uint32(F + 1)).astype(jnp.int32)
-        srank = (skey % jnp.uint32(F + 1)).astype(jnp.int32)
-        srank = jnp.where(srank >= F, _BIG, srank)
-    else:  # huge tables: equivalent two-key lexsort
-        sid, srank = lax.sort((ids_f, rank_f), dimension=1, num_keys=2)
-    dup = sid[:, 1:] == sid[:, :-1]
-    srank = srank.at[:, 1:].set(jnp.where(dup, _BIG, srank[:, 1:]))
-    return sid, srank
-
-
-def _merge_sorted(res_d, res_i, res_e, dd, new_i, new_e, W: int):
-    """Stable sort-free two-way merge of the sorted width-W result arrays
-    with K (unsorted) new entries; keeps the W nearest.  Exactly reproduces
-    the old full-width stable sort of [res | new] without materialising or
-    sorting [B, W+K]."""
-    B, K = dd.shape
-    row = jnp.arange(B)[:, None]
-    kio = jnp.arange(K, dtype=jnp.int32)
-    # stable rank of each new entry among the K new entries (K = m+1 is
-    # tiny: one [B, K, K] comparison matrix beats any sort)
-    lt = dd[:, :, None] > dd[:, None, :]
-    eq_earlier = (dd[:, :, None] == dd[:, None, :]) & (
-        kio[None, :, None] > kio[None, None, :]
+def _init_state(di: DeviceIndex, queries: jax.Array, ranges: jax.Array,
+                cfg: HopCfg) -> HopState:
+    """Empty result set, empty visited filter, entry point staged for the
+    seed iteration (hop 0 performs the entry evaluation in-loop)."""
+    B, _ = queries.shape
+    L, n, _ = di.neighbors.shape
+    W = max(cfg.width, cfg.k)
+    queries = queries.astype(jnp.float32)
+    if cfg.metric != "l2":
+        # cosine: match the host path, which normalises the query at search
+        # time (stored vectors are pre-normalised at insert)
+        qn = jnp.sqrt(jnp.sum(queries * queries, axis=1, keepdims=True))
+        queries = queries / jnp.where(qn > 0, qn, 1.0)
+    ranges = ranges.astype(jnp.float32)
+    l_d, ep, has = _landing_and_entry(di, ranges, cfg.o, L)
+    v_words = ((n + 31) // 32) if cfg.visited == "bitmap" else cfg.v_words
+    return HopState(
+        queries=queries,
+        q2=jnp.sum(queries * queries, axis=1),
+        x=ranges[:, 0],
+        y=ranges[:, 1],
+        l_d=l_d,
+        ep=jnp.where(has, ep, 0),
+        res_d=jnp.full((B, W), _INF),
+        res_i=jnp.full((B, W), -1, jnp.int32),
+        res_e=jnp.ones((B, W), jnp.bool_),  # pad = expanded
+        vstate=jnp.zeros((B, v_words + 1), jnp.uint32),
+        active=has,
+        dc=jnp.zeros(B, jnp.int32),
+        hops=jnp.zeros(B, jnp.int32),
+        t=jnp.int32(0),
     )
-    rank_new = jnp.sum(lt | eq_earlier, axis=2, dtype=jnp.int32)  # [B, K]
-    cmp = (res_d[:, :, None] <= dd[:, None, :]).astype(jnp.int32)  # [B, W, K]
-    pos_a = jnp.arange(W, dtype=jnp.int32)[None, :] + (K - jnp.sum(cmp, axis=2))
-    pos_b = rank_new + jnp.sum(cmp, axis=1)
-    # merged positions 0..W+K-1 are a bijection; slots >= W fall off the
-    # end.  One scatter of source indices, then gather all three payloads.
-    src = jnp.zeros((B, W), jnp.int32)
-    src = src.at[row, pos_a].set(
-        jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32), (B, W)), mode="drop"
+
+
+def _hop_body(di: DeviceIndex, cfg: HopCfg, st: HopState) -> HopState:
+    """One iteration of the hop loop over the whole (current) batch."""
+    B, _ = st.queries.shape
+    L, n, m = di.neighbors.shape
+    W = st.res_d.shape[1]
+    K = m + 1  # per-hop DC cap (c_n <= m admits m+1 evaluations)
+    F = L * m
+    lev = jnp.arange(L, dtype=jnp.int32)[None, :, None]  # [1, L, 1]
+    col = jnp.arange(m, dtype=jnp.int32)[None, None, :]  # [1, 1, m]
+    is_seed = st.t == 0
+
+    # ---- pop the nearest unexpanded candidate (Alg. 2 line 5) ----
+    unexp = jnp.where(st.res_e, _INF, st.res_d)  # [B, W]
+    i_star = jnp.argmin(unexp, axis=1)  # [B]
+    d_star = jnp.take_along_axis(unexp, i_star[:, None], 1)[:, 0]
+    worst = st.res_d[:, W - 1]
+    full = st.res_i[:, W - 1] >= 0
+    done = jnp.logical_or(d_star == _INF, jnp.logical_and(full, d_star > worst))
+    # queries doing work this hop; the seed iteration always works (the
+    # empty result set would otherwise read as terminated)
+    act = jnp.where(is_seed, st.active, jnp.logical_and(st.active, ~done))
+
+    s = jnp.take_along_axis(st.res_i, i_star[:, None], 1)[:, 0]
+    s = jnp.where(act & ~is_seed, s, 0)
+    res_e2 = st.res_e.at[jnp.arange(B), i_star].set(True)
+    res_e2 = jnp.where((act & ~is_seed)[:, None], res_e2, st.res_e)
+
+    # ---- gather multi-layer neighbor block ----
+    nb = jnp.transpose(di.neighbors[:, s, :], (1, 0, 2))  # [B, L, m]
+    valid = nb >= 0
+    nbc = jnp.clip(nb, 0, n - 1)
+    a_nb = di.attrs[nbc]  # [B, L, m]
+    vis = _visited_test(st.vstate, nbc, valid, cfg)
+    unvis = jnp.logical_and(valid, ~vis)
+    inr = jnp.logical_and(
+        a_nb >= st.x[:, None, None], a_nb <= st.y[:, None, None]
     )
-    src = src.at[row, pos_b].set(W + jnp.broadcast_to(kio, (B, K)), mode="drop")
-    out_d = jnp.take_along_axis(jnp.concatenate([res_d, dd], axis=1), src, 1)
-    out_i = jnp.take_along_axis(jnp.concatenate([res_i, new_i], axis=1), src, 1)
-    out_e = jnp.take_along_axis(jnp.concatenate([res_e, new_e], axis=1), src, 1)
-    return out_d, out_i, out_e
+
+    # ---- early-stop layer inclusion mask (Alg. 2 lines 7-17) ----
+    below_ld = lev <= st.l_d[:, None, None]  # [B, L, 1]
+    oor_unvis = jnp.any(
+        jnp.logical_and(unvis, ~inr) & below_ld, axis=2
+    )  # [B, L]
+    neutral = jnp.where(lev[:, :, 0] <= st.l_d[:, None], oor_unvis, True)
+    shifted = jnp.concatenate(
+        [neutral[:, 1:], jnp.ones((B, 1), jnp.bool_)], axis=1
+    )
+    include = (
+        jnp.cumprod(shifted[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1] > 0
+    )
+    include = jnp.logical_and(include, lev[:, :, 0] <= st.l_d[:, None])
+
+    elig = unvis & inr & include[:, :, None] & act[:, None, None]  # [B, L, m]
+    rank = (st.l_d[:, None, None] - lev) * m + col  # [B, L, m]
+    rank = jnp.where(elig, rank, _BIG)
+    ids_f = nbc.reshape(B, F)
+    rank_f = rank.reshape(B, F)
+    # dedupe across layers: drop an entry if a better-ranked eligible
+    # entry carries the same id (the host marks it visited first).
+    if cfg.pipeline == "reference":
+        ids_f, rank_f = _hop_ref.dedupe_pairwise(ids_f, rank_f)
+    else:
+        ids_f, rank_f = _dedupe_sorted(ids_f, rank_f, n, F)
+
+    neg, sel_pos = lax.top_k(-rank_f, K)  # best (smallest) K ranks
+    sel_valid = (-neg) < _BIG
+    sel_ids = jnp.take_along_axis(ids_f, sel_pos, axis=1)  # [B, K]
+    sel_ids = jnp.where(sel_valid, sel_ids, 0)
+
+    # ---- entry-point fold: the seed iteration selects exactly {ep} ----
+    kio = jnp.arange(K, dtype=jnp.int32)[None, :]
+    seed_valid = (kio == 0) & st.active[:, None]
+    sel_valid = jnp.where(is_seed, seed_valid, sel_valid)
+    sel_ids = jnp.where(is_seed, jnp.where(seed_valid, st.ep[:, None], 0),
+                        sel_ids)
+
+    # ---- mark visited ----
+    vstate2 = _visited_mark(st.vstate, sel_ids, sel_valid, cfg)
+
+    # ---- fused gather + distance evaluation ----
+    idc = jnp.clip(sel_ids, 0, n - 1)
+    if cfg.pipeline == "reference":
+        dots, v2 = _hop_ref.eval_materialized(
+            di.vectors, di.sq_norms, idc, st.queries, cfg.backend
+        )
+    else:
+        # fused gather+distance: no [B, K, d] HBM intermediate
+        from repro.kernels.ops import gather_norm_dot
+
+        dots, v2 = gather_norm_dot(di.vectors, idc, st.queries,
+                                   backend=cfg.backend)
+    if cfg.metric == "l2":
+        dd = jnp.maximum(v2 - 2.0 * dots + st.q2[:, None], 0.0)
+    else:
+        dd = 1.0 - dots
+    dd = jnp.where(sel_valid, dd, _INF)
+    dc2 = st.dc + jnp.sum(sel_valid, axis=1).astype(jnp.int32)
+
+    # ---- merge into the sorted fixed-width result set ----
+    new_i = jnp.where(sel_valid, sel_ids, -1)
+    new_e = ~sel_valid  # invalid entries act as expanded padding
+    if cfg.pipeline == "reference":
+        nres_d, nres_i, nres_e = _hop_ref.merge_full_sort(
+            st.res_d, st.res_i, res_e2, dd, new_i, new_e, W
+        )
+    else:
+        nres_d, nres_i, nres_e = _merge_sorted(
+            st.res_d, st.res_i, res_e2, dd, new_i, new_e, W, method=cfg.merge
+        )
+
+    # ---- commit only for queries that worked this hop ----
+    # (vstate needs no masking: an inactive row has sel_valid all-False, so
+    # its mark writes only the trash word — masking would stream the whole
+    # filter state through a select every hop, which at hash-filter sizes
+    # costs more than the hop itself)
+    return st._replace(
+        res_d=jnp.where(act[:, None], nres_d, st.res_d),
+        res_i=jnp.where(act[:, None], nres_i, st.res_i),
+        res_e=jnp.where(act[:, None], nres_e, res_e2),
+        vstate=vstate2,
+        active=act,
+        dc=jnp.where(act, dc2, st.dc),
+        hops=st.hops + (act & ~is_seed).astype(jnp.int32),
+        t=st.t + 1,
+    )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "k", "width", "m", "o", "metric", "max_hops", "backend", "pipeline"
-    ),
-)
+def _run_hops(di: DeviceIndex, st: HopState, cfg: HopCfg, h: int) -> HopState:
+    """Run up to ``h`` iterations (stops early when every query terminated;
+    the global iteration cap ``max_hops + 1`` counts the seed)."""
+
+    def cond(carry):
+        s, i = carry
+        return (
+            jnp.any(s.active) & (i < h) & (s.t < cfg.max_hops + 1)
+        )
+
+    def body(carry):
+        s, i = carry
+        return _hop_body(di, cfg, s), i + 1
+
+    st, _ = lax.while_loop(cond, body, (st, jnp.int32(0)))
+    return st
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _init_jit(di, queries, ranges, cfg):
+    return _init_state(di, queries, ranges, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "h"))
+def _run_jit(di, st, cfg, h):
+    return _run_hops(di, st, cfg, h)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _search_whole(di, queries, ranges, cfg) -> SearchResult:
+    """Lock-step path: init + one full-length hop loop, all in one jit."""
+    st = _init_state(di, queries, ranges, cfg)
+    st = _run_hops(di, st, cfg, cfg.max_hops + 1)
+    return SearchResult(
+        ids=st.res_i[:, : cfg.k], dists=st.res_d[:, : cfg.k],
+        dc=st.dc, hops=st.hops,
+    )
+
+
+@jax.jit
+def _compact_rows(st: HopState, idx: jax.Array, act_n: jax.Array) -> HopState:
+    """Gather surviving rows into the next bucket (rows >= act_n are
+    padding duplicates, forced inactive).  ``act_n`` is traced so distinct
+    survivor counts share one compilation per bucket shape."""
+    take = lambda a: jnp.take(a, idx, axis=0)
+    act = jnp.arange(idx.shape[0]) < act_n
+    return HopState(
+        queries=take(st.queries), q2=take(st.q2), x=take(st.x), y=take(st.y),
+        l_d=take(st.l_d), ep=take(st.ep), res_d=take(st.res_d),
+        res_i=take(st.res_i), res_e=take(st.res_e), vstate=take(st.vstate),
+        active=take(st.active) & act, dc=take(st.dc), hops=take(st.hops),
+        t=st.t,
+    )
+
+
+def _search_chunked(di, queries, ranges, cfg: HopCfg,
+                    compact: tuple[int, int]) -> SearchResult:
+    """Ragged-batch compaction driver (host-side scheduling, jitted chunks).
+
+    Phase 1 runs ``compact[0]`` iterations on the full (pow2-padded) batch;
+    every subsequent phase compacts the still-active queries into the next
+    pow2 bucket and runs ``compact[1]`` more.  Finished queries are
+    harvested at chunk boundaries.  Bitwise identical to the lock-step
+    loop — per-query trajectories are iteration-indexed and independent.
+    """
+    h0, h1 = compact
+    B = queries.shape[0]
+    k = cfg.k
+    out_i = np.full((B, k), -1, np.int32)
+    out_d = np.full((B, k), np.inf, np.float32)
+    out_dc = np.zeros(B, np.int32)
+    out_hops = np.zeros(B, np.int32)
+    if B == 0:
+        return SearchResult(ids=out_i, dists=out_d, dc=out_dc, hops=out_hops)
+
+    Bp = _pow2ceil(max(B, _MIN_BUCKET))
+    qp = jnp.zeros((Bp, queries.shape[1]), jnp.float32).at[:B].set(
+        jnp.asarray(queries, jnp.float32))
+    # pad rows carry an inverted (empty) range -> inactive from init
+    rp = jnp.broadcast_to(jnp.asarray([1.0, 0.0], jnp.float32), (Bp, 2))
+    rp = rp.at[:B].set(jnp.asarray(ranges, jnp.float32))
+    st = _init_jit(di, qp, rp, cfg)
+    orig = np.concatenate([np.arange(B), np.full(Bp - B, B)])  # B = sentinel
+
+    h = h0
+    t_planned = 0  # upper bound on st.t, tracked host-side (no extra sync)
+    harvests = []  # (dst rows, bucket rows, state) — materialised post-loop
+    while True:
+        st = _run_jit(di, st, cfg, h)
+        t_planned += h
+        act = np.asarray(st.active)  # the chunk-boundary sync point
+        real = orig < B
+        live = np.flatnonzero(act & real)
+        stop = live.size == 0 or t_planned >= cfg.max_hops + 1
+        leave = np.flatnonzero(real if stop else (~act & real))
+        if leave.size:  # queries leaving the bucket: defer the device->host
+            # reads to after the loop; keep only the result arrays alive
+            # (not the whole state — the visited filter dwarfs them)
+            harvests.append(
+                (orig[leave], leave, st.res_i, st.res_d, st.dc, st.hops))
+        if stop:
+            break
+        Bn = _bucket_ceil(live.size)
+        if Bn < len(orig):  # bucket shrinks: gather the survivors
+            idx = np.concatenate([live, np.full(Bn - live.size, live[0])])
+            st = _compact_rows(st, jnp.asarray(idx), jnp.int32(live.size))
+            orig = np.where(np.arange(Bn) < live.size, orig[idx], B)
+        else:  # same bucket: skip the gather, just retire harvested rows
+            orig[leave] = B
+        h = h1
+    for dst, rows_, res_i, res_d, dc_, hops_ in harvests:
+        out_i[dst] = np.asarray(res_i)[rows_, :k]
+        out_d[dst] = np.asarray(res_d)[rows_, :k]
+        out_dc[dst] = np.asarray(dc_)[rows_]
+        out_hops[dst] = np.asarray(hops_)[rows_]
+    return SearchResult(ids=out_i, dists=out_d, dc=out_dc, hops=out_hops)
+
+
 def device_search(
     di: DeviceIndex,
     queries: jax.Array,  # f32[B, d]
@@ -215,165 +713,41 @@ def device_search(
     max_hops: int | None = None,
     backend: str = "auto",
     pipeline: str = "fused",
+    visited: str = "bitmap",
+    visited_bits: int | None = None,
+    visited_fp: float = 0.02,
+    visited_hashes: int = 2,
+    merge: str = "auto",
+    compact: tuple[int, int] | None = None,
 ) -> SearchResult:
+    """Batched device search.  All keyword knobs are static (jit keys);
+    see the module docstring for the ``visited``/``compact``/``merge``
+    semantics.  With ``compact=None`` this is a pure jittable function."""
     if pipeline not in ("fused", "reference"):
         raise ValueError(f"unknown pipeline {pipeline!r}")
-    B, d = queries.shape
-    L, n, _ = di.neighbors.shape
+    if visited not in ("bitmap", "hash"):
+        raise ValueError(f"unknown visited filter {visited!r}")
     W = max(width, k)
-    K = m + 1  # per-hop DC cap (c_n <= m admits m+1 evaluations)
-    F = L * m
-    n_words = (n + 31) // 32
     if max_hops is None:
         max_hops = 8 * W + 64
-
-    queries = queries.astype(jnp.float32)
-    if metric != "l2":
-        # cosine: match the host path, which normalises the query at search
-        # time (stored vectors are pre-normalised at insert)
-        qn = jnp.sqrt(jnp.sum(queries * queries, axis=1, keepdims=True))
-        queries = queries / jnp.where(qn > 0, qn, 1.0)
-    q2 = jnp.sum(queries * queries, axis=1)  # [B]
-    x, y = ranges[:, 0].astype(jnp.float32), ranges[:, 1].astype(jnp.float32)
-    l_d, ep, has = _landing_and_entry(di, ranges.astype(jnp.float32), o, L)
-
-    # layer-priority rank template: (l_d - l) * m + column, lower is better
-    lev = jnp.arange(L, dtype=jnp.int32)[None, :, None]  # [1, L, 1]
-    col = jnp.arange(m, dtype=jnp.int32)[None, None, :]  # [1, 1, m]
-
-    def eval_dists(ids: jax.Array, valid: jax.Array) -> jax.Array:
-        idc = jnp.clip(ids, 0, n - 1)
-        if pipeline == "reference":
-            dots, v2 = _hop_ref.eval_materialized(
-                di.vectors, di.sq_norms, idc, queries, backend
+    v_words = 0
+    if visited == "hash":
+        if visited_bits is None:
+            visited_bits = visited_filter_bits(
+                W, m, max_hops, fp=visited_fp, hashes=visited_hashes
             )
         else:
-            # fused gather+distance: no [B, K, d] HBM intermediate
-            from repro.kernels.ops import gather_norm_dot
-
-            dots, v2 = gather_norm_dot(di.vectors, idc, queries, backend=backend)
-        if metric == "l2":
-            dd = jnp.maximum(v2 - 2.0 * dots + q2[:, None], 0.0)
-        else:
-            dd = 1.0 - dots
-        return jnp.where(valid, dd, _INF)
-
-    # ---------------------------------------------------------------- init
-    ep_valid = has
-    ep_ids = jnp.where(ep_valid, ep, 0)
-    d_ep = eval_dists(ep_ids[:, None], ep_valid[:, None])[:, 0]  # [B]
-    res_d = jnp.full((B, W), _INF).at[:, 0].set(jnp.where(ep_valid, d_ep, _INF))
-    res_i = jnp.full((B, W), -1, jnp.int32).at[:, 0].set(jnp.where(ep_valid, ep_ids, -1))
-    res_e = jnp.ones((B, W), jnp.bool_).at[:, 0].set(~ep_valid)  # pad = expanded
-    vbits = jnp.zeros((B, n_words + 1), jnp.uint32)
-    word = jnp.where(ep_valid, ep_ids >> 5, n_words)
-    bit = jnp.where(ep_valid, jnp.uint32(1) << (ep_ids & 31).astype(jnp.uint32), 0)
-    vbits = vbits.at[jnp.arange(B), word].add(bit.astype(jnp.uint32))
-    active = ep_valid
-    dc = jnp.where(ep_valid, 1, 0).astype(jnp.int32)
-    hops = jnp.zeros(B, jnp.int32)
-
-    def cond(state):
-        _, _, _, _, active, _, _, t = state
-        return jnp.logical_and(jnp.any(active), t < max_hops)
-
-    def body(state):
-        res_d, res_i, res_e, vbits, active, dc, hops, t = state
-        # ---- pop the nearest unexpanded candidate (Alg. 2 line 5) ----
-        unexp = jnp.where(res_e, _INF, res_d)  # [B, W]
-        i_star = jnp.argmin(unexp, axis=1)  # [B]
-        d_star = jnp.take_along_axis(unexp, i_star[:, None], 1)[:, 0]
-        worst = res_d[:, W - 1]
-        full = res_i[:, W - 1] >= 0
-        done = jnp.logical_or(d_star == _INF, jnp.logical_and(full, d_star > worst))
-        act = jnp.logical_and(active, ~done)  # queries doing work this hop
-
-        s = jnp.take_along_axis(res_i, i_star[:, None], 1)[:, 0]
-        s = jnp.where(act, s, 0)
-        res_e2 = res_e.at[jnp.arange(B), i_star].set(True)
-        res_e2 = jnp.where(act[:, None], res_e2, res_e)
-
-        # ---- gather multi-layer neighbor block ----
-        nb = jnp.transpose(di.neighbors[:, s, :], (1, 0, 2))  # [B, L, m]
-        valid = nb >= 0
-        nbc = jnp.clip(nb, 0, n - 1)
-        a_nb = di.attrs[nbc]  # [B, L, m]
-        wordn = jnp.where(valid, nbc >> 5, n_words)
-        got = jnp.take_along_axis(
-            vbits, wordn.reshape(B, -1), axis=1
-        ).reshape(B, L, m)
-        vis = (got >> (nbc & 31).astype(jnp.uint32)) & 1
-        unvis = jnp.logical_and(valid, vis == 0)
-        inr = jnp.logical_and(a_nb >= x[:, None, None], a_nb <= y[:, None, None])
-
-        # ---- early-stop layer inclusion mask (Alg. 2 lines 7-17) ----
-        below_ld = lev <= l_d[:, None, None]  # [B, L, 1]
-        oor_unvis = jnp.any(
-            jnp.logical_and(unvis, ~inr) & below_ld, axis=2
-        )  # [B, L]
-        neutral = jnp.where(lev[:, :, 0] <= l_d[:, None], oor_unvis, True)
-        shifted = jnp.concatenate(
-            [neutral[:, 1:], jnp.ones((B, 1), jnp.bool_)], axis=1
-        )
-        include = (
-            jnp.cumprod(shifted[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1] > 0
-        )
-        include = jnp.logical_and(include, lev[:, :, 0] <= l_d[:, None])  # [B, L]
-
-        elig = unvis & inr & include[:, :, None] & act[:, None, None]  # [B, L, m]
-        rank = (l_d[:, None, None] - lev) * m + col  # [B, L, m]
-        rank = jnp.where(elig, rank, _BIG)
-        ids_f = nbc.reshape(B, F)
-        rank_f = rank.reshape(B, F)
-        # dedupe across layers: drop an entry if a better-ranked eligible
-        # entry carries the same id (the host marks it visited first).
-        if pipeline == "reference":
-            ids_f, rank_f = _hop_ref.dedupe_pairwise(ids_f, rank_f)
-        else:
-            ids_f, rank_f = _dedupe_sorted(ids_f, rank_f, n, F)
-
-        neg, sel_pos = lax.top_k(-rank_f, K)  # best (smallest) K ranks
-        sel_valid = (-neg) < _BIG
-        sel_ids = jnp.take_along_axis(ids_f, sel_pos, axis=1)  # [B, K]
-        sel_ids = jnp.where(sel_valid, sel_ids, 0)
-
-        # ---- mark visited ----
-        wsel = jnp.where(sel_valid, sel_ids >> 5, n_words)
-        bsel = jnp.where(
-            sel_valid, jnp.uint32(1) << (sel_ids & 31).astype(jnp.uint32), 0
-        )
-        vbits2 = vbits.at[jnp.arange(B)[:, None], wsel].add(bsel.astype(jnp.uint32))
-
-        # ---- fused gather + distance evaluation ----
-        dd = eval_dists(sel_ids, sel_valid)  # [B, K]
-        dc2 = dc + jnp.sum(sel_valid, axis=1).astype(jnp.int32)
-
-        # ---- merge into the sorted fixed-width result set ----
-        new_i = jnp.where(sel_valid, sel_ids, -1)
-        new_e = ~sel_valid  # invalid entries act as expanded padding
-        if pipeline == "reference":
-            nres_d, nres_i, nres_e = _hop_ref.merge_full_sort(
-                res_d, res_i, res_e2, dd, new_i, new_e, W
-            )
-        else:
-            nres_d, nres_i, nres_e = _merge_sorted(
-                res_d, res_i, res_e2, dd, new_i, new_e, W
-            )
-
-        # ---- commit only for queries that worked this hop ----
-        res_d = jnp.where(act[:, None], nres_d, res_d)
-        res_i = jnp.where(act[:, None], nres_i, res_i)
-        res_e = jnp.where(act[:, None], nres_e, res_e2)
-        vbits = jnp.where(act[:, None], vbits2, vbits)
-        dc = jnp.where(act, dc2, dc)
-        hops = hops + act.astype(jnp.int32)
-        return (res_d, res_i, res_e, vbits, act, dc, hops, t + 1)
-
-    state = (res_d, res_i, res_e, vbits, active, dc, hops, jnp.int32(0))
-    res_d, res_i, res_e, vbits, active, dc, hops, _ = lax.while_loop(
-        cond, body, state
+            visited_bits = _pow2ceil(max(int(visited_bits), 1024))
+        v_words = visited_bits // 32
+    cfg = HopCfg(
+        k=k, width=W, m=m, o=o, metric=metric, max_hops=int(max_hops),
+        backend=backend, pipeline=pipeline, visited=visited,
+        v_words=v_words, v_hashes=int(visited_hashes), merge=merge,
     )
-    return SearchResult(ids=res_i[:, :k], dists=res_d[:, :k], dc=dc, hops=hops)
+    if compact is None:
+        return _search_whole(di, queries, ranges, cfg)
+    return _search_chunked(di, jnp.asarray(queries), jnp.asarray(ranges),
+                           cfg, (int(compact[0]), int(compact[1])))
 
 
 def search_batch(
@@ -384,10 +758,30 @@ def search_batch(
     width: int = 64,
     backend: str = "auto",
     pipeline: str = "fused",
+    visited: str = "bitmap",
+    visited_bits: int | None = None,
+    compact: tuple[int, int] | None = None,
+    pad_batch: bool = True,
 ) -> SearchResult:
-    """Convenience host wrapper: snapshot -> device arrays -> search."""
+    """Convenience host wrapper: snapshot -> device arrays -> search.
+
+    ``pad_batch`` pads B up to the next power-of-two bucket (padding rows
+    carry an empty range, so they are inactive from init and cost no hops)
+    — a stream of distinct batch sizes then reuses one compilation per
+    bucket instead of recompiling ``device_search`` for every new B.
+    """
     di = to_device_index(snap)
-    return device_search(
+    queries = np.asarray(queries, np.float32)
+    ranges = np.asarray(ranges, np.float32)
+    B = queries.shape[0]
+    Bp = _pow2ceil(max(B, _MIN_BUCKET)) if pad_batch else B
+    if Bp != B:
+        queries = np.concatenate(
+            [queries, np.zeros((Bp - B, queries.shape[1]), np.float32)])
+        ranges = np.concatenate(
+            [ranges, np.tile(np.asarray([[1.0, 0.0]], np.float32),
+                             (Bp - B, 1))])
+    res = device_search(
         di,
         jnp.asarray(queries, jnp.float32),
         jnp.asarray(ranges, jnp.float32),
@@ -398,4 +792,11 @@ def search_batch(
         metric="l2" if snap.metric == "l2" else "cosine",
         backend=backend,
         pipeline=pipeline,
+        visited=visited,
+        visited_bits=visited_bits,
+        compact=compact,
     )
+    if Bp != B:
+        res = SearchResult(ids=res.ids[:B], dists=res.dists[:B],
+                           dc=res.dc[:B], hops=res.hops[:B])
+    return res

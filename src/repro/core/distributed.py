@@ -4,9 +4,21 @@ Serving topology (the production deployment for an index that fits HBM):
 queries are sharded over the ``data`` mesh axis; the snapshot (graph +
 vectors) is replicated within each data group.  Each device runs the batched
 beam search on its query shard — no collectives on the hot path, linear
-scaling in devices.  For snapshots larger than one device, the ``model`` axis
-shards the *vector dimension* for the distance matmul (column-parallel with a
-``psum`` of partial dot products) — exposed via ``dim_sharded=True``.
+scaling in devices.  Every piece of per-query hop state (result arrays and
+the visited filter — the [B, n/32] bitmap or the [B, v_words] hashed
+filter) is leading-dim-B, so the whole ``HopState`` shards over the data
+axis by propagation from the query sharding; at million-vector scale the
+hashed filter is the only option that keeps the replicated-per-device state
+O(batch) instead of O(batch * n).  For snapshots larger than one device,
+the ``model`` axis shards the *vector dimension* for the distance matmul
+(column-parallel with a ``psum`` of partial dot products) — exposed via
+``dim_sharded=True``.
+
+The sharded serving function runs the lock-step hop loop (``compact=None``
+— ragged-batch compaction is host-side scheduling and cannot live inside
+the jitted, sharding-annotated callable); incoming batches are padded to
+power-of-two buckets (rounded to the data-axis size) so a stream of
+distinct batch sizes reuses one compilation per bucket.
 
 Building at scale: attribute-range partitioned builders.  Hosts own
 contiguous rank ranges of the attribute space plus a halo of one top-level
@@ -26,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .device_search import DeviceIndex, device_search
+from .device_search import DeviceIndex, _pow2ceil, device_search
 from .snapshot import Snapshot
 
 
@@ -38,15 +50,22 @@ def make_serving_fn(
     data_axis: str = "data",
     backend: str = "auto",
     pipeline: str = "fused",
+    visited: str = "bitmap",
+    visited_bits: int | None = None,
+    pad_batch: bool = True,
 ):
     """jit-compiled query-sharded serving function.
 
     Returns ``fn(queries, ranges) -> SearchResult`` with queries/ranges/
-    results sharded over ``data_axis`` and the index replicated.
+    results sharded over ``data_axis`` and the index replicated.  With
+    ``pad_batch`` (default) batches are padded to the next power-of-two
+    bucket divisible by the data-axis size — new batch sizes then hit a
+    cached compilation instead of retracing ``device_search``.
     """
     rep = NamedSharding(mesh, P())
     shq = NamedSharding(mesh, P(data_axis, None))
     sh1 = NamedSharding(mesh, P(data_axis))
+    nd = int(mesh.shape[data_axis])
 
     searcher = functools.partial(
         device_search,
@@ -57,6 +76,8 @@ def make_serving_fn(
         metric="l2" if snap.metric == "l2" else "cosine",
         backend=backend,
         pipeline=pipeline,
+        visited=visited,
+        visited_bits=visited_bits,
     )
     di = DeviceIndex(
         vectors=jnp.asarray(snap.vectors, jnp.float32),
@@ -77,9 +98,29 @@ def make_serving_fn(
     )
 
     def serve(queries: np.ndarray, ranges: np.ndarray):
-        return fn(
-            di, jnp.asarray(queries, jnp.float32), jnp.asarray(ranges, jnp.float32)
-        )
+        queries = np.asarray(queries, np.float32)
+        ranges = np.asarray(ranges, np.float32)
+        B = queries.shape[0]
+        Bp = B
+        if pad_batch:
+            Bp = max(_pow2ceil(B), nd)
+            if Bp % nd:  # non-pow2 data axis: fall back to a multiple
+                Bp = -(-B // nd) * nd
+        if Bp != B:  # padding rows carry an empty range -> inactive
+            queries = np.concatenate(
+                [queries, np.zeros((Bp - B, queries.shape[1]), np.float32)]
+            )
+            ranges = np.concatenate(
+                [ranges,
+                 np.tile(np.asarray([[1.0, 0.0]], np.float32), (Bp - B, 1))]
+            )
+        res = fn(di, jnp.asarray(queries), jnp.asarray(ranges))
+        if Bp != B:
+            from .device_search import SearchResult
+
+            res = SearchResult(ids=res.ids[:B], dists=res.dists[:B],
+                               dc=res.dc[:B], hops=res.hops[:B])
+        return res
 
     serve.device_index = di  # keep alive / reusable
     return serve

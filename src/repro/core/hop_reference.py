@@ -15,6 +15,12 @@ stages that the fused pipeline in ``device_search`` replaced:
 parity tests assert bitwise-identical ids and matching DC/hop counters
 against the fused pipeline, and benchmarks time old vs new.  Do not use in
 production serving — every stage here is strictly dominated.
+
+The hashed visited filter (``visited="hash"``) gets the same treatment:
+``hash_positions_ref`` / ``hash_mark_dense`` / ``hash_test_dense`` are a
+plain-numpy dense-boolean re-statement of the packed double-hashed filter
+(one uint8 per *bit*, direct fancy indexing, no word packing, no scatter
+tricks) used by unit tests to pin down the packed uint32 implementation.
 """
 from __future__ import annotations
 
@@ -48,6 +54,42 @@ def merge_full_sort(res_d, res_i, res_e, dd, new_i, new_e, W: int):
         (cat_d, cat_i, cat_e.astype(jnp.int32)), dimension=1, num_keys=1
     )
     return srt_d[:, :W], srt_i[:, :W], srt_e[:, :W] > 0
+
+
+def hash_positions_ref(ids: np.ndarray, v_bits: int, nh: int) -> np.ndarray:
+    """numpy twin of ``device_search._hash_positions``: ids int[...] ->
+    uint32[..., nh] probe positions (shared with the host filter)."""
+    from .search import hash_positions_np
+
+    return hash_positions_np(ids, v_bits, nh)
+
+
+def hash_mark_dense(dense: np.ndarray, ids, valid, nh: int) -> np.ndarray:
+    """Insert ids [B, K] into a dense uint8 bit array [B, v_bits]."""
+    B, v_bits = dense.shape
+    pos = hash_positions_ref(ids, v_bits, nh)  # [B, K, nh]
+    rows = np.arange(B)[:, None, None]
+    out = dense.copy()
+    np.maximum.at(out, (np.broadcast_to(rows, pos.shape),
+                        pos.astype(np.int64)),
+                  np.asarray(valid)[:, :, None].astype(np.uint8))
+    return out
+
+
+def hash_test_dense(dense: np.ndarray, ids, nh: int) -> np.ndarray:
+    """Membership of ids [B, ...] in the dense bit array -> bool."""
+    B, v_bits = dense.shape
+    pos = hash_positions_ref(ids, v_bits, nh).astype(np.int64)
+    rows = np.arange(B).reshape((B,) + (1,) * (pos.ndim - 1))
+    return dense[rows, pos].min(axis=-1) > 0
+
+
+def unpack_filter(vstate: np.ndarray) -> np.ndarray:
+    """Packed uint32 filter [B, Vw(+trash)] -> dense uint8 bits [B, Vw*32]
+    (the trailing trash word is dropped)."""
+    words = np.asarray(vstate)[:, :-1]
+    bits = (words[:, :, None] >> np.arange(32, dtype=np.uint32)) & 1
+    return bits.reshape(words.shape[0], -1).astype(np.uint8)
 
 
 def eval_materialized(vectors, sq_norms, idc, queries, backend: str):

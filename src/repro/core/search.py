@@ -58,6 +58,90 @@ class _Visited:
         return self.gen[v] == self.cur
 
 
+def hash_positions_np(ids, v_bits: int, nh: int):
+    """Blocked-Bloom probe positions, numpy: ids int[...] -> uint32[..., nh]
+    in [0, v_bits) (power-of-two ``v_bits``).  Bit-identical to the device
+    filter in ``repro.core.device_search`` — one murmur3 fmix32 hash whose
+    low bits pick the id's 32-bit block and whose bits 16+ derive ``nh``
+    distinct bit offsets inside it (``(b0 + i*step) & 31`` with odd
+    step)."""
+    with np.errstate(over="ignore"):
+        h = np.asarray(ids).astype(np.uint32)
+        h = h ^ (h >> np.uint32(16))
+        h = h * np.uint32(0x85EBCA6B)
+        h = h ^ (h >> np.uint32(13))
+        h = h * np.uint32(0xC2B2AE35)
+        h = h ^ (h >> np.uint32(16))
+        word = h & np.uint32(v_bits // 32 - 1)
+        b0 = (h >> np.uint32(16)) & np.uint32(31)
+        step = ((h >> np.uint32(21)) & np.uint32(31)) | np.uint32(1)
+        i = np.arange(nh, dtype=np.uint32)
+        bits = (b0[..., None] + i * step[..., None]) & np.uint32(31)
+        return word[..., None] * np.uint32(32) + bits
+
+
+class _HashGen:
+    """Adapter giving ``HashedVisited`` the ``gen[v] == cur`` /
+    ``gen[v] = cur`` stamp protocol that ``search_candidates`` inlines on
+    its hot path (so the filter is a drop-in for ``_Visited`` without
+    slowing the exact path down with per-neighbor dispatch)."""
+
+    __slots__ = ("owner",)
+
+    def __init__(self, owner: "HashedVisited"):
+        self.owner = owner
+
+    def __getitem__(self, v: int) -> int:
+        o = self.owner
+        return o.cur if o.is_visited(v) else o.cur - 1
+
+    def __setitem__(self, v: int, _val: int) -> None:
+        o = self.owner
+        o.bits[o._pos(v)] = o.cur
+
+
+class HashedVisited:
+    """Host twin of the device double-hashed visited filter.
+
+    Drop-in for ``_Visited`` in ``search_candidates`` (same
+    ``next_query``/``test_and_set``/``is_visited``/``gen`` interface, same
+    generation-stamp clearing) but membership is the AND of ``nh``
+    double-hashed probe bits over a constant ``v_bits``-bit ring — the
+    exact probe arithmetic of ``device_search(..., visited="hash")``.
+    A false positive makes the filter report an unvisited vertex as
+    visited, i.e. the search *skips* it; it can never admit an extra
+    evaluation, so the host path under this filter brackets the device
+    hash path's skip behaviour for tests.
+    """
+
+    __slots__ = ("bits", "v_bits", "nh", "cur")
+
+    def __init__(self, v_bits: int = 1 << 14, nh: int = 2):
+        assert v_bits & (v_bits - 1) == 0, "v_bits must be a power of two"
+        self.v_bits, self.nh = v_bits, nh
+        self.bits = np.zeros(v_bits, np.int64)  # generation stamp per bit
+        self.cur = 0
+
+    @property
+    def gen(self) -> _HashGen:
+        return _HashGen(self)
+
+    def next_query(self, n: int) -> None:  # n unused: size is budget-bound
+        self.cur += 1
+
+    def _pos(self, v: int):
+        return hash_positions_np(np.asarray([v]), self.v_bits, self.nh)[0]
+
+    def test_and_set(self, v: int) -> bool:
+        if self.is_visited(v):
+            return True
+        self.bits[self._pos(v)] = self.cur
+        return False
+
+    def is_visited(self, v: int) -> bool:
+        return bool(np.all(self.bits[self._pos(v)] == self.cur))
+
+
 def search_candidates(
     store: VectorStore,
     graph: LayeredGraph,

@@ -13,6 +13,7 @@ cost analysis sees the full computation (see DESIGN.md §5).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import ref as _ref
 
@@ -71,6 +72,55 @@ def gather_norm_dot(table, ids, queries, backend: str = "auto", **kw):
 
         return kern(table, ids, queries, interpret=interp, **kw)
     return _ref.gather_norm_dot_ref(table, ids, queries)
+
+
+def merge_src_indices(pos_a, pos_b, W: int, K: int, method: str = "auto"):
+    """Source-index writeback of the counting merge (``_merge_sorted``).
+
+    Given the merged output position of every result entry (``pos_a``
+    [B, W]) and new entry (``pos_b`` [B, K]) — a bijection onto
+    0..W+K-1 with slots >= W dropped — produce ``src`` [B, W] i32 where
+    ``src[b, p]`` is the concatenated-source index (0..W-1 = result row,
+    W..W+K-1 = new row) that lands at output slot ``p``.
+
+      * ``"scatter"`` — one dropping scatter of source indices;
+      * ``"onehot"`` — two MXU one-hot matmuls: position-equality one-hots
+        contracted against the source-index iota.  Every output column has
+        exactly one hit and indices are < W+K << 2^24, so the f32
+        accumulation is exact.  Preferred on TPU, where XLA serialises
+        variable-index scatters;
+      * ``"auto"`` — per-platform default: onehot on TPU, scatter
+        elsewhere.  On CPU the standalone bench favours onehot
+        (``BENCH_device.json stages.writeback``) but inside the hop loop
+        scatter wins at small batch and the [B, W, W+K] one-hots grow
+        quadratically in width, so the linear-memory scatter stays the
+        off-TPU default.
+    """
+    if method == "auto":
+        method = "onehot" if _on_tpu() else "scatter"
+    B = pos_a.shape[0]
+    if method == "scatter":
+        row = jnp.arange(B)[:, None]
+        src = jnp.zeros((B, W), jnp.int32)
+        src = src.at[row, pos_a].set(
+            jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32), (B, W)),
+            mode="drop",
+        )
+        src = src.at[row, pos_b].set(
+            W + jnp.broadcast_to(jnp.arange(K, dtype=jnp.int32), (B, K)),
+            mode="drop",
+        )
+        return src
+    if method == "onehot":
+        out = jnp.arange(W, dtype=jnp.int32)[None, None, :]
+        oa = (pos_a[:, :, None] == out).astype(jnp.float32)  # [B, W, W]
+        ob = (pos_b[:, :, None] == out).astype(jnp.float32)  # [B, K, W]
+        srcf = jnp.einsum("bsw,s->bw", oa,
+                          jnp.arange(W, dtype=jnp.float32))
+        srcf = srcf + jnp.einsum("bkw,k->bw", ob,
+                                 W + jnp.arange(K, dtype=jnp.float32))
+        return srcf.astype(jnp.int32)
+    raise ValueError(f"unknown writeback method {method!r}")
 
 
 def wkv6(r, k, v, w, u, state=None, backend: str = "auto", chunk: int = 32):

@@ -25,6 +25,18 @@ def main() -> None:
     ap.add_argument("--pipeline", default="fused", choices=("fused", "reference"),
                     help="hop pipeline: fused (production) or the pre-refactor "
                          "reference (parity/benchmark oracle)")
+    ap.add_argument("--visited", default="bitmap", choices=("bitmap", "hash"),
+                    help="visited-set state: exact [B, n/32] bitmap or the "
+                         "constant-size double-hashed filter (O(budget), not "
+                         "O(n) — the only option at million-vector scale)")
+    ap.add_argument("--visited-bits", type=int, default=None,
+                    help="hash-filter bits per query (pow2; default sized "
+                         "from the search budget at a 2%% FP target)")
+    ap.add_argument("--compact", default="",
+                    help='ragged-batch compaction schedule "H0,H" (e.g. '
+                         '"64,128"): chunk the hop loop and compact '
+                         "finished queries out between chunks (single-host "
+                         "path only)")
     args = ap.parse_args()
 
     import numpy as np
@@ -43,6 +55,10 @@ def main() -> None:
           f"({idx.graph.num_layers} layers, {idx.memory_bytes()/2**20:.1f} MiB)")
     snap = take_snapshot(idx)
 
+    compact = None
+    if args.compact:
+        h0, h1 = (int(x) for x in args.compact.split(","))
+        compact = (h0, h1)
     if args.mesh:
         import jax
 
@@ -52,14 +68,17 @@ def main() -> None:
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = make_host_mesh((d, m), ("data", "model"))
         serve = make_serving_fn(mesh, snap, k=args.k, width=args.width,
-                                backend=args.backend, pipeline=args.pipeline)
+                                backend=args.backend, pipeline=args.pipeline,
+                                visited=args.visited,
+                                visited_bits=args.visited_bits)
         res = serve(wl.queries, wl.ranges)
     else:
         from ..core.device_search import search_batch
 
         res = search_batch(snap, wl.queries, wl.ranges, k=args.k,
                            width=args.width, backend=args.backend,
-                           pipeline=args.pipeline)
+                           pipeline=args.pipeline, visited=args.visited,
+                           visited_bits=args.visited_bits, compact=compact)
     import numpy as np
 
     ids = np.asarray(res.ids)
@@ -68,9 +87,13 @@ def main() -> None:
     for i in range(args.queries):
         got = np.asarray([int(snap.ids_map[j]) for j in ids[i] if j >= 0])
         recs.append(recall(got, wl.gt[i]))
+    hops = np.asarray(res.hops)
     print(f"served {args.queries} queries: recall@{args.k} = {np.mean(recs):.4f}, "
           f"mean DC = {float(np.mean(np.asarray(res.dc))):.0f}, "
-          f"mean hops = {float(np.mean(np.asarray(res.hops))):.0f}")
+          f"mean hops = {float(np.mean(hops)):.0f}")
+    q = np.percentile(hops, [50, 90, 99, 100]).astype(int)
+    print(f"hops-to-termination: p50={q[0]} p90={q[1]} p99={q[2]} max={q[3]} "
+          f"(ragged batches pay max without --compact)")
 
 
 if __name__ == "__main__":

@@ -92,16 +92,26 @@ class RagPipeline:
     ``backend`` selects the distance-kernel dispatch for the batched device
     path (``repro.kernels.ops`` policy: "auto" = compiled Pallas on TPU, jnp
     reference elsewhere); single-query ``retrieve`` stays on the host index.
+    ``visited``/``compact`` are the ``device_search`` hop-loop knobs: the
+    hashed visited filter keeps per-query state O(search budget) instead of
+    O(corpus), and ragged-batch compaction stops fast queries from paying
+    for the batch straggler.  Batches are pow2-padded inside
+    ``search_batch``, so a stream of distinct request sizes does not
+    recompile the device path.
     """
 
     def __init__(self, server: LMServer, dim: int, m: int = 16,
-                 ef_construction: int = 64, o: int = 4, backend: str = "auto"):
+                 ef_construction: int = 64, o: int = 4, backend: str = "auto",
+                 visited: str = "bitmap",
+                 compact: tuple[int, int] | None = None):
         from ..core import WoWIndex
 
         self.server = server
         self.index = WoWIndex(dim=dim, m=m, ef_construction=ef_construction, o=o)
         self.docs: list = []
         self.backend = backend
+        self.visited = visited
+        self.compact = compact
         self._snap = None
         self._snap_key = None
 
@@ -137,7 +147,8 @@ class RagPipeline:
             self._snap_key = key
         qs = self.server.embed(query_tokens)
         res = search_batch(self._snap, qs, np.asarray(attr_ranges, np.float32),
-                           k=k, width=width, backend=self.backend)
+                           k=k, width=width, backend=self.backend,
+                           visited=self.visited, compact=self.compact)
         ids = np.asarray(res.ids)
         mapped = np.where(ids >= 0, self._snap.ids_map[np.clip(ids, 0, None)], -1)
         return mapped, np.asarray(res.dists)

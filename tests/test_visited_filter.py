@@ -1,0 +1,218 @@
+"""Hashed visited filter + ragged-batch compaction: correctness contract.
+
+The O(n)-free hop loop must be *exact* where it claims to be — an oversized
+hash filter and any compaction schedule reproduce the bitmap lock-step path
+bit for bit — and *bounded* where it trades: at the configured
+false-positive target the filter may only ever skip candidates (never
+evaluate out-of-range vertices), with the observed skip rate and recall
+delta under test.
+"""
+import numpy as np
+import pytest
+
+from repro.core import WoWIndex, make_workload, recall
+from repro.core import hop_reference as hr
+from repro.core.device_search import (
+    HopCfg,
+    _hash_positions,
+    _visited_mark,
+    _visited_test,
+    search_batch,
+    visited_filter_bits,
+)
+from repro.core.search import HashedVisited, hash_positions_np
+from repro.core.snapshot import take_snapshot
+
+_K10 = dict(k=10, width=48, backend="ref")
+
+
+def _cfg(visited="hash", v_words=128, v_hashes=2):
+    return HopCfg(k=10, width=48, m=8, o=4, metric="l2", max_hops=100,
+                  backend="ref", pipeline="fused", visited=visited,
+                  v_words=v_words, v_hashes=v_hashes, merge="auto")
+
+
+@pytest.fixture(scope="module")
+def dup_attr_workload():
+    """Duplicate-heavy attributes (Fig. 12 regime): 64 unique values over
+    n=700 — the workload where visited-set pressure is highest."""
+    wl = make_workload(n=700, d=16, nq=32, seed=5, k=10, n_unique=64)
+    idx = WoWIndex(dim=16, m=8, ef_construction=48, o=4, seed=0)
+    for v, a in zip(wl.vectors, wl.attrs):
+        idx.insert(v, a)
+    return wl, take_snapshot(idx)
+
+
+def test_hash_positions_match_numpy_twin():
+    """Device probe arithmetic == host twin, bit for bit (the host filter
+    and the dense oracle both build on the numpy side)."""
+    ids = np.concatenate([np.arange(64), [0, 1, 2**30 - 1, 12345]]).astype(np.int32)
+    for v_bits, nh in ((1 << 10, 2), (1 << 16, 3), (1 << 22, 4)):
+        dev = np.asarray(_hash_positions(np.asarray(ids), v_bits, nh))
+        host = hash_positions_np(ids, v_bits, nh)
+        np.testing.assert_array_equal(dev, host)
+        # h2 is odd: probes within one id are distinct
+        assert all(len(set(row)) == nh for row in host.tolist())
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_packed_filter_matches_dense_oracle(seed):
+    """The packed uint32 mark (sort-dedupe + equal-word OR-combine + set
+    scatter) and AND-of-probes test equal the dense one-byte-per-bit
+    oracle, including cross-id word and bit collisions."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    B, K, nh, v_words = 4, 9, 2, 8  # tiny ring -> collisions guaranteed
+    cfg = _cfg(v_words=v_words, v_hashes=nh)
+    vstate = jnp.zeros((B, v_words + 1), jnp.uint32)
+    dense = np.zeros((B, v_words * 32), np.uint8)
+    for _ in range(6):  # several hops of insertions
+        ids = rng.integers(0, 500, size=(B, K)).astype(np.int32)
+        valid = rng.random((B, K)) < 0.8
+        vstate = _visited_mark(vstate, jnp.asarray(ids),
+                               jnp.asarray(valid), cfg)
+        dense = hr.hash_mark_dense(dense, ids, valid, nh)
+        np.testing.assert_array_equal(hr.unpack_filter(np.asarray(vstate)),
+                                      dense)
+        probe = rng.integers(0, 500, size=(B, 13)).astype(np.int32)
+        got = np.asarray(_visited_test(vstate, jnp.asarray(probe),
+                                       jnp.ones((B, 13), bool), cfg))
+        np.testing.assert_array_equal(got, hr.hash_test_dense(dense, probe, nh))
+    assert int(np.asarray(vstate)[:, :-1].sum()) > 0  # actually inserted
+
+
+def test_oversized_filter_bitwise_parity(dup_attr_workload):
+    """Acceptance: with the filter oversized far past the budget (zero
+    observed false positives) the hash path is bitwise-identical to the
+    exact bitmap — ids, distances, DC and hop counters."""
+    wl, snap = dup_attr_workload
+    ref = search_batch(snap, wl.queries, wl.ranges, visited="bitmap", **_K10)
+    got = search_batch(snap, wl.queries, wl.ranges, visited="hash",
+                       visited_bits=1 << 22, **_K10)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(got.dists), np.asarray(ref.dists))
+    np.testing.assert_array_equal(np.asarray(got.dc), np.asarray(ref.dc))
+    np.testing.assert_array_equal(np.asarray(got.hops), np.asarray(ref.hops))
+
+
+def test_fp_target_bounded_degradation(dup_attr_workload):
+    """At a deliberately tight filter (real false-positive load) the hash
+    path may only *skip*: results stay in range (no-OOR invariant),
+    aggregate DC never exceeds the bitmap path's, the observed skip rate
+    stays near the configured target, and recall gives up < 5 points."""
+    wl, snap = dup_attr_workload
+    ref = search_batch(snap, wl.queries, wl.ranges, visited="bitmap", **_K10)
+    got = search_batch(snap, wl.queries, wl.ranges, visited="hash",
+                       visited_bits=1 << 12, **_K10)
+    ids = np.asarray(got.ids)
+    for i in range(len(wl.queries)):  # no-OOR: every result is in range
+        a = snap.attrs[ids[i][ids[i] >= 0]]
+        assert np.all((a >= wl.ranges[i][0] - 1e-5) &
+                      (a <= wl.ranges[i][1] + 1e-5))
+    dc_ref = np.asarray(ref.dc, np.float64)
+    dc_got = np.asarray(got.dc, np.float64)
+    assert dc_got.sum() <= dc_ref.sum()  # skips only, in aggregate
+    skip_rate = 1.0 - dc_got.sum() / max(dc_ref.sum(), 1.0)
+    assert skip_rate <= 0.15, skip_rate  # bounded skip rate
+    r_ref = np.mean([recall(np.asarray([int(snap.ids_map[j])
+                                        for j in np.asarray(ref.ids)[i] if j >= 0]),
+                            wl.gt[i]) for i in range(len(wl.queries))])
+    r_got = np.mean([recall(np.asarray([int(snap.ids_map[j])
+                                        for j in ids[i] if j >= 0]),
+                            wl.gt[i]) for i in range(len(wl.queries))])
+    assert r_got >= r_ref - 0.05, (r_got, r_ref)
+
+
+@pytest.mark.parametrize("visited", ["bitmap", "hash"])
+def test_compaction_bitwise_parity(dup_attr_workload, visited):
+    """Ragged-batch compaction is pure scheduling: any chunk schedule
+    reproduces the lock-step loop bit for bit (trajectories are
+    iteration-indexed and independent), for both visited modes."""
+    wl, snap = dup_attr_workload
+    ref = search_batch(snap, wl.queries, wl.ranges, visited=visited, **_K10)
+    for schedule in ((4, 8), (16, 64)):
+        got = search_batch(snap, wl.queries, wl.ranges, visited=visited,
+                           compact=schedule, **_K10)
+        np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+        np.testing.assert_array_equal(np.asarray(got.dists),
+                                      np.asarray(ref.dists))
+        np.testing.assert_array_equal(np.asarray(got.dc), np.asarray(ref.dc))
+        np.testing.assert_array_equal(np.asarray(got.hops),
+                                      np.asarray(ref.hops))
+
+
+def test_pow2_padding_is_transparent(dup_attr_workload):
+    """search_batch's pow2 bucket padding must not change any result row
+    (padding rows carry an empty range and never go active)."""
+    wl, snap = dup_attr_workload
+    for B in (3, 17, 32):  # off-bucket, off-bucket, exact bucket
+        a = search_batch(snap, wl.queries[:B], wl.ranges[:B], pad_batch=True,
+                         **_K10)
+        b = search_batch(snap, wl.queries[:B], wl.ranges[:B], pad_batch=False,
+                         **_K10)
+        assert a.ids.shape == (B, 10)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(np.asarray(a.dc), np.asarray(b.dc))
+
+
+def test_host_hashed_visited_oracle(dup_attr_workload):
+    """The host HashedVisited twin plugs into search_candidates and, when
+    oversized, reproduces the exact-visited-set host search."""
+    from repro.core.search import _Visited, search_candidates
+    from repro.core.store import SearchStats
+
+    wl, snap = dup_attr_workload
+    idx = WoWIndex(dim=16, m=8, ef_construction=48, o=4, seed=0)
+    for v, a in zip(wl.vectors, wl.attrs):
+        idx.insert(v, a)
+    n_checked = 0
+    for i in range(8):
+        x, y = (float(v) for v in wl.ranges[i])
+        ids_ref, _, _ = idx.search(wl.queries[i], (x, y), k=10, ef=48)
+        n_prime = idx.wbt.count_range(x, y)
+        ep = idx._entry_for_query(x, y)  # noqa: SLF001 - test hook
+        if n_prime == 0 or ep is None:
+            continue
+        out = search_candidates(
+            idx.store, idx.graph, HashedVisited(v_bits=1 << 22, nh=2),
+            ep, idx.store.prepare(np.asarray(wl.queries[i])), (x, y),
+            l_min=0, l_max=idx.landing_layer(n_prime), width=48,
+            stats=SearchStats(), deleted=idx.deleted or None,
+        )
+        got = [j for _, j in out][:10]
+        assert got == list(ids_ref), i
+        n_checked += 1
+    assert n_checked >= 4
+
+
+def test_visited_filter_sizing():
+    """Budget/FP sizing: pow2, monotone in the hop budget (which saturates
+    at the expected O(width) horizon), shrinks with extra hashes at a
+    fixed target, and is independent of max_hops past the horizon."""
+    b1 = visited_filter_bits(48, 16, 40, fp=0.01, hashes=2)
+    b2 = visited_filter_bits(48, 16, 120, fp=0.01, hashes=2)
+    b3 = visited_filter_bits(48, 16, 120, fp=0.01, hashes=4)
+    for b in (b1, b2, b3):
+        assert b & (b - 1) == 0
+    assert b2 > b1
+    assert b3 <= b2
+    # past the 2*W+64 horizon the budget (and so the size) saturates
+    assert (visited_filter_bits(48, 16, 400) ==
+            visited_filter_bits(48, 16, 4000))
+
+
+def test_merge_writeback_methods_agree():
+    """Unit: scatter and one-hot-matmul writebacks produce the same source
+    map on random merged-position bijections."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import merge_src_indices
+
+    rng = np.random.default_rng(0)
+    B, W, K = 5, 24, 9
+    perm = np.argsort(rng.random((B, W + K)), axis=1).astype(np.int32)
+    pos_a, pos_b = jnp.asarray(perm[:, :W]), jnp.asarray(perm[:, W:])
+    sc = np.asarray(merge_src_indices(pos_a, pos_b, W, K, "scatter"))
+    oh = np.asarray(merge_src_indices(pos_a, pos_b, W, K, "onehot"))
+    np.testing.assert_array_equal(sc, oh)
