@@ -1,38 +1,119 @@
-"""Table 4 + Table 6: indexing time and index size vs baselines, and
-size/time scaling with n (the §3.6 complexity claims)."""
+"""Table 4 + Table 6: indexing time and index size vs baselines, the §3.6
+complexity claims, and — beyond paper — sequential-vs-batched construction
+throughput (``WoWIndex.insert`` vs ``insert_batch``).
+
+Emits the usual CSV rows plus a machine-readable ``BENCH_build.json`` at the
+repo root so the construction-path perf trajectory is tracked across PRs:
+
+  builds.<n>.sequential_ips        Alg. 1 inserts/sec, one-at-a-time
+  builds.<n>.batched_ips           vectorized Alg. 1 (insert_batch)
+  builds.<n>.speedup               MEDIAN of the per-pair ratios
+  parity.{sequential,batched}_recall10   recall@10 vs the brute-force oracle
+                                   on the same mixed-selectivity workload
+  parity.delta                     batched - sequential (gate: >= -0.01)
+
+Sequential and batched builds are timed as back-to-back PAIRS and the
+speedup is the median of the per-pair ratios: a shared-core box drifts
+between fast and slow epochs, and pairing cancels the epoch out of the
+ratio (a ratio-of-minima statistic instead rewards whichever path got the
+single luckiest window).  The ips fields report each path's best window.
+
+CLI: ``python -m benchmarks.bench_build [--smoke]``.  ``--smoke`` runs a
+tiny workload end to end (CI: build-throughput regressions get caught like
+serving ones) without clobbering the tracked numbers.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
 from .common import BENCH_D, BENCH_N, emit, write_csv
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_BATCH = 128  # insert_batch micro-batch size under test
 
-def run() -> list[list]:
+
+def _recall10(idx, wl, ef=64) -> float:
+    from repro.core import brute_force, recall
+
+    recs = []
+    for i in range(len(wl.queries)):
+        ids, _, _ = idx.search(wl.queries[i], tuple(wl.ranges[i]), k=10, ef=ef)
+        gold = brute_force(
+            idx.store.vectors[: idx.store.n],
+            idx.store.attrs[: idx.store.n],
+            wl.queries[i], tuple(wl.ranges[i]), 10,
+        )
+        recs.append(recall(ids, gold))
+    return float(np.mean(recs))
+
+
+def run(smoke: bool = False) -> list[list]:
     from repro.core import FlatNSW, WoWIndex, make_workload
 
     rows = []
-    sizes = [BENCH_N // 4, BENCH_N // 2, BENCH_N]
+    if smoke:
+        sizes, reps, nq = [400], 1, 10
+    else:
+        sizes, reps, nq = [BENCH_N // 4, BENCH_N // 2, BENCH_N], 5, 40
+    builds = {}
+    parity = None
     for n in sizes:
-        wl = make_workload(n=n, d=BENCH_D, nq=1, seed=0, with_gt=False)
-        # WoW
-        idx = WoWIndex(dim=BENCH_D, m=16, ef_construction=64, o=4, seed=0)
-        t0 = time.perf_counter()
-        for v, a in zip(wl.vectors, wl.attrs):
-            idx.insert(v, a)
-        dt = time.perf_counter() - t0
-        rows.append(["wow", n, round(dt, 3), idx.memory_bytes(), idx.graph.num_layers])
-        emit(f"build_wow_n{n}", dt / n * 1e6, f"bytes={idx.memory_bytes()}")
-        # WoW o=2 (more layers)
+        wl = make_workload(n=n, d=BENCH_D, nq=nq, seed=0, with_gt=False)
+        kw = dict(m=16, ef_construction=64, o=4, seed=0)
+        t_seq = t_bat = np.inf
+        idx = idx_b = None
+        ratios = []
+        for _ in range(reps):  # paired windows -> per-pair ratios
+            idx = WoWIndex(dim=BENCH_D, **kw)
+            t0 = time.perf_counter()
+            for v, a in zip(wl.vectors, wl.attrs):
+                idx.insert(v, a)
+            dt_s = time.perf_counter() - t0
+            t_seq = min(t_seq, dt_s)
+            idx_b = WoWIndex(dim=BENCH_D, **kw)
+            t0 = time.perf_counter()
+            idx_b.insert_batch(wl.vectors, wl.attrs, batch_size=_BATCH)
+            dt_b = time.perf_counter() - t0
+            t_bat = min(t_bat, dt_b)
+            ratios.append(dt_s / dt_b)
+        speedup = float(np.median(ratios))
+        builds[str(n)] = {
+            "sequential_ips": round(n / t_seq, 1),
+            "batched_ips": round(n / t_bat, 1),
+            "speedup": round(speedup, 2),
+            "batch_size": _BATCH,
+        }
+        rows.append(["wow", n, round(t_seq, 3), idx.memory_bytes(),
+                     idx.graph.num_layers])
+        rows.append(["wow_batched", n, round(t_bat, 3), idx_b.memory_bytes(),
+                     idx_b.graph.num_layers])
+        emit(f"build_wow_n{n}", t_seq / n * 1e6, f"bytes={idx.memory_bytes()}")
+        emit(f"build_wow_batched_n{n}", t_bat / n * 1e6,
+             f"speedup={speedup:.2f}x;batch={_BATCH}")
+        if n == sizes[-1]:
+            r_seq = _recall10(idx, wl)
+            r_bat = _recall10(idx_b, wl)
+            parity = {
+                "sequential_recall10": round(r_seq, 4),
+                "batched_recall10": round(r_bat, 4),
+                "delta": round(r_bat - r_seq, 4),
+            }
+            emit(f"build_parity_n{n}", 0.0,
+                 f"seq={r_seq:.4f};batched={r_bat:.4f}")
+
+        # WoW o=2 (more layers) + HNSW-L0, sequential baselines as before
         idx2 = WoWIndex(dim=BENCH_D, m=16, ef_construction=64, o=2, seed=0)
         t0 = time.perf_counter()
         for v, a in zip(wl.vectors, wl.attrs):
             idx2.insert(v, a)
         dt2 = time.perf_counter() - t0
-        rows.append(["wow_o2", n, round(dt2, 3), idx2.memory_bytes(), idx2.graph.num_layers])
+        rows.append(["wow_o2", n, round(dt2, 3), idx2.memory_bytes(),
+                     idx2.graph.num_layers])
         emit(f"build_wow_o2_n{n}", dt2 / n * 1e6, f"bytes={idx2.memory_bytes()}")
-        # HNSW-L0 (flat NSW, the vanilla-ANN reference build)
         flat = FlatNSW(BENCH_D, m=16, ef_construction=64, seed=0)
         t0 = time.perf_counter()
         for v, a in zip(wl.vectors, wl.attrs):
@@ -45,8 +126,36 @@ def run() -> list[list]:
     # per-insert scaling: O(log^2 n) claim — fit us/insert against log2(n)^2
     per_insert = [r[2] / r[1] * 1e6 for r in rows if r[0] == "wow"]
     l2 = [np.log2(n) ** 2 for n in sizes]
-    slope = np.polyfit(l2, per_insert, 1)[0]
-    emit("build_scaling_slope", per_insert[-1], f"us_per_log2sq={slope:.3f}")
-    rows.append(["wow_scaling_slope", sizes[-1], slope, 0, 0])
+    if len(sizes) > 1:
+        slope = np.polyfit(l2, per_insert, 1)[0]
+        emit("build_scaling_slope", per_insert[-1], f"us_per_log2sq={slope:.3f}")
+        rows.append(["wow_scaling_slope", sizes[-1], slope, 0, 0])
+
+    if not smoke:  # smoke runs must not clobber the tracked numbers
+        import jax
+
+        record = {
+            "platform": jax.devices()[0].platform,
+            "workload": {"d": BENCH_D, "m": 16, "ef_construction": 64, "o": 4},
+            "builds": builds,
+            "parity": parity,
+        }
+        with open(os.path.join(_REPO_ROOT, "BENCH_build.json"), "w") as f:
+            json.dump(record, f, indent=1)
+
     write_csv("bench_build.csv", ["index", "n", "seconds", "bytes", "layers"], rows)
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description="construction-path bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload: sequential + batched end to end (CI)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,13 +35,18 @@ def write_csv(fname: str, header: list[str], rows: list[list]) -> str:
     return path
 
 
-def build_wow(wl, m=16, ef=64, o=4, seed=0, timed=False):
+def build_wow(wl, m=16, ef=64, o=4, seed=0, timed=False, batch_size=None):
+    """Build a WoW index; ``batch_size`` switches to the vectorized
+    ``insert_batch`` path (None = the sequential Alg. 1 oracle)."""
     from repro.core import WoWIndex
 
     idx = WoWIndex(dim=wl.vectors.shape[1], m=m, ef_construction=ef, o=o, seed=seed)
     t0 = time.perf_counter()
-    for v, a in zip(wl.vectors, wl.attrs):
-        idx.insert(v, a)
+    if batch_size:
+        idx.insert_batch(wl.vectors, wl.attrs, batch_size=batch_size)
+    else:
+        for v, a in zip(wl.vectors, wl.attrs):
+            idx.insert(v, a)
     dt = time.perf_counter() - t0
     return (idx, dt) if timed else idx
 

@@ -3,7 +3,9 @@
 Fully incremental from an empty index, no presorting, no partial indexing
 (Challenge 1).  Duplicate attribute values are native (§3.7): the WBT stores
 unique values only; duplicates share a rank and only their vectors enter the
-window graphs.  Deletion is mark-based (§3.7).
+window graphs.  Deletion is mark-based (§3.7); selectivity estimates for the
+landing layer subtract *dead* values (unique values whose vectors are all
+deleted) so Algorithm 3 lands where the live data actually is.
 
 Usage::
 
@@ -11,16 +13,46 @@ Usage::
     for v, a in zip(vectors, attrs):
         idx.insert(v, a)
     ids, dists, stats = idx.search(q, (lo, hi), k=10, ef=64)
+
+Batched construction
+--------------------
+
+``insert_batch`` runs Algorithm 1 over a micro-batch: the batch's attribute
+values are registered into the WBT up front (so windows are computed against
+the post-batch value set), the per-layer candidate beam searches of ALL
+pending inserts execute as one lock-step batched evaluation
+(``search_candidates_batch`` — per hop, every member's admitted neighbors
+are distance-evaluated in a single BLAS/kernel call instead of B separate
+Python ``heapq`` loops), and forward/back edges are committed in a
+conflict-aware sequential order: member ``b`` additionally sees every
+earlier-committed batch member inside its layer window as a candidate (with
+exact [B, B] cross distances), so the committed graph is equivalent to a
+sequential insertion in batch order where each search ran against the
+batch-start graph.  Window invariants (Def. 4) hold per layer against the
+final WBT state; DC accounting is preserved per insert in ``BuildStats``.
+The sequential ``insert`` path is unchanged and remains the parity oracle
+(see ``tests/test_batch_build.py``)::
+
+    idx = WoWIndex(dim=128, m=16, ef_construction=128, o=4)
+    idx.insert_batch(vectors, attrs, batch_size=128)  # ~3x faster build
 """
 from __future__ import annotations
 
+import bisect
 import math
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from .graph import LayeredGraph
-from .search import _Visited, rng_prune, search_candidates
+from .search import (
+    _Visited,
+    rng_prune,
+    rng_prune_ids,
+    rng_prune_rows,
+    search_candidates,
+    search_candidates_batch,
+)
 from .store import BuildStats, SearchStats, VectorStore
 
 
@@ -57,6 +89,15 @@ class WoWIndex:
         self.wbt = WBT()
         self.value_map: dict[float, list[int]] = {}
         self.deleted: set[int] = set()
+        # delete-aware selectivity: live vector count per unique value and
+        # the sorted list of *dead* values (all duplicates deleted) — the WBT
+        # never removes values, so n' must subtract these (Alg. 3).
+        self._live_counts: dict[float, int] = {}
+        self._dead_vals: list[float] = []
+        # monotone mutation stamp: bumped by insert/insert_batch/delete/
+        # undelete, so snapshot caches (RagPipeline) can detect ANY change —
+        # (n, len(deleted)) alone misses undelete+delete pairs.
+        self.mutations = 0
         self.build_stats = BuildStats()
         self._visited = _Visited()
         self._rng = np.random.default_rng(seed)
@@ -150,6 +191,8 @@ class WoWIndex:
             self.value_map[attr] = [vid]
         else:
             self.value_map[attr].append(vid)
+        self._note_live_insert(attr)
+        self.mutations += 1
         for l in range(top + 1):
             sel = neighbors_per_layer[l]
             if sel:
@@ -158,31 +201,467 @@ class WoWIndex:
                 )
         return vid
 
-    def _two_stage_prune(self, l: int, b: int, vid: int, d_ab: float) -> None:
-        """Alg. 1 lines 15-17: window prune then RNG prune of b's list."""
+    def insert_batch(
+        self,
+        vectors: np.ndarray,
+        attrs: np.ndarray,
+        batch_size: int = 128,
+        backend: str = "numpy",
+    ) -> np.ndarray:
+        """Batched Algorithm 1 (module docstring, "Batched construction").
+
+        ``vectors`` [N, d] and ``attrs`` [N] are split into micro-batches of
+        ``batch_size``; each micro-batch's per-layer candidate searches run
+        as one lock-step batched evaluation and its edges are committed in a
+        sequential-equivalent order.  ``backend="ops"`` routes the hop
+        distance evaluation through ``repro.kernels.ops.gather_norm_dot``
+        (the device serving path's fused gather kernel dispatch); the
+        default ``"numpy"`` uses host BLAS.  Returns the new vertex ids.
+        """
+        vectors = np.asarray(vectors, dtype=np.float32)
+        if vectors.ndim == 1:
+            vectors = vectors.reshape(1, -1)
+        attrs = np.asarray(attrs, dtype=np.float64).reshape(-1)
+        if len(vectors) != len(attrs):
+            raise ValueError(f"{len(vectors)} vectors vs {len(attrs)} attrs")
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        out = [
+            self._insert_micro_batch(vectors[s : s + batch_size],
+                                     attrs[s : s + batch_size], backend)
+            for s in range(0, len(attrs), batch_size)
+        ]
+        return (np.concatenate(out) if out else np.empty(0, dtype=np.int64))
+
+    def _insert_micro_batch(
+        self, vecs: np.ndarray, attrs_b: np.ndarray, backend: str
+    ) -> np.ndarray:
+        p = self.params
+        m, o, omega_c = p.m, p.o, p.ef_construction
+        B = len(attrs_b)
+        if B == 0:
+            return np.empty(0, dtype=np.int64)
+        # ---- Lines 2-4 + 18 (attribute side), hoisted batch-wide: register
+        # every value first so windows see the post-batch value set.
+        vals = [float(a) for a in attrs_b]
+        new_vals = {v for v in vals if not self.wbt.contains(v)}
+        u_after = self.wbt.n + len(new_vals)
+        while u_after > 2 * (o**self.graph.top):
+            self.graph.add_layer(clone_from=self.graph.top)
+        vids = self.store.append_batch(vecs, attrs_b)
+        self.graph.ensure_capacity(self.store.n)
+        for v in sorted(new_vals):
+            self.wbt.insert(v)
+        for vid, val in zip(vids.tolist(), vals):
+            self.value_map.setdefault(val, []).append(vid)
+            self._note_live_insert(val)
+        self.mutations += B
+        top = self.graph.top
+        batch_set = set(vids.tolist())
+        targets = self.store.vectors[vids]  # prepared (cosine-normalised) rows
+        attrs_np = self.store.attrs
+
+        # Per-member per-layer windows w.r.t. the post-batch value set — the
+        # rank arithmetic of Alg. 4 vectorised over the sorted unique values
+        # (``value_map`` keys mirror the WBT's content exactly; every batch
+        # value is already registered, so ``above_start = rank + 1``).
+        uvals = np.fromiter(
+            self.value_map.keys(), dtype=np.float64, count=len(self.value_map)
+        )
+        uvals.sort()
+        u = len(uvals)
+        vals_arr = np.asarray(vals, dtype=np.float64)
+        r = np.searchsorted(uvals, vals_arr, side="left")
+        wlo = np.empty((B, top + 1))
+        whi = np.empty((B, top + 1))
+        for l in range(top + 1):
+            half = o**l
+            lo_idx = np.maximum(0, r - half)
+            hi_idx = np.maximum(np.minimum(u - 1, r + half), lo_idx)
+            wlo[:, l] = np.minimum(uvals[lo_idx], vals_arr)
+            whi[:, l] = np.maximum(uvals[hi_idx], vals_arr)
+
+        # ---- Phase 1 (lines 5-10): batched per-layer candidate acquisition
+        # against the batch-start graph (frozen during this phase).  The
+        # carry U^{l+1} lives in padded [B, C] arrays: the window filter,
+        # the Thm-3.1 skip test and the carry/search merge (an id-sorted
+        # dedupe that keeps the carry's copy) are all row-parallel.
+        C = 2 * omega_c + 2
+        u_ids = np.full((B, C), -1, dtype=np.int64)
+        u_d = np.full((B, C), np.inf, dtype=np.float64)
+        u_lay_ids: list[np.ndarray] = [None] * (top + 1)  # type: ignore[list-item]
+        u_lay_d: list[np.ndarray] = [None] * (top + 1)  # type: ignore[list-item]
+        abb = np.arange(B)[:, None]
+        if self.store.n > B:  # the pre-batch graph is non-empty
+            # the graph is frozen during phase 1: build the top-down neighbor
+            # slab once and let every layer's search take a prefix view
+            n_now = self.store.n
+            slab_full = np.stack(
+                [self.graph.layers[l][:n_now] for l in range(top, -1, -1)],
+                axis=1,
+            ).reshape(n_now, (top + 1) * m)
+            ops_table = None
+            if backend == "ops":  # one device upload per frozen-graph phase
+                import jax.numpy as jnp
+
+                ops_table = jnp.asarray(self.store.vectors[:n_now])
+            uw = 0  # used carry width: every [B, C] pass runs on [:, :uw]
+            for l in range(top, -1, -1):
+                # window-filter the carry (Alg. 1 line 6, all rows at once)
+                if uw:
+                    uv = u_ids[:, :uw]
+                    am = attrs_np[np.maximum(uv, 0)]
+                    inw = (
+                        (uv >= 0)
+                        & (am >= wlo[:, l, None])
+                        & (am <= whi[:, l, None])
+                    )
+                    u_ids[:, :uw] = np.where(inw, uv, -1)
+                    u_d[:, :uw] = np.where(inw, u_d[:, :uw], np.inf)
+                    skip = inw.sum(axis=1) > m  # Thm 3.1: carry suffices
+                else:
+                    skip = np.zeros(B, dtype=bool)
+                self.build_stats.searches_skipped += int(skip.sum())
+                # vectorised Alg. 1 line 7: sample entry *ranks* for every
+                # member at once (4 tries each before the linear fallback)
+                lo_r = np.searchsorted(uvals, wlo[:, l], side="left")
+                hi_r = np.searchsorted(uvals, whi[:, l], side="right") - 1
+                span = np.maximum(hi_r - lo_r + 1, 1)
+                ks = lo_r[None, :] + (
+                    self._rng.random((4, B)) * span[None, :]
+                ).astype(np.int64)
+                choice = self._rng.random((4, B))
+                # warm-start: members with a carry seed their beam with the
+                # whole in-window carried candidate set (ids + distances
+                # already known — no DC, no random-walk approach hops);
+                # members with an empty carry fall back to Alg. 1 line 7's
+                # sampled window entry.
+                if uw:
+                    has_carry = (u_ids[:, :uw] >= 0).any(axis=1)
+                else:
+                    has_carry = np.zeros(B, dtype=bool)
+                need: list[int] = []
+                eps: list[int] = []
+                for b in np.nonzero(~skip)[0].tolist():
+                    if has_carry[b]:
+                        need.append(b)
+                        eps.append(0)  # unused: the seeds replace the entry
+                        continue
+                    ep = self._pick_entry(
+                        uvals, ks[:, b], choice[:, b], lo_r[b], hi_r[b],
+                        batch_set,
+                    )
+                    if ep is not None:
+                        need.append(b)
+                        eps.append(ep)
+                if need:
+                    res_i, res_d, dcs, _, _ = search_candidates_batch(
+                        self.store,
+                        self.graph,
+                        targets[need],
+                        np.asarray(eps, dtype=np.int64),
+                        np.stack([wlo[need, l], whi[need, l]], axis=1),
+                        l_min=l,
+                        l_max=top,
+                        width=omega_c,
+                        deleted=self.deleted or None,
+                        backend=backend,
+                        slab_cache=slab_full,
+                        ops_table=ops_table,
+                        seed_ids=u_ids[need, :uw] if uw else None,
+                        seed_d=u_d[need, :uw] if uw else None,
+                    )
+                    self.build_stats.dc += int(dcs.sum())
+                    self.build_stats.searches += len(need)
+                    # merge found into the carry: id-sort dedupe keeping the
+                    # carry's copy (stable sort; carry columns come first)
+                    Bn = len(need)
+                    abn = np.arange(Bn)[:, None]
+                    cat_i = np.concatenate(
+                        [u_ids[need][:, :uw], res_i.astype(np.int64)], axis=1
+                    )
+                    cat_d = np.concatenate(
+                        [u_d[need][:, :uw], res_d.astype(np.float64)], axis=1
+                    )
+                    pad_key = np.where(cat_i >= 0, cat_i, np.int64(2**31))
+                    order = np.argsort(pad_key, axis=1, kind="stable")
+                    ks_s = pad_key[abn, order]
+                    ci = cat_i[abn, order]
+                    cd = cat_d[abn, order]
+                    dup = np.zeros(ci.shape, dtype=bool)
+                    dup[:, 1:] = ks_s[:, 1:] == ks_s[:, :-1]
+                    drop = dup | (ks_s == 2**31)
+                    ci = np.where(drop, -1, ci)
+                    cd = np.where(drop, np.inf, cd)
+                    # left-compact back into C columns; dropped entries sort
+                    # last (inf), survivors by distance — so a rare carry
+                    # overflow truncates the FARTHEST candidates, not the
+                    # highest vertex ids
+                    w2 = min(C, ci.shape[1])
+                    ord2 = np.argsort(
+                        np.where(drop, np.inf, cd), axis=1, kind="stable"
+                    )[:, :w2]
+                    u_ids[need, :w2] = ci[abn, ord2]
+                    u_d[need, :w2] = cd[abn, ord2]
+                    kept = int((ci.shape[1] - drop.sum(axis=1)).max())
+                    uw = max(uw, min(C, kept))
+                u_lay_ids[l] = u_ids[:, :uw].copy()
+                u_lay_d[l] = u_d[:, :uw].copy()
+        else:
+            for l in range(top + 1):
+                u_lay_ids[l] = u_ids
+                u_lay_d[l] = u_d
+
+        # ---- Phase 2 (lines 11-17): conflict-aware commit, equivalent to
+        # sequential insertion in batch order.  Member b's candidates at
+        # layer l are its searched set plus every earlier batch member
+        # inside its window with exact [B, B] cross distances (batch members
+        # are unreachable during phase 1, so there are no dupes).  Forward
+        # selections depend only on these candidate sets — never on earlier
+        # members' committed edges — so ALL (b, l) RNG prunes run as one
+        # vectorised pass; back-edges then commit in batch order, with
+        # contended vertices (full neighbor lists) resolved by one terminal
+        # batched two-stage prune per (layer, vertex).
+        if self.store.metric == "l2":
+            sq = np.einsum("bd,bd->b", targets, targets)
+            cross = sq[:, None] + sq[None, :] - 2.0 * (targets @ targets.T)
+            np.maximum(cross, 0.0, out=cross)
+        else:
+            cross = 1.0 - targets @ targets.T
+        cross = cross.astype(np.float64)
+        m_fwd = max(1, m // 2)
+        T = max(m + m // 2, 8)  # nearest-T pre-truncation (see rng_prune_rows)
+        L1 = top + 1
+        cand_ids = np.full((B * L1, T), -1, dtype=np.int64)
+        cand_d = np.full((B * L1, T), np.inf, dtype=np.float64)
+        tri = np.tri(B, B, -1, dtype=bool)  # member b sees only earlier b'
+        vids_row = np.broadcast_to(vids[None, :], (B, B))
+        for l in range(L1):
+            cw = (
+                tri
+                & (vals_arr[None, :] >= wlo[:, l, None])
+                & (vals_arr[None, :] <= whi[:, l, None])
+            )
+            self.build_stats.dc += int(cw.sum())
+            cat_i = np.concatenate([u_lay_ids[l], vids_row], axis=1)
+            cat_d = np.concatenate(
+                [u_lay_d[l], np.where(cw, cross, np.inf)], axis=1
+            )
+            kc = cat_d.shape[1]
+            if kc > T:
+                part = np.argpartition(cat_d, T - 1, axis=1)[:, :T]
+                sel_i = cat_i[abb, part]
+                sel_d = cat_d[abb, part]
+            else:
+                sel_i = cat_i
+                sel_d = cat_d
+            sel_i = np.where(np.isfinite(sel_d), sel_i, -1)
+            rows = np.arange(B) * L1 + l
+            cand_ids[rows, : sel_i.shape[1]] = sel_i
+            cand_d[rows, : sel_d.shape[1]] = sel_d
+        sel_ids, sel_d, sel_mask = rng_prune_rows(
+            self.store, cand_ids, cand_d, m_fwd
+        )
+        # ---- commit (batch order).  Forward lists: one scatter per layer.
+        # Back-edges: grouped per layer by target — a stable sort keeps the
+        # batch-order arrival sequence inside every (layer, target) run, so
+        # slot assignment (old count + within-run position) reproduces the
+        # sequential appends exactly; arrivals past slot m defer to the
+        # terminal per-vertex prune.
+        overflow: dict[tuple[int, int], list[tuple[int, float]]] = {}
+        lay = self.graph.layers
+        cnt = self.graph.counts
+        sel3_i = sel_ids.reshape(B, L1, m_fwd)
+        sel3_d = sel_d.reshape(B, L1, m_fwd)
+        sel3_m = sel_mask.reshape(B, L1, m_fwd)
+        for l in range(L1):
+            fwd_i = sel3_i[:, l]  # [B, m_fwd] selection order, -1 padded
+            fwd_m = sel3_m[:, l]
+            deg = fwd_m.sum(axis=1).astype(np.int32)
+            lay[l][vids, :m_fwd] = np.where(fwd_m, fwd_i, -1).astype(np.int32)
+            lay[l][vids, m_fwd:] = -1
+            cnt[l][vids] = deg
+            # (padding holes cannot occur: sel_mask is a selection-order
+            # prefix — rng_prune_rows packs valid entries first)
+            nb2, nc2 = np.nonzero(fwd_m)
+            if nb2.size == 0:
+                continue
+            tgt = fwd_i[nb2, nc2]
+            own = vids[nb2]
+            dab = sel3_d[:, l][nb2, nc2]
+            order = np.argsort(tgt, kind="stable")  # batch order within runs
+            tgt_s, own_s, dab_s = tgt[order], own[order], dab[order]
+            run_start = np.ones(len(tgt_s), dtype=bool)
+            run_start[1:] = tgt_s[1:] != tgt_s[:-1]
+            run_id = np.cumsum(run_start) - 1
+            starts = np.nonzero(run_start)[0]
+            pos = np.arange(len(tgt_s)) - starts[run_id]
+            base = cnt[l][tgt_s]
+            slot = base + pos
+            ok = slot < self.graph.m
+            lay[l][tgt_s[ok], slot[ok]] = own_s[ok].astype(np.int32)
+            ends = np.append(starts[1:], len(tgt_s))
+            new_deg = np.minimum(base[starts] + (ends - starts), self.graph.m)
+            cnt[l][tgt_s[starts]] = new_deg.astype(np.int32)
+            nover = int((~ok).sum())
+            if nover:
+                self.build_stats.prunes += nover
+                for t, o_, d_ in zip(
+                    tgt_s[~ok].tolist(), own_s[~ok].tolist(), dab_s[~ok].tolist()
+                ):
+                    overflow.setdefault((l, t), []).append((o_, d_))
+        if overflow:
+            self._resolve_back_edge_overflow(overflow, uvals)
+        return vids
+
+    def _resolve_back_edge_overflow(
+        self,
+        overflow: dict[tuple[int, int], list[tuple[int, float]]],
+        uvals: np.ndarray,
+    ) -> None:
+        """Terminal two-stage prune for every contended (layer, vertex) of a
+        micro-batch: window-filter the vertex's kept neighbors (Alg. 1 line
+        16, rank arithmetic over ``uvals``), join them with ALL its deferred
+        back-edge arrivals, and RNG-prune each contended list — every list
+        in one vectorised ``rng_prune_rows`` pass.  Equivalent to a
+        sequential order in which each contended vertex's arrivals land
+        consecutively and are pruned together."""
+        p = self.params
+        u = len(uvals)
+        keys = list(overflow.keys())
+        R = len(keys)
+        # windows of every contended vertex in one vectorised rank pass
+        l_arr = np.asarray([l for l, _ in keys], dtype=np.int64)
+        t_arr = np.asarray([t for _, t in keys], dtype=np.int64)
+        attr_t = self.store.attrs[t_arr]
+        half = np.power(p.o, l_arr)
+        rk = np.searchsorted(uvals, attr_t, side="left")
+        lo_idx = np.maximum(0, rk - half)
+        hi_idx = np.maximum(np.minimum(u - 1, rk + half), lo_idx)
+        w_lo = np.minimum(uvals[lo_idx], attr_t)
+        w_hi = np.maximum(uvals[hi_idx], attr_t)
+        m = self.graph.m
+        max_new = max(len(v) for v in overflow.values())
+        width = m + max_new
+        cand_ids = np.full((R, width), -1, dtype=np.int64)
+        cand_d = np.full((R, width), np.inf, dtype=np.float64)
+        kcnt = np.zeros(R, dtype=np.int64)
+        col = np.arange(m)
+        # window-filter + left-compact every contended vertex's kept
+        # neighbors, grouped per layer (one gather + one argsort per layer)
+        for l in np.unique(l_arr).tolist():
+            idx = np.nonzero(l_arr == l)[0]
+            t_sub = t_arr[idx]
+            rows = self.graph.layers[l][t_sub].astype(np.int64)  # [k, m]
+            valid = col[None, :] < self.graph.counts[l][t_sub][:, None]
+            a = self.store.attrs[rows]
+            keep = valid & (a >= w_lo[idx, None]) & (a <= w_hi[idx, None])
+            if self.deleted:
+                keep &= ~np.isin(rows, np.fromiter(self.deleted, dtype=np.int64))
+            order = np.argsort(~keep, axis=1, kind="stable")
+            ar = np.arange(len(idx))[:, None]
+            rows_c = rows[ar, order]
+            keep_c = keep[ar, order]
+            cand_ids[idx, :m] = np.where(keep_c, rows_c, -1)
+            kcnt[idx] = keep.sum(axis=1)
+        self.build_stats.dc += int(kcnt.sum())
+        # kept neighbors' distances to their owner, one batched call
+        kd = self.store.dist_block(
+            self.store.vectors[t_arr], np.maximum(cand_ids[:, :m], 0)
+        ).astype(np.float64)
+        cand_d[:, :m] = np.where(cand_ids[:, :m] >= 0, kd, np.inf)
+        # deferred arrivals append after the kept prefix, in batch order
+        for r, (l, t) in enumerate(keys):
+            k = int(kcnt[r])
+            for i, (vid, d_ab) in enumerate(overflow[(l, t)]):
+                cand_ids[r, k + i] = vid
+                cand_d[r, k + i] = d_ab
+        sel_ids, _, sel_mask = rng_prune_rows(self.store, cand_ids, cand_d, p.m)
+        for r, (l, t) in enumerate(keys):
+            self.graph.set_neighbors(
+                l, t, sel_ids[r][sel_mask[r]].astype(np.int32)
+            )
+
+    def _two_stage_prune(
+        self, l: int, b: int, vid: int, d_ab: float, uvals: np.ndarray | None = None
+    ) -> None:
+        """Alg. 1 lines 15-17: window prune then RNG prune of b's list.
+
+        ``uvals`` is an optional sorted snapshot of the unique values (the
+        batched path computes it once per micro-batch): the window is then
+        derived by rank arithmetic over it instead of two WBT traversals —
+        identical bounds, no tree walk per back-edge."""
         p = self.params
         self.build_stats.prunes += 1
         attr_b = float(self.store.attrs[b])
-        w_lo, w_hi = self.wbt.window(attr_b, p.o**l)
+        half = p.o**l
+        if uvals is None:
+            w_lo, w_hi = self.wbt.window(attr_b, half)
+        else:
+            u = len(uvals)
+            rk = int(np.searchsorted(uvals, attr_b, side="left"))
+            lo_idx = max(0, rk - half)
+            hi_idx = max(min(u - 1, rk + half), lo_idx)
+            w_lo = min(float(uvals[lo_idx]), attr_b)
+            w_hi = max(float(uvals[hi_idx]), attr_b)
         vb = self.store.vectors[b]
-        keep_ids = [
-            int(j)
-            for j in self.graph.neighbors(l, b)
-            if w_lo <= self.store.attrs[j] <= w_hi and j not in self.deleted
-        ]
-        cand: list[tuple[float, int]] = [(d_ab, vid)]
-        if keep_ids:
-            ids = np.asarray(keep_ids, dtype=np.int64)
-            dists = self.store.dist_batch(vb, ids)
-            self.build_stats.dc += len(keep_ids)
-            cand.extend(zip(dists.tolist(), keep_ids))
-        sel = rng_prune(self.store, vb, cand, p.m)
-        self.graph.set_neighbors(l, b, np.asarray([j for _, j in sel], dtype=np.int32))
+        nbrs = self.graph.neighbors(l, b)
+        a = self.store.attrs[nbrs]
+        keep = nbrs[(a >= w_lo) & (a <= w_hi)]
+        if self.deleted:
+            keep = np.asarray(
+                [j for j in keep.tolist() if j not in self.deleted], dtype=np.int64
+            )
+        ids = np.concatenate([[vid], keep.astype(np.int64)])
+        dists = np.concatenate(
+            [[d_ab], self.store.dist_batch(vb, keep).astype(np.float64)]
+        )
+        self.build_stats.dc += len(keep)
+        sel_i, _ = rng_prune_ids(self.store, ids, dists, p.m)
+        self.graph.set_neighbors(l, b, sel_i.astype(np.int32))
 
-    def _sample_entry(self, w_lo: float, w_hi: float, exclude: int) -> int | None:
-        """Alg. 1 line 7: a random vertex with attribute value in the window."""
+    def _pick_entry(
+        self,
+        uvals: np.ndarray,
+        ks: np.ndarray,
+        choice: np.ndarray,
+        lo_r: int,
+        hi_r: int,
+        batch_set: set[int],
+    ) -> int | None:
+        """Alg. 1 line 7 for the batched path: try the 4 pre-sampled value
+        ranks, then fall back to a linear sweep of the window — mirrors
+        ``_sample_entry`` with the WBT walks replaced by rank lookups into
+        the sorted-values snapshot (``uvals``)."""
+        lo_r, hi_r = int(lo_r), int(hi_r)
+        if hi_r < lo_r:
+            return None
+        for t in range(4):
+            val = float(uvals[min(int(ks[t]), hi_r)])
+            cands = [
+                c
+                for c in self.value_map.get(val, ())
+                if c not in batch_set and c not in self.deleted
+            ]
+            if cands:
+                return int(cands[int(choice[t] * len(cands)) % len(cands)])
+        for k in range(lo_r, hi_r + 1):
+            for c in self.value_map.get(float(uvals[k]), ()):
+                if c not in batch_set and c not in self.deleted:
+                    return int(c)
+        return None
+
+    def _sample_entry(
+        self, w_lo: float, w_hi: float, exclude: int | set[int]
+    ) -> int | None:
+        """Alg. 1 line 7: a random vertex with attribute value in the window.
+
+        ``exclude`` is the inserting vertex id, or — during batched
+        construction — the whole pending micro-batch (its members have no
+        committed edges yet, so they must not seed a search)."""
         if self.wbt.n == 0:
             return None
+        excl = exclude if isinstance(exclude, set) else {exclude}
         lo = self.wbt.rank(w_lo)
         hi = self.wbt.count_le(w_hi) - 1
         if hi < lo:
@@ -191,7 +670,7 @@ class WoWIndex:
             k = int(self._rng.integers(lo, hi + 1))
             val = self.wbt.select(k)
             cands = [
-                c for c in self.value_map.get(val, []) if c != exclude and c not in self.deleted
+                c for c in self.value_map.get(val, []) if c not in excl and c not in self.deleted
             ]
             if cands:
                 return int(cands[self._rng.integers(0, len(cands))])
@@ -199,7 +678,7 @@ class WoWIndex:
         for k in range(lo, hi + 1):
             val = self.wbt.select(k)
             for c in self.value_map.get(val, []):
-                if c != exclude and c not in self.deleted:
+                if c not in excl and c not in self.deleted:
                     return int(c)
         return None
 
@@ -242,7 +721,7 @@ class WoWIndex:
             stats = SearchStats()
         x, y = float(rng[0]), float(rng[1])
         q = self.store.prepare(np.asarray(q))
-        n_prime = self.wbt.count_range(x, y)
+        n_prime = self.selectivity(x, y)
         if n_prime == 0 or self.store.n == 0:
             return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.float32), stats
         l_d = self.landing_layer(n_prime) if l_max is None else min(l_max, self.graph.top)
@@ -286,12 +765,55 @@ class WoWIndex:
             return None
         return int(cands[0])
 
+    def selectivity(self, x: float, y: float) -> int:
+        """Live ``n'`` for Alg. 3: unique values in [x, y] minus the *dead*
+        ones (values whose duplicates are all deleted).  The WBT never
+        removes values, so counting it alone leaves the landing layer
+        computed from a stale selectivity after deletes."""
+        n_prime = self.wbt.count_range(x, y)
+        if self._dead_vals:
+            n_prime -= bisect.bisect_right(self._dead_vals, y) - bisect.bisect_left(
+                self._dead_vals, x
+            )
+        return n_prime
+
+    def _note_live_insert(self, val: float) -> None:
+        """Live-count bookkeeping for one committed insert of ``val``; a
+        previously dead value is resurrected out of the dead list."""
+        c = self._live_counts.get(val, 0)
+        self._live_counts[val] = c + 1
+        if c == 0 and self._dead_vals:
+            i = bisect.bisect_left(self._dead_vals, val)
+            if i < len(self._dead_vals) and self._dead_vals[i] == val:
+                self._dead_vals.pop(i)
+
     # ---------------------------------------------------------------- delete
     def delete(self, vid: int) -> None:
         """Mark-based deletion (§3.7). The vertex stays traversable; the
-        two-stage prune removes it from neighbor lists opportunistically."""
-        if 0 <= vid < self.store.n:
-            self.deleted.add(int(vid))
+        two-stage prune removes it from neighbor lists opportunistically.
+        When a value's last live duplicate dies the value joins the dead
+        list and stops counting toward query selectivity."""
+        vid = int(vid)
+        if not (0 <= vid < self.store.n) or vid in self.deleted:
+            return
+        self.deleted.add(vid)
+        self.mutations += 1
+        val = float(self.store.attrs[vid])
+        c = self._live_counts.get(val, 0) - 1
+        self._live_counts[val] = c
+        if c == 0:
+            bisect.insort(self._dead_vals, val)
+
+    def undelete(self, vid: int) -> None:
+        """Undo a mark-based deletion (keeps the live-count/dead-value
+        selectivity bookkeeping consistent — never mutate ``deleted``
+        directly)."""
+        vid = int(vid)
+        if vid not in self.deleted:
+            return
+        self.deleted.discard(vid)
+        self.mutations += 1
+        self._note_live_insert(float(self.store.attrs[vid]))
 
     # ------------------------------------------------------------- reporting
     def memory_bytes(self) -> int:

@@ -246,6 +246,345 @@ def search_candidates(
     return out
 
 
+def search_candidates_batch(
+    store: VectorStore,
+    graph: LayeredGraph,
+    targets: np.ndarray,
+    eps: np.ndarray,
+    ranges: np.ndarray,
+    l_min: int,
+    l_max: int,
+    width: int,
+    deleted: set[int] | None = None,
+    early_stop: bool = True,
+    backend: str = "numpy",
+    slab_cache: np.ndarray | None = None,
+    ops_table=None,
+    seed_ids: np.ndarray | None = None,
+    seed_d: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Lock-step batched ``SearchCandidates`` (Alg. 2) for B independent
+    targets over the *live* host graph — the construction twin of the device
+    hop loop in ``repro.core.device_search``, and the engine under
+    ``WoWIndex.insert_batch``.
+
+    Per hop, every still-active member selects its nearest unexpanded beam
+    entry; the neighbor blocks of ALL swept layers are gathered as one
+    [Ba, L*m] slab, the early-stop layer mask is evaluated vectorially
+    (a layer below ``l`` contributes only if every layer above it had an
+    unvisited out-of-range neighbor — out-of-range vertices are never
+    marked visited inside a hop, so the flags are data-parallel computable
+    up front, exactly as on the device path), duplicates across layers are
+    dropped by a packed single-key sort (id-major, layer-priority rank
+    minor — the device pipeline's dedupe), the per-hop ``c_n <= m`` cap
+    admits the best-ranked ``m+1`` survivors, and all members' admitted
+    neighbors are distance-evaluated in ONE batched BLAS contraction
+    (``backend="numpy"``, via ``VectorStore.dist_block``) or one fused
+    gather+distance kernel dispatch (``backend="ops"``, via
+    ``repro.kernels.ops.gather_norm_dot`` — the serving path's machinery).
+
+    Like the device path, the width-W sorted beam doubles as the candidate
+    heap (entries beyond W can never be expanded by the paper's algorithm
+    either); ``search_candidates`` stays the sequential parity oracle.
+    Deleted vertices remain traversable (they occupy beam slots and are
+    expanded) but are masked out of the returned candidate arrays (§3.7).
+
+    Args:
+        targets: f32 [B, d] prepared query vectors.
+        eps:     int [B] entry vertex per member.
+        ranges:  f64 [B, 2] per-member (lo, hi) attribute windows.
+
+    Returns ``(res_i, res_d, dc, hops, filter_checks)``: per-member sorted
+    candidate ids [B, W] (-1 padded, deleted masked out) with distances
+    [B, W], plus per-member instrumentation (DC accounting preserved per
+    insert).
+    """
+    B = len(eps)
+    n = store.n
+    W = int(width)
+    m = graph.m
+    attrs = store.attrs[:n]
+    xs = np.ascontiguousarray(ranges[:, 0], dtype=np.float64)
+    ys = np.ascontiguousarray(ranges[:, 1], dtype=np.float64)
+    targets = np.asarray(targets, dtype=np.float32).reshape(B, store.dim)
+    eps = np.asarray(eps, dtype=np.int64).reshape(B)
+    q2 = np.einsum("bd,bd->b", targets, targets)
+
+    vec_tab = store.vectors
+    nrm_tab = store.sq_norms
+    metric_l2 = store.metric == "l2"
+    sparse_eval = backend != "ops"
+    if backend == "ops":
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import gather_norm_dot
+
+        # ops_table caches the device-side copy across the calls of one
+        # frozen-graph phase (a micro-batch insert runs one search per
+        # layer — re-uploading the [n, d] table each time would dominate)
+        table = ops_table if ops_table is not None else jnp.asarray(
+            store.vectors[:n]
+        )
+
+        def eval_ids(tg_sub, q2_sub, ids_pad):
+            dots, norms = gather_norm_dot(
+                table, jnp.asarray(ids_pad, jnp.int32), jnp.asarray(tg_sub)
+            )
+            dots, norms = np.asarray(dots), np.asarray(norms)
+            if store.metric == "l2":
+                d = norms - 2.0 * dots + q2_sub[:, None]
+                return np.maximum(d, 0.0)
+            return 1.0 - dots
+    else:
+
+        def eval_ids(tg_sub, q2_sub, ids_pad):
+            # inlined VectorStore.dist_block against cached q2 (the hop hot
+            # path: one gather + one batched BLAS contraction)
+            x = vec_tab[ids_pad]
+            dots = np.einsum("bkd,bd->bk", x, tg_sub)
+            if store.metric == "l2":
+                d = nrm_tab[ids_pad] - 2.0 * dots + q2_sub[:, None]
+                np.maximum(d, 0.0, out=d)
+                return d
+            return 1.0 - dots
+
+    # ---- compacted working state (the device path's ragged-batch
+    # compaction, host edition): every per-hop op runs on the active rows
+    # plus a bounded fraction of retired stragglers; when the active
+    # fraction drops below the threshold the whole state compacts ----
+    org = np.arange(B)  # current row -> original member
+    tg = targets
+    q2c = q2
+    xc, yc = xs, ys
+    rd = np.full((B, W), np.inf, dtype=np.float32)
+    ri = np.full((B, W), -1, dtype=np.int32)
+    re = np.zeros((B, W), dtype=bool)
+    vis = np.zeros((B, n), dtype=bool)
+    dcc = np.zeros(B, dtype=np.int64)
+    if seed_ids is not None and seed_ids.size:
+        # multi-seed: preload the beam with the caller's already-evaluated
+        # candidates (the Thm-3.1 carry during builds) — their distances
+        # are known, so they cost no DC and no re-discovery hops
+        S = min(seed_ids.shape[1], W)
+        sdist = np.where(seed_ids >= 0, seed_d, np.inf)
+        so = np.argsort(sdist, axis=1, kind="stable")[:, :S]
+        arB = np.arange(B)[:, None]
+        rd[:, :S] = sdist[arB, so].astype(np.float32)
+        ri[:, :S] = np.where(
+            np.isfinite(rd[:, :S]), seed_ids[arB, so], -1
+        ).astype(np.int32)
+        sb, sc = np.nonzero(ri[:, :S] >= 0)
+        vis.ravel()[sb.astype(np.int64) * n + ri[sb, sc]] = True
+        has_seed = ri[:, 0] >= 0
+    else:
+        has_seed = np.zeros(B, dtype=bool)
+    noseed = np.nonzero(~has_seed)[0]
+    if noseed.size:  # Alg. 1 line 7 entries for members with no carry
+        vis[noseed, eps[noseed]] = True
+        rd[noseed, 0] = eval_ids(
+            tg[noseed], q2[noseed], eps[noseed, None].astype(np.int32)
+        )[:, 0]
+        ri[noseed, 0] = eps[noseed]
+        dcc[noseed] = 1  # the entry evaluation
+    hoc = np.zeros(B, dtype=np.int64)
+    fcc = np.zeros(B, dtype=np.int64)
+    act = np.ones(B, dtype=bool)
+
+    out_i = np.full((B, W), -1, dtype=np.int32)
+    out_d = np.full((B, W), np.inf, dtype=np.float32)
+    out_dc = np.zeros(B, dtype=np.int64)
+    out_hops = np.zeros(B, dtype=np.int64)
+    out_fc = np.zeros(B, dtype=np.int64)
+
+    def retire(rows: np.ndarray) -> None:
+        idx = org[rows]
+        out_i[idx] = ri[rows]
+        out_d[idx] = rd[rows]
+        out_dc[idx] = dcc[rows]
+        out_hops[idx] = hoc[rows]
+        out_fc[idx] = fcc[rows]
+
+    L_span = l_max - l_min + 1
+    F = L_span * m
+    # one [n, F] top-down neighbor slab per call: the whole layer sweep of
+    # a hop is then a single row gather, and the -1 padding doubles as the
+    # validity mask (no counts needed).  ``slab_cache`` (a full
+    # [n, (l_max+1)*m] top-down slab built once per frozen-graph phase,
+    # e.g. a micro-batch insert) supplies the prefix view instead.
+    if slab_cache is not None:
+        slab = slab_cache[:, :F]
+    else:
+        slab = np.stack(
+            [graph.layers[l][:n] for l in range(l_max, l_min - 1, -1)], axis=1
+        ).reshape(n, F)
+    slot = np.arange(F, dtype=np.int32)  # layer-major rank (sweep order)
+    K = m + 1  # the c_n cap admits at most m+1 neighbors per hop
+    BIG = 2**30
+    # pack (id, rank) into one bit-shifted sortable key (the device
+    # pipeline's packed single-key dedupe); int32 sorts ~2x faster
+    shift = 8 if F + 1 <= 256 else 16
+    key_dtype = np.int32 if (n << shift) < 2**31 - 1 else np.int64
+    rank_mask = (1 << shift) - 1
+    guard = 0
+
+    # per-row index scaffolding changes only at compaction events
+    Bc = B
+    aba = np.arange(Bc)[:, None]
+    off_n = aba * np.int64(n)
+    off_f = aba * np.int64(F)
+    while guard <= n + 2:  # each hop expands >= 1 distinct vertex per member
+        guard += 1
+        all_active = bool(act.all())
+        if all_active:
+            masked = np.where(re, np.inf, rd)
+        else:
+            masked = np.where(re | ~act[:, None], np.inf, rd)
+        jbest = np.argmin(masked, axis=1)
+        dbest = masked[np.arange(Bc), jbest]
+        worst = rd[:, W - 1]  # +inf while the beam is not full
+        done = act & (~np.isfinite(dbest) | (dbest > worst))
+        any_done = bool(done.any())
+        if any_done:
+            retire(done)
+            act &= ~done
+            na = int(act.sum())
+            if na == 0:
+                break
+            if na < 0.6 * Bc and Bc > 8:  # compact the stragglers
+                keep = act
+                org, tg, q2c = org[keep], tg[keep], q2c[keep]
+                xc, yc = xc[keep], yc[keep]
+                rd, ri, re = rd[keep], ri[keep], re[keep]
+                vis = vis[keep]
+                dcc, hoc, fcc = dcc[keep], hoc[keep], fcc[keep]
+                act = np.ones(len(org), dtype=bool)
+                Bc = len(org)
+                aba = np.arange(Bc)[:, None]
+                off_n = aba * np.int64(n)
+                off_f = aba * np.int64(F)
+                continue
+        sel_all = all_active and not any_done
+        sel = act
+        if sel_all:
+            re[np.arange(Bc), jbest] = True
+            hoc += 1
+        else:
+            nsel = np.nonzero(sel)[0]
+            if nsel.size == 0:
+                continue
+            re[nsel, jbest[nsel]] = True
+            hoc[sel] += 1
+        s = np.maximum(ri[np.arange(Bc), jbest], 0)
+        # ---- flattened top-down layer sweep (Alg. 2 lines 7-17) ----
+        # pad slots read as id -1: every consumer is masked by ``valid``
+        # (wrap-mode takes make the stray gathers harmless).  Gathers go
+        # through flat np.take — measurably faster than 2D fancy indexing.
+        safe = slab[s]  # [Bc, F] int32; -1 pads ARE the validity mask
+        valid = safe >= 0
+        unv = valid & ~vis.ravel().take(off_n + safe, mode="wrap")
+        if not sel_all:
+            unv &= sel[:, None]
+        a = attrs.take(safe, mode="wrap")
+        in_r = (a >= xc[:, None]) & (a <= yc[:, None])
+        elig = unv & in_r
+        if early_stop:
+            # layer l+1's "descend" flag: any unvisited out-of-range
+            # neighbor (unv ^ elig == unvisited-and-OOR, one pass)
+            oor = (unv ^ elig).reshape(Bc, L_span, m).any(axis=2)
+            incl = np.ones((Bc, L_span), dtype=bool)
+            if L_span > 1:
+                incl[:, 1:] = np.logical_and.accumulate(oor[:, :-1], axis=1)
+            unv3 = unv.reshape(Bc, L_span, m)
+            unv3 &= incl[:, :, None]
+            elig3 = elig.reshape(Bc, L_span, m)
+            elig3 &= incl[:, :, None]
+        fcc += unv.sum(axis=1)
+        # ---- packed single-key sort dedupe + c_n cap (device pipeline) ----
+        rank = np.where(elig, slot[None, :], np.int32(F))
+        if key_dtype is np.int32:
+            key = (safe << shift) | rank
+        else:
+            key = (safe.astype(np.int64) << shift) | rank.astype(np.int64)
+        key.sort(axis=1)
+        ids_s = key >> shift
+        rank_s = key & rank_mask
+        first = np.empty((Bc, F), dtype=bool)
+        first[:, 0] = True
+        np.not_equal(ids_s[:, 1:], ids_s[:, :-1], out=first[:, 1:])
+        # ineligible slots carry rank F, which the "< F" admission mask
+        # rejects — no separate eligibility AND is needed
+        surv_rank = np.where(first, rank_s, np.int32(BIG))
+        # the admitted set is the K smallest ranks among survivors; a small
+        # second-stage sort packs valid lanes into a per-row prefix so the
+        # eval/merge width can shrink to the hop's max admission count
+        if F > K:
+            order = np.argpartition(surv_rank, K - 1, axis=1)[:, :K]
+        else:
+            order = np.argsort(surv_rank, axis=1, kind="stable")[:, :K]
+        sub = surv_rank.ravel().take(off_f + order)
+        o2 = np.argsort(sub, axis=1, kind="stable")
+        Ko = order.shape[1]
+        flat_o = aba * np.int32(Ko) + o2
+        order = order.ravel().take(flat_o)
+        mask = sub.ravel().take(flat_o) < F  # valid lanes are a prefix
+        if not mask.any():
+            continue
+        kmax = int(mask.sum(axis=1).max())
+        order = order[:, :kmax]
+        mask = mask[:, :kmax]
+        adm_ids = ids_s.ravel().take(off_f + order).astype(np.int32)
+        nb, ncol = np.nonzero(mask)
+        ids_f = adm_ids[nb, ncol]
+        vis.ravel()[nb.astype(np.int64) * n + ids_f] = True
+        # ---- one batched distance evaluation for the whole hop ----
+        if sparse_eval:
+            # only the admitted lanes (~40% of the dense [Bc, K] block)
+            xf = vec_tab[ids_f]
+            dotf = np.einsum("nd,nd->n", xf, tg[nb])
+            if metric_l2:
+                df = nrm_tab[ids_f] - 2.0 * dotf + q2c[nb]
+                np.maximum(df, 0.0, out=df)
+            else:
+                df = 1.0 - dotf
+            dists = np.full((Bc, kmax), np.inf, dtype=np.float32)
+            dists[nb, ncol] = df
+        else:
+            dists = eval_ids(tg, q2c, adm_ids)
+            dists = np.where(mask, dists, np.inf).astype(np.float32, copy=False)
+        dcc += mask.sum(axis=1)
+        # ---- stable merge into the sorted width-W beam ----
+        cat_d = np.concatenate([rd, dists], axis=1)
+        cat_i = np.concatenate([ri, np.where(mask, adm_ids, -1)], axis=1)
+        cat_e = np.concatenate([re, np.zeros_like(mask)], axis=1)
+        WK = cat_d.shape[1]
+        if metric_l2 and WK <= 256:
+            # l2 distances are non-negative, so the f32 bit pattern is
+            # order-preserving as an int: pack (dist_bits, source slot)
+            # into one int64 and use a DIRECT sort — cheaper than argsort's
+            # indirection, bitwise the same stable order
+            key = (cat_d.view(np.int32).astype(np.int64) << 8) | np.arange(
+                WK, dtype=np.int64
+            )
+            key.sort(axis=1)
+            order = (key[:, :W] & 0xFF).astype(np.int64)
+        else:
+            order = np.argsort(cat_d, axis=1, kind="stable")[:, :W]
+        flat = (aba * np.int32(WK)) + order
+        rd = cat_d.ravel().take(flat)
+        ri = cat_i.ravel().take(flat)
+        re = cat_e.ravel().take(flat)
+
+    if act.any():
+        retire(act)
+    if deleted:
+        dead = out_i >= 0
+        dead &= np.isin(
+            out_i, np.fromiter(deleted, dtype=np.int64, count=len(deleted))
+        )
+        out_i = np.where(dead, -1, out_i)
+    return out_i, out_d, out_dc, out_hops, out_fc
+
+
 def rng_prune(
     store: VectorStore,
     target: np.ndarray,
@@ -299,3 +638,125 @@ def rng_prune(
     if len(selected) < max_m:  # keepPrunedConnections backfill
         selected.extend(pruned[: max_m - len(selected)])
     return selected
+
+
+def rng_prune_ids(
+    store: VectorStore,
+    ids: np.ndarray,
+    dists: np.ndarray,
+    max_m: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Array-core RNG prune — the same selection rule and
+    keepPrunedConnections backfill as ``rng_prune`` over parallel
+    ``(ids, dists)`` arrays of *unique* ids (candidates from the batched
+    machinery are deduplicated by construction, so the tuple/set plumbing
+    of the list API is pure overhead there)."""
+    if ids.size == 0:
+        return ids[:0], dists[:0]
+    order = np.argsort(dists, kind="stable")
+    ids = ids[order]
+    dists = dists[order]
+    if len(ids) <= max_m or max_m == 1:
+        return ids[:max_m], dists[:max_m]
+    xs = store.vectors[ids]
+    if store.metric == "l2":
+        sq = np.einsum("ij,ij->i", xs, xs)
+        pair = sq[:, None] + sq[None, :] - 2.0 * (xs @ xs.T)
+    else:
+        pair = 1.0 - xs @ xs.T
+    ptab = pair.tolist()
+    dl = dists.tolist()
+    sel_rows: list[int] = []
+    pruned_rows: list[int] = []
+    for i in range(len(ids)):
+        if len(sel_rows) >= max_m:
+            break
+        di = dl[i]
+        row = ptab[i]
+        ok = True
+        for r in sel_rows:
+            if row[r] <= di:
+                ok = False
+                break
+        if ok:
+            sel_rows.append(i)
+        else:
+            pruned_rows.append(i)
+    if len(sel_rows) < max_m:  # keepPrunedConnections backfill
+        sel_rows.extend(pruned_rows[: max_m - len(sel_rows)])
+    sel = np.asarray(sel_rows, dtype=np.int64)
+    return ids[sel], dists[sel]
+
+
+def rng_prune_rows(
+    store: VectorStore,
+    ids: np.ndarray,
+    dists: np.ndarray,
+    max_m: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """RNG prune of R independent candidate rows in one vectorised pass —
+    the batch-construction twin of ``rng_prune`` (same greedy rule, same
+    keepPrunedConnections backfill, same nearest-first order).
+
+    ``ids`` [R, T] (-1 padded) with ``dists`` [R, T] (+inf padded).  All
+    R pairwise matrices come from ONE batched matmul, and the greedy scan
+    runs as T lock-step mask-algebra steps over every row simultaneously:
+    candidate ``i`` is accepted iff it is not shadowed by an accepted
+    ``s`` (``pair[i, s] <= dist[i]``) and the row still has slots.  A row
+    whose greedy pass accepts fewer than ``max_m`` backfills with its
+    nearest rejected candidates, exactly like the list API (the backfill
+    can only matter when the slot gate never fired, so gate-blocked
+    candidates are never wrongly backfilled).
+
+    Returns ``(sel_ids, sel_d, sel_mask)`` of shape [R, max_m]: the
+    selected ids per row in selection order, -1/inf padded, with the
+    validity mask.
+    """
+    R, T = ids.shape
+    ar = np.arange(R)[:, None]
+    order = np.argsort(dists, axis=1, kind="stable")
+    ids = ids[ar, order]
+    dists = dists[ar, order]
+    valid = (ids >= 0) & np.isfinite(dists)
+    n_cand = valid.sum(axis=1)
+    sel_ids = np.full((R, max_m), -1, dtype=ids.dtype)
+    sel_d = np.full((R, max_m), np.inf, dtype=dists.dtype)
+    # rows that already fit need no pruning (the list API's short-circuit):
+    # their selection is just the first max_m sorted candidates
+    hard = np.nonzero(n_cand > max_m)[0]
+    triv = n_cand <= max_m
+    if triv.any():
+        w = min(max_m, T)
+        sel_ids[triv, :w] = np.where(valid[triv, :w], ids[triv, :w], -1)
+        sel_d[triv, :w] = np.where(valid[triv, :w], dists[triv, :w], np.inf)
+    if hard.size:
+        idh, dh, vh = ids[hard], dists[hard], valid[hard]
+        Rh = len(hard)
+        arh = np.arange(Rh)[:, None]
+        xs = store.vectors[np.maximum(idh, 0)]  # [Rh, T, d]
+        dots = np.matmul(xs, xs.transpose(0, 2, 1))
+        if store.metric == "l2":
+            sq = np.einsum("rtd,rtd->rt", xs, xs)
+            pair = sq[:, :, None] + sq[:, None, :] - 2.0 * dots
+        else:
+            pair = 1.0 - dots
+        acc = np.zeros((Rh, T), dtype=bool)
+        cnt = np.zeros(Rh, dtype=np.int64)
+        nch = n_cand[hard]
+        for i in range(T):
+            shadowed = ((pair[:, i, :] <= dh[:, i, None]) & acc).any(axis=1)
+            ok = vh[:, i] & (cnt < max_m) & ~shadowed
+            acc[:, i] = ok
+            cnt += ok
+            # early exit: once every row is full or out of candidates, the
+            # remaining steps only produce rejections the backfill ignores
+            if i + 1 < T and ((cnt >= max_m) | (nch <= i + 1)).all():
+                break
+        rank = np.arange(T)[None, :]
+        key = np.where(acc, rank, T + rank)
+        key = np.where(vh, key, 3 * T)
+        order2 = np.argsort(key, axis=1, kind="stable")[:, :max_m]
+        mk = key[arh, order2] < 3 * T
+        sel_ids[hard] = np.where(mk, idh[arh, order2], -1)
+        sel_d[hard] = np.where(mk, dh[arh, order2], np.inf)
+    return sel_ids, sel_d, sel_ids >= 0

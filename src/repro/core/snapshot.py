@@ -62,14 +62,14 @@ def take_snapshot(index) -> Snapshot:
 
     L = index.graph.num_layers
     m = index.graph.m
-    neighbors = np.full((L, n, m), -1, dtype=np.int32)
-    for l in range(L):
-        rows = index.graph.layers[l][live]  # [n, m] original ids (-1 pad)
-        mapped = np.where(rows >= 0, remap[np.maximum(rows, 0)], -1)
-        # compact each row left so padding is trailing
-        for i in range(n):
-            r = mapped[i][mapped[i] >= 0]
-            neighbors[l, i, : len(r)] = r
+    rows = np.stack([lay[live] for lay in index.graph.layers])  # [L, n, m]
+    mapped = np.where(rows >= 0, remap[np.maximum(rows, 0)], -1)
+    # left-compact every row so padding is trailing: a stable argsort of the
+    # "is padding" mask keeps live entries in order and pushes -1s right —
+    # one vectorised pass over [L, n, m] instead of an O(L*n) Python loop
+    # (this is the serve-refresh hot path for ingest-while-serve).
+    order = np.argsort(mapped < 0, axis=2, kind="stable")
+    neighbors = np.take_along_axis(mapped, order, axis=2).astype(np.int32)
 
     # unique values over live vertices + representative vertex per value
     order = np.argsort(attrs, kind="stable")

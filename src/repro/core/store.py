@@ -40,7 +40,13 @@ class BuildStats:
 
 
 class VectorStore:
-    """Vectors (float32) + attributes (float64) with amortised appends."""
+    """Vectors (float32) + attributes (float64) with amortised appends.
+
+    All distance state is explicit float32: vectors, cached squared norms and
+    every ``dist_*`` result — the same dtype the device snapshot serves — so
+    host/device parity comparisons never silently widen to float64.
+    Attributes stay float64 (they are order keys, not distances).
+    """
 
     __slots__ = (
         "dim", "metric", "vectors", "attrs", "attrs_list", "sq_norms", "n", "_cap",
@@ -56,8 +62,9 @@ class VectorStore:
         self.attrs = np.zeros(self._cap, dtype=np.float64)
         # python-list mirror of attrs for the scalar-indexed search hot loop
         self.attrs_list: list[float] = []
-        # cached squared norms for the factorised distance form
-        self.sq_norms = np.zeros(self._cap, dtype=np.float64)
+        # cached squared norms for the factorised distance form (f32, matching
+        # Snapshot.sq_norms bit for bit)
+        self.sq_norms = np.zeros(self._cap, dtype=np.float32)
         self.n = 0
 
     def __len__(self) -> int:
@@ -73,7 +80,7 @@ class VectorStore:
         att = np.zeros(new_cap, dtype=np.float64)
         att[: self.n] = self.attrs[: self.n]
         self.attrs = att
-        nrm = np.zeros(new_cap, dtype=np.float64)
+        nrm = np.zeros(new_cap, dtype=np.float32)
         nrm[: self.n] = self.sq_norms[: self.n]
         self.sq_norms = nrm
         self._cap = new_cap
@@ -94,19 +101,58 @@ class VectorStore:
         self.vectors[i] = v
         self.attrs[i] = float(attr)
         self.attrs_list.append(float(attr))
-        self.sq_norms[i] = float(np.dot(v, v))
+        self.sq_norms[i] = np.float32(np.dot(v, v))
         self.n += 1
         return i
 
+    def append_batch(self, vecs: np.ndarray, attrs: np.ndarray) -> np.ndarray:
+        """Vectorised append of a micro-batch: one grow, one normalise pass,
+        one sq-norm einsum.  Returns the new contiguous vertex ids."""
+        vecs = np.asarray(vecs, dtype=np.float32).reshape(-1, self.dim)
+        attrs = np.asarray(attrs, dtype=np.float64).reshape(-1)
+        if len(vecs) != len(attrs):
+            raise ValueError(f"{len(vecs)} vectors vs {len(attrs)} attrs")
+        b = len(vecs)
+        if b == 0:
+            return np.empty(0, dtype=np.int64)
+        if self.n + b > self._cap:
+            self._grow(self.n + b)
+        i0 = self.n
+        if self.metric == "cosine":
+            nrm = np.linalg.norm(vecs, axis=1, keepdims=True)
+            vecs = np.where(nrm > 0, vecs / np.maximum(nrm, 1e-30), vecs)
+        self.vectors[i0 : i0 + b] = vecs
+        self.attrs[i0 : i0 + b] = attrs
+        self.attrs_list.extend(attrs.tolist())
+        self.sq_norms[i0 : i0 + b] = np.einsum(
+            "ij,ij->i", self.vectors[i0 : i0 + b], self.vectors[i0 : i0 + b]
+        )
+        self.n += b
+        return np.arange(i0, i0 + b, dtype=np.int64)
+
     # ------------------------------------------------------------- distances
     def dist_batch(self, q: np.ndarray, ids: np.ndarray) -> np.ndarray:
-        """Distances from query ``q`` to rows ``ids`` (exact)."""
+        """Distances from query ``q`` to rows ``ids`` (exact, f32)."""
         x = self.vectors[ids]
         if self.metric == "l2":
             d = x - q[None, :]
-            return np.einsum("ij,ij->i", d, d)
+            return np.einsum("ij,ij->i", d, d).astype(np.float32, copy=False)
         # cosine / ip: vectors are pre-normalised for cosine at insert
-        return 1.0 - x @ q
+        return (1.0 - x @ q).astype(np.float32, copy=False)
+
+    def dist_block(self, qs: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """Batched-queries distances: ``qs`` [B, d] f32 against per-query id
+        rows ``ids`` [B, K] -> f32 [B, K].  One gather + one batched BLAS
+        contraction — the host twin of ``kernels.ops.gather_norm_dot`` (same
+        factorised ``|v|^2 - 2 v.q + |q|^2`` form, same f32 accumulation)."""
+        x = self.vectors[ids]  # [B, K, d]
+        dots = np.einsum("bkd,bd->bk", x, qs)
+        if self.metric == "l2":
+            q2 = np.einsum("bd,bd->b", qs, qs)
+            d = self.sq_norms[ids] - 2.0 * dots + q2[:, None]
+            np.maximum(d, 0.0, out=d)
+            return d.astype(np.float32, copy=False)
+        return (1.0 - dots).astype(np.float32, copy=False)
 
     def dist_pair(self, a: np.ndarray, b: np.ndarray) -> float:
         if self.metric == "l2":

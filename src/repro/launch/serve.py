@@ -37,6 +37,14 @@ def main() -> None:
                          '"64,128"): chunk the hop loop and compact '
                          "finished queries out between chunks (single-host "
                          "path only)")
+    ap.add_argument("--build-batch", type=int, default=128,
+                    help="micro-batch size for batched construction "
+                         "(insert_batch, vectorized Alg. 1); 0 = the "
+                         "sequential insert loop")
+    ap.add_argument("--ingest", type=int, default=0,
+                    help="ingest-while-serve: after the first serve wave, "
+                         "stream N extra vectors through insert_batch, "
+                         "refresh the snapshot and re-serve the queries")
     args = ap.parse_args()
 
     import numpy as np
@@ -49,9 +57,14 @@ def main() -> None:
     idx = WoWIndex(dim=args.dim, m=args.m, ef_construction=args.ef_construction,
                    o=args.o, seed=0)
     t0 = time.time()
-    for v, a in zip(wl.vectors, wl.attrs):
-        idx.insert(v, a)
-    print(f"indexed {len(idx)} vectors in {time.time()-t0:.1f}s "
+    if args.build_batch > 0:
+        idx.insert_batch(wl.vectors, wl.attrs, batch_size=args.build_batch)
+        how = f"batched (micro-batch {args.build_batch})"
+    else:
+        for v, a in zip(wl.vectors, wl.attrs):
+            idx.insert(v, a)
+        how = "sequential"
+    print(f"indexed {len(idx)} vectors in {time.time()-t0:.1f}s [{how}] "
           f"({idx.graph.num_layers} layers, {idx.memory_bytes()/2**20:.1f} MiB)")
     snap = take_snapshot(idx)
 
@@ -94,6 +107,36 @@ def main() -> None:
     q = np.percentile(hops, [50, 90, 99, 100]).astype(int)
     print(f"hops-to-termination: p50={q[0]} p90={q[1]} p99={q[2]} max={q[3]} "
           f"(ragged batches pay max without --compact)")
+
+    if args.ingest > 0:
+        # ingest-while-serve: micro-batch inserts + incremental snapshot
+        # refresh (the vectorized take_snapshot compaction), then re-serve
+        from ..core.datasets import make_attrs, make_vectors
+        from ..core.device_search import search_batch
+
+        extra_v = make_vectors(args.ingest, args.dim, seed=99)
+        extra_a = make_attrs(extra_v, seed=99) + float(np.max(wl.attrs)) + 1.0
+        bs = args.build_batch or 128
+        t0 = time.time()
+        idx.insert_batch(extra_v, extra_a, batch_size=bs)
+        t_ing = time.time() - t0
+        t0 = time.time()
+        snap = take_snapshot(idx)
+        t_snap = time.time() - t0
+        print(f"ingested {args.ingest} vectors in {t_ing:.2f}s "
+              f"({args.ingest / max(t_ing, 1e-9):.0f} ins/s), "
+              f"snapshot refresh {t_snap * 1e3:.0f} ms ({snap.n} live)")
+        res2 = search_batch(snap, wl.queries, wl.ranges, k=args.k,
+                            width=args.width, backend=args.backend,
+                            pipeline=args.pipeline, visited=args.visited,
+                            visited_bits=args.visited_bits, compact=compact)
+        ids2 = np.asarray(res2.ids)
+        recs2 = []
+        for i in range(args.queries):
+            got = np.asarray([int(snap.ids_map[j]) for j in ids2[i] if j >= 0])
+            recs2.append(recall(got, wl.gt[i]))
+        print(f"re-served {args.queries} queries post-ingest: "
+              f"recall@{args.k} = {np.mean(recs2):.4f}")
 
 
 if __name__ == "__main__":

@@ -121,6 +121,27 @@ class RagPipeline:
         self.docs.append(payload)
         return vid
 
+    def add_documents(self, doc_tokens: np.ndarray, attrs, payloads=None,
+                      batch_size: int = 128) -> np.ndarray:
+        """Ingest-while-serve: one batched embed pass + ``insert_batch``
+        micro-batches (vectorized Algorithm 1).  The serving snapshot is NOT
+        rebuilt here — ``retrieve_batch`` refreshes it lazily on the next
+        call (``take_snapshot`` row compaction is vectorized, so the refresh
+        stays off the request path's critical budget).  Returns vertex ids.
+        """
+        doc_tokens = np.asarray(doc_tokens)
+        attrs = np.asarray(attrs, dtype=np.float64).reshape(-1)
+        if payloads is not None and len(payloads) != len(attrs):
+            raise ValueError(
+                f"{len(payloads)} payloads for {len(attrs)} documents"
+            )
+        embs = self.server.embed(doc_tokens)
+        vids = self.index.insert_batch(embs, attrs, batch_size=batch_size)
+        if payloads is None:
+            payloads = [None] * len(vids)
+        self.docs.extend(payloads)
+        return vids
+
     def retrieve(self, query_tokens: np.ndarray, attr_range: tuple[float, float],
                  k: int = 5, ef: int = 48):
         q = self.server.embed(query_tokens[None, :])[0]
@@ -138,10 +159,9 @@ class RagPipeline:
         from ..core.device_search import search_batch
         from ..core.snapshot import take_snapshot
 
-        # store.n is monotonic and deletions change the deleted set, so this
-        # key changes on any mutation (len(index) alone would miss a
-        # delete-then-insert pair)
-        key = (self.index.store.n, len(self.index.deleted))
+        # the index's monotone mutation stamp changes on any insert/delete/
+        # undelete (counting sizes alone would miss an undelete+delete pair)
+        key = self.index.mutations
         if self._snap is None or self._snap_key != key:
             self._snap = take_snapshot(self.index)
             self._snap_key = key

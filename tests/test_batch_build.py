@@ -1,0 +1,243 @@
+"""Batched construction (``WoWIndex.insert_batch``): batched-vs-sequential
+recall parity across selectivity bands, window invariants (Def. 4) per layer,
+bootstrap from empty, duplicate-value workloads, dtype unification, and
+snapshot refresh under deletes."""
+import numpy as np
+import pytest
+
+from repro.core import WoWIndex, brute_force, make_workload, recall
+from repro.core.snapshot import take_snapshot
+
+
+def _build(wl, batch_size=None, backend="numpy", **kw):
+    idx = WoWIndex(dim=wl.vectors.shape[1], **kw)
+    if batch_size is None:
+        for v, a in zip(wl.vectors, wl.attrs):
+            idx.insert(v, a)
+    else:
+        idx.insert_batch(wl.vectors, wl.attrs, batch_size=batch_size,
+                         backend=backend)
+    return idx
+
+
+def _band_recalls(idx, wl, fractions, k=10, ef=80, per_band=12, seed=3):
+    """Mean recall@k per selectivity band (ranges drawn like the workload's)."""
+    n = len(wl.attrs)
+    sorted_a = np.sort(wl.attrs)
+    rng = np.random.default_rng(seed)
+    out = {}
+    for frac in fractions:
+        recs = []
+        for i in range(per_band):
+            n_in = max(5, int(n * frac))
+            s = int(rng.integers(0, n - n_in + 1))
+            r = (sorted_a[s], sorted_a[s + n_in - 1])
+            q = wl.queries[i % len(wl.queries)]
+            ids, _, _ = idx.search(q, r, k=k, ef=ef)
+            gold = brute_force(
+                idx.store.vectors[: idx.store.n],
+                idx.store.attrs[: idx.store.n], q, r, k,
+            )
+            recs.append(recall(ids, gold))
+        out[frac] = float(np.mean(recs))
+    return out
+
+
+def test_batched_vs_sequential_recall_parity():
+    """Same workload via ``insert`` and ``insert_batch``: recall@10 vs the
+    brute-force oracle within 0.01 per selectivity band (the tentpole's
+    acceptance bar)."""
+    wl = make_workload(n=900, d=16, nq=24, seed=0, k=10)
+    kw = dict(m=12, ef_construction=48, o=4, seed=0)
+    seq = _build(wl, None, **kw)
+    bat = _build(wl, 96, **kw)
+    bands = [1.0, 0.25, 0.05]
+    r_seq = _band_recalls(seq, wl, bands)
+    r_bat = _band_recalls(bat, wl, bands)
+    for frac in bands:
+        assert r_bat[frac] >= r_seq[frac] - 0.01, (
+            f"band {frac}: batched {r_bat[frac]:.4f} vs seq {r_seq[frac]:.4f}"
+        )
+
+
+def test_batched_window_invariants_per_layer():
+    """Fresh forward edges of every micro-batch satisfy the window property
+    (Def. 4: rank distance <= o^l) against the post-batch WBT, plus degree
+    bounds / no self loops / valid ids."""
+    wl = make_workload(n=500, d=12, nq=1, seed=2, with_gt=False)
+    idx = WoWIndex(dim=12, m=8, ef_construction=32, o=4, seed=1)
+    bs = 64
+    for s in range(0, len(wl.attrs), bs):
+        vids = idx.insert_batch(wl.vectors[s:s + bs], wl.attrs[s:s + bs],
+                                batch_size=bs)
+        ranks = {float(val): i for i, val in enumerate(idx.wbt.in_order())}
+        n = idx.store.n
+        for vid in vids.tolist():
+            ra = ranks[float(idx.store.attrs[vid])]
+            for l in range(idx.graph.num_layers):
+                nbrs = idx.graph.neighbors(l, vid)
+                assert len(nbrs) <= idx.params.m
+                assert np.all((nbrs >= 0) & (nbrs < n))
+                assert vid not in set(nbrs.tolist())
+                for j in nbrs:
+                    rj = ranks[float(idx.store.attrs[j])]
+                    assert abs(rj - ra) <= idx.params.o**l, (l, ra, rj)
+        # back-edge targets also stay within degree bounds
+        for l in range(idx.graph.num_layers):
+            assert idx.graph.counts[l][:n].max() <= idx.params.m
+
+
+def test_batched_bootstrap_from_empty_and_single_call():
+    """insert_batch on an empty index wires the first micro-batch through
+    cross-batch candidates alone (no pre-batch graph) and stays searchable."""
+    wl = make_workload(n=300, d=8, nq=15, seed=4, k=5)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+    vids = idx.insert_batch(wl.vectors, wl.attrs, batch_size=300)
+    assert len(vids) == 300 and idx.store.n == 300
+    recs = []
+    for i in range(len(wl.queries)):
+        ids, _, _ = idx.search(wl.queries[i], tuple(wl.ranges[i]), k=5, ef=48)
+        recs.append(recall(ids, wl.gt[i]))
+    assert np.mean(recs) >= 0.9
+
+
+def test_batched_duplicate_values_parity():
+    wl = make_workload(n=600, d=8, nq=15, seed=5, n_unique=40, k=5)
+    idx = _build(wl, 64, m=8, ef_construction=32, o=4, seed=0)
+    assert idx.num_unique <= 40
+    recs = []
+    for i in range(len(wl.queries)):
+        ids, _, _ = idx.search(wl.queries[i], tuple(wl.ranges[i]), k=5, ef=48)
+        recs.append(recall(ids, wl.gt[i]))
+    assert np.mean(recs) >= 0.9
+
+
+def test_batched_dc_accounting_and_stats():
+    wl = make_workload(n=400, d=8, nq=1, seed=6, with_gt=False)
+    idx = _build(wl, 64, m=8, ef_construction=32, o=4, seed=0)
+    st = idx.build_stats
+    assert st.dc > 0 and st.searches > 0
+    # every insert ran (or skipped) its per-layer acquisitions
+    assert st.searches + st.searches_skipped > 0
+
+
+def test_batched_ops_backend_matches_numpy():
+    """backend="ops" routes hop distance evaluation through
+    repro.kernels.ops.gather_norm_dot (the serving path's dispatch) and
+    builds an equivalent-quality index."""
+    wl = make_workload(n=250, d=8, nq=10, seed=7, k=5)
+    a = _build(wl, 64, backend="numpy", m=8, ef_construction=32, o=4, seed=0)
+    b = _build(wl, 64, backend="ops", m=8, ef_construction=32, o=4, seed=0)
+    ra, rb = [], []
+    for i in range(len(wl.queries)):
+        ids_a, _, _ = a.search(wl.queries[i], tuple(wl.ranges[i]), k=5, ef=48)
+        ids_b, _, _ = b.search(wl.queries[i], tuple(wl.ranges[i]), k=5, ef=48)
+        ra.append(recall(ids_a, wl.gt[i]))
+        rb.append(recall(ids_b, wl.gt[i]))
+    assert abs(np.mean(ra) - np.mean(rb)) <= 0.05
+
+
+def test_store_dtype_unification():
+    """f32 storage / f32 accumulation everywhere distances flow (host
+    arenas match the device snapshot bit for bit — no silent widening)."""
+    for metric in ("l2", "cosine", "ip"):
+        from repro.core.store import VectorStore
+
+        st = VectorStore(dim=6, metric=metric)
+        rng = np.random.default_rng(0)
+        st.append(rng.standard_normal(6), 1.0)
+        st.append_batch(rng.standard_normal((5, 6)), np.arange(2.0, 7.0))
+        assert st.vectors.dtype == np.float32
+        assert st.sq_norms.dtype == np.float32
+        q = st.prepare(rng.standard_normal(6))
+        d1 = st.dist_batch(q, np.arange(st.n))
+        assert d1.dtype == np.float32, metric
+        d2 = st.dist_block(np.stack([q, q]), np.zeros((2, 3), np.int64))
+        assert d2.dtype == np.float32, metric
+
+
+def test_snapshot_sq_norms_match_store_exactly():
+    wl = make_workload(n=200, d=8, nq=1, seed=8, with_gt=False)
+    idx = _build(wl, 64, m=8, ef_construction=32, o=4, seed=0)
+    snap = take_snapshot(idx)
+    assert snap.sq_norms.dtype == np.float32
+    assert np.array_equal(snap.sq_norms, idx.store.sq_norms[snap.ids_map])
+
+
+def test_batched_build_under_deletes_parity():
+    """insert_batch over a delete-heavy index: deleted vertices occupy beam
+    slots (documented deviation from the oracle's live-only result heap),
+    so quality under heavy deletes needs its own parity gate."""
+    wl = make_workload(n=800, d=12, nq=20, seed=12, k=10)
+    half = 400
+    kw = dict(m=12, ef_construction=48, o=4, seed=0)
+    seq = WoWIndex(dim=12, **kw)
+    bat = WoWIndex(dim=12, **kw)
+    for idx in (seq, bat):
+        idx.insert_batch(wl.vectors[:half], wl.attrs[:half], batch_size=128)
+        rng = np.random.default_rng(3)
+        for vid in rng.choice(half, size=half // 3, replace=False):
+            idx.delete(int(vid))  # 33% tombstones before the second wave
+    for v, a in zip(wl.vectors[half:], wl.attrs[half:]):
+        seq.insert(v, a)
+    bat.insert_batch(wl.vectors[half:], wl.attrs[half:], batch_size=96)
+    recs = {"seq": [], "bat": []}
+    for i in range(len(wl.queries)):
+        r = tuple(wl.ranges[i])
+        for name, idx in (("seq", seq), ("bat", bat)):
+            ids, _, _ = idx.search(wl.queries[i], r, k=10, ef=80)
+            assert not (set(ids.tolist()) & idx.deleted)
+            gold = brute_force(
+                idx.store.vectors[: idx.store.n],
+                np.where(
+                    np.isin(np.arange(idx.store.n), list(idx.deleted)),
+                    np.inf, idx.store.attrs[: idx.store.n],
+                ),
+                wl.queries[i], r, 10,
+            )
+            recs[name].append(recall(ids, gold))
+    assert np.mean(recs["bat"]) >= np.mean(recs["seq"]) - 0.01, (
+        f"under deletes: batched {np.mean(recs['bat']):.4f} "
+        f"vs seq {np.mean(recs['seq']):.4f}"
+    )
+
+
+def _reference_compacted_neighbors(index, live, remap):
+    """The pre-vectorisation O(L*n) row compaction, kept as the oracle."""
+    L, m, n = index.graph.num_layers, index.graph.m, len(live)
+    out = np.full((L, n, m), -1, dtype=np.int32)
+    for l in range(L):
+        rows = index.graph.layers[l][live]
+        mapped = np.where(rows >= 0, remap[np.maximum(rows, 0)], -1)
+        for i in range(n):
+            r = mapped[i][mapped[i] >= 0]
+            out[l, i, : len(r)] = r
+    return out
+
+
+def test_snapshot_refresh_under_deletes():
+    """Serve-refresh hot path: repeated take_snapshot under a growing delete
+    set stays consistent (deleted compacted out, padding trailing, rows
+    bit-identical to the reference compaction loop)."""
+    wl = make_workload(n=300, d=8, nq=1, seed=9, with_gt=False)
+    idx = _build(wl, 64, m=8, ef_construction=32, o=4, seed=0)
+    rng = np.random.default_rng(1)
+    deleted = set()
+    for wave in range(3):
+        for vid in rng.choice(idx.store.n, size=30, replace=False):
+            idx.delete(int(vid))
+            deleted.add(int(vid))
+        snap = take_snapshot(idx)
+        assert snap.n == idx.store.n - len(idx.deleted)
+        assert not (set(snap.ids_map.tolist()) & idx.deleted)
+        nb = snap.neighbors
+        assert nb.min() >= -1 and nb.max() < snap.n
+        # padding strictly trailing per row
+        assert not ((nb[:, :, 1:] >= 0) & (nb[:, :, :-1] < 0)).any()
+        live = snap.ids_map
+        remap = np.full(idx.store.n, -1, dtype=np.int32)
+        remap[live] = np.arange(snap.n, dtype=np.int32)
+        ref = _reference_compacted_neighbors(idx, live, remap)
+        assert np.array_equal(nb, ref)
+        # attrs/vectors remapped consistently
+        assert np.allclose(snap.attrs, idx.store.attrs[live].astype(np.float32))

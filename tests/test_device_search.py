@@ -85,4 +85,7 @@ def test_snapshot_compacts_deleted(grid_index):
         assert 3 not in set(snap.ids_map.tolist())
         assert np.all(snap.neighbors < snap.n)
     finally:
-        idx.deleted.clear()
+        # undelete (not deleted.clear()) keeps the shared fixture's
+        # live-count/dead-value selectivity bookkeeping consistent
+        idx.undelete(3)
+        idx.undelete(7)

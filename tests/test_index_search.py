@@ -108,8 +108,6 @@ def test_duplicate_attribute_values():
 
 
 def test_deletion_mark_and_exclude(built_index, small_workload):
-    import copy
-
     wl = small_workload
     idx = built_index
     q = wl.queries[0]
@@ -121,7 +119,51 @@ def test_deletion_mark_and_exclude(built_index, small_workload):
         ids2, _, _ = idx.search(q, full, k=5, ef=64)
         assert victim not in set(ids2.tolist())
     finally:
-        idx.deleted.discard(victim)  # restore shared fixture
+        # undelete (not a raw ``deleted.discard``) keeps the live-count /
+        # dead-value selectivity bookkeeping consistent for later tests
+        idx.undelete(victim)
+
+
+def test_delete_aware_selectivity_and_landing_layer():
+    """Regression: ``n'`` must subtract values whose vectors are ALL deleted
+    (the WBT never removes values), so the Alg. 3 landing layer tracks the
+    live data after deletes."""
+    wl = make_workload(n=600, d=8, nq=5, seed=11, n_unique=60, k=5)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+    idx.insert_batch(wl.vectors, wl.attrs, batch_size=64)
+    uvals = idx.wbt.in_order()
+    # a range covering the lower half of the unique values
+    x, y = float(uvals[0]), float(uvals[len(uvals) // 2])
+    n_range = idx.wbt.count_range(x, y)
+    assert idx.selectivity(x, y) == n_range
+    # delete ALL duplicates of every in-range value except the smallest
+    kept_val = float(uvals[0])
+    for val in uvals[: len(uvals) // 2 + 1]:
+        if float(val) == kept_val:
+            continue
+        for vid in idx.value_map[float(val)]:
+            idx.delete(vid)
+    assert idx.selectivity(x, y) == 1
+    # stale WBT count unchanged; live landing layer collapses to layer 0
+    assert idx.wbt.count_range(x, y) == n_range
+    assert idx.landing_layer(idx.selectivity(x, y)) == 0
+    assert idx.landing_layer(n_range) > 0
+    # search uses the live count: results exclude deleted, stay in range
+    q = wl.queries[0]
+    ids, _, _ = idx.search(q, (x, y), k=5, ef=48)
+    assert len(ids) >= 1
+    assert all(float(idx.store.attrs[j]) == kept_val for j in ids)
+    # a fully-dead range returns empty immediately
+    for vid in idx.value_map[kept_val]:
+        idx.delete(vid)
+    ids2, _, _ = idx.search(q, (x, y), k=5, ef=48)
+    assert len(ids2) == 0
+    # resurrection: undelete and by re-inserting a duplicate value
+    idx.undelete(idx.value_map[kept_val][0])
+    assert idx.selectivity(x, y) == 1
+    second_val = float(uvals[1])
+    idx.insert(wl.vectors[0], second_val)
+    assert idx.selectivity(x, y) == 2
 
 
 def test_incremental_equals_from_scratch_quality(small_workload):
