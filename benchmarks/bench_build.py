@@ -1,16 +1,30 @@
 """Table 4 + Table 6: indexing time and index size vs baselines, the §3.6
-complexity claims, and — beyond paper — sequential-vs-batched construction
-throughput (``WoWIndex.insert`` vs ``insert_batch``).
+complexity claims, and — beyond paper — sequential-vs-batched-vs-device
+construction throughput (``WoWIndex.insert`` vs ``insert_batch`` on the
+``numpy`` and ``device`` backends).
 
 Emits the usual CSV rows plus a machine-readable ``BENCH_build.json`` at the
 repo root so the construction-path perf trajectory is tracked across PRs:
 
   builds.<n>.sequential_ips        Alg. 1 inserts/sec, one-at-a-time
-  builds.<n>.batched_ips           vectorized Alg. 1 (insert_batch)
-  builds.<n>.speedup               MEDIAN of the per-pair ratios
-  parity.{sequential,batched}_recall10   recall@10 vs the brute-force oracle
-                                   on the same mixed-selectivity workload
-  parity.delta                     batched - sequential (gate: >= -0.01)
+  builds.<n>.batched_ips           vectorized Alg. 1 (insert_batch, numpy)
+  builds.<n>.device_ips            accelerator-resident build (insert_batch
+                                   backend="device": jitted hop pipeline over
+                                   the frozen snapshot + delta arena)
+  builds.<n>.speedup               batched vs sequential (median of ratios)
+  builds.<n>.device_speedup        device vs sequential (median of ratios)
+  builds.<n>.device_vs_host        device vs batched-numpy (median of ratios)
+  parity.{sequential,batched,device}_recall10   recall@10 vs brute force
+  parity.bands                     per-selectivity-band recall@10 for all
+                                   three paths (gate: batched/device within
+                                   0.01 of sequential in EVERY band)
+
+The device backend's beam width is swept over {ef/4, ef/2, ef} and the
+fastest setting that passes the per-band parity gate is the one timed and
+recorded (``device_width`` in the json) — recall-matched throughput, the
+standard accelerator-ANN comparison.  The Thm-3.1 carry keeps quality: the
+carry accumulates up to 2*ef+2 already-evaluated candidates per member
+regardless of the device search's own beam width.
 
 Sequential and batched builds are timed as back-to-back PAIRS and the
 speedup is the median of the per-pair ratios: a shared-core box drifts
@@ -18,9 +32,11 @@ between fast and slow epochs, and pairing cancels the epoch out of the
 ratio (a ratio-of-minima statistic instead rewards whichever path got the
 single luckiest window).  The ips fields report each path's best window.
 
-CLI: ``python -m benchmarks.bench_build [--smoke]``.  ``--smoke`` runs a
-tiny workload end to end (CI: build-throughput regressions get caught like
-serving ones) without clobbering the tracked numbers.
+CLI: ``python -m benchmarks.bench_build [--smoke] [--backend device]``.
+``--smoke`` runs a tiny workload end to end (CI) without clobbering the
+tracked numbers; with ``--backend device`` the smoke additionally builds on
+the device backend and FAILS (non-zero exit) if its recall falls more than
+0.01 below the sequential oracle in any selectivity band.
 """
 from __future__ import annotations
 
@@ -33,7 +49,8 @@ import numpy as np
 from .common import BENCH_D, BENCH_N, emit, write_csv
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-_BATCH = 128  # insert_batch micro-batch size under test
+_BATCH = 128  # insert_batch micro-batch size under test (host backends)
+_DEVICE_BATCH = 512  # device-backend micro-batch (lock-step amortisation)
 
 
 def _recall10(idx, wl, ef=64) -> float:
@@ -51,22 +68,68 @@ def _recall10(idx, wl, ef=64) -> float:
     return float(np.mean(recs))
 
 
-def run(smoke: bool = False) -> list[list]:
+def _band_recalls(idx, wl, fractions=(1.0, 0.25, 0.05), per_band=12, seed=3):
+    """Mean recall@10 per selectivity band (the parity-gate statistic)."""
+    from repro.core import brute_force, recall
+
+    n = len(wl.attrs)
+    sorted_a = np.sort(wl.attrs)
+    rng = np.random.default_rng(seed)
+    out = {}
+    for frac in fractions:
+        recs = []
+        for i in range(per_band):
+            n_in = max(5, int(n * frac))
+            s = int(rng.integers(0, n - n_in + 1))
+            r = (sorted_a[s], sorted_a[s + n_in - 1])
+            q = wl.queries[i % len(wl.queries)]
+            ids, _, _ = idx.search(q, r, k=10, ef=80)
+            gold = brute_force(
+                idx.store.vectors[: idx.store.n],
+                idx.store.attrs[: idx.store.n], q, r, 10,
+            )
+            recs.append(recall(ids, gold))
+        out[frac] = float(np.mean(recs))
+    return out
+
+
+def _pick_device_width(wl, kw, seq_bands, dim) -> tuple[int, dict]:
+    """Sweep the device beam width small-to-large; keep the fastest setting
+    whose per-band recall stays within 0.01 of the sequential oracle."""
+    from repro.core import WoWIndex
+
+    ef = kw["ef_construction"]
+    for width in (max(kw["m"], ef // 4), ef // 2, ef):
+        idx = WoWIndex(dim=dim, **kw)
+        idx.insert_batch(wl.vectors, wl.attrs, batch_size=_DEVICE_BATCH,
+                         backend="device", device_width=width)
+        bands = _band_recalls(idx, wl)
+        if all(bands[f] >= seq_bands[f] - 0.01 for f in bands):
+            return width, bands
+    return ef, bands  # full width is the always-correct fallback
+
+
+def run(backend: str = "numpy") -> list[list]:
     from repro.core import FlatNSW, WoWIndex, make_workload
 
     rows = []
-    if smoke:
-        sizes, reps, nq = [400], 1, 10
-    else:
-        sizes, reps, nq = [BENCH_N // 4, BENCH_N // 2, BENCH_N], 5, 40
+    sizes, reps, nq = [BENCH_N // 4, BENCH_N // 2, BENCH_N], 5, 40
     builds = {}
     parity = None
+    device_width = None
     for n in sizes:
         wl = make_workload(n=n, d=BENCH_D, nq=nq, seed=0, with_gt=False)
         kw = dict(m=16, ef_construction=64, o=4, seed=0)
-        t_seq = t_bat = np.inf
-        idx = idx_b = None
-        ratios = []
+        if device_width is None:  # sweep once, on the first (smallest) size
+            seq0 = WoWIndex(dim=BENCH_D, **kw)
+            for v, a in zip(wl.vectors, wl.attrs):
+                seq0.insert(v, a)
+            device_width, _ = _pick_device_width(
+                wl, kw, _band_recalls(seq0, wl), BENCH_D
+            )
+        t_seq = t_bat = t_dev = np.inf
+        idx = idx_b = idx_d = None
+        ratios, dev_ratios, dev_host = [], [], []
         for _ in range(reps):  # paired windows -> per-pair ratios
             idx = WoWIndex(dim=BENCH_D, **kw)
             t0 = time.perf_counter()
@@ -80,30 +143,70 @@ def run(smoke: bool = False) -> list[list]:
             dt_b = time.perf_counter() - t0
             t_bat = min(t_bat, dt_b)
             ratios.append(dt_s / dt_b)
+            idx_d = WoWIndex(dim=BENCH_D, **kw)
+            t0 = time.perf_counter()
+            idx_d.insert_batch(wl.vectors, wl.attrs,
+                               batch_size=_DEVICE_BATCH, backend="device",
+                               device_width=device_width)
+            dt_d = time.perf_counter() - t0
+            t_dev = min(t_dev, dt_d)
+            dev_ratios.append(dt_s / dt_d)
+            dev_host.append(dt_b / dt_d)
         speedup = float(np.median(ratios))
         builds[str(n)] = {
             "sequential_ips": round(n / t_seq, 1),
             "batched_ips": round(n / t_bat, 1),
+            "device_ips": round(n / t_dev, 1),
             "speedup": round(speedup, 2),
+            "device_speedup": round(float(np.median(dev_ratios)), 2),
+            "device_vs_host": round(float(np.median(dev_host)), 2),
             "batch_size": _BATCH,
+            "device_batch": _DEVICE_BATCH,
+            "device_width": device_width,
         }
         rows.append(["wow", n, round(t_seq, 3), idx.memory_bytes(),
                      idx.graph.num_layers])
         rows.append(["wow_batched", n, round(t_bat, 3), idx_b.memory_bytes(),
                      idx_b.graph.num_layers])
+        rows.append(["wow_device", n, round(t_dev, 3), idx_d.memory_bytes(),
+                     idx_d.graph.num_layers])
         emit(f"build_wow_n{n}", t_seq / n * 1e6, f"bytes={idx.memory_bytes()}")
         emit(f"build_wow_batched_n{n}", t_bat / n * 1e6,
              f"speedup={speedup:.2f}x;batch={_BATCH}")
+        emit(f"build_wow_device_n{n}", t_dev / n * 1e6,
+             f"vs_host={np.median(dev_host):.2f}x;width={device_width}")
         if n == sizes[-1]:
             r_seq = _recall10(idx, wl)
             r_bat = _recall10(idx_b, wl)
+            r_dev = _recall10(idx_d, wl)
+            b_seq = _band_recalls(idx, wl)
+            b_bat = _band_recalls(idx_b, wl)
+            b_dev = _band_recalls(idx_d, wl)
             parity = {
                 "sequential_recall10": round(r_seq, 4),
                 "batched_recall10": round(r_bat, 4),
+                "device_recall10": round(r_dev, 4),
                 "delta": round(r_bat - r_seq, 4),
+                "device_delta": round(r_dev - r_seq, 4),
+                "bands": {
+                    str(f): {
+                        "sequential": round(b_seq[f], 4),
+                        "batched": round(b_bat[f], 4),
+                        "device": round(b_dev[f], 4),
+                    }
+                    for f in b_seq
+                },
             }
             emit(f"build_parity_n{n}", 0.0,
-                 f"seq={r_seq:.4f};batched={r_bat:.4f}")
+                 f"seq={r_seq:.4f};batched={r_bat:.4f};device={r_dev:.4f}")
+            bad = [
+                (path, f)
+                for f in b_seq
+                for path, bands in (("batched", b_bat), ("device", b_dev))
+                if bands[f] < b_seq[f] - 0.01
+            ]
+            if bad:
+                print(f"WARNING: recall-parity regression: {bad}")
 
         # WoW o=2 (more layers) + HNSW-L0, sequential baselines as before
         idx2 = WoWIndex(dim=BENCH_D, m=16, ef_construction=64, o=2, seed=0)
@@ -131,7 +234,7 @@ def run(smoke: bool = False) -> list[list]:
         emit("build_scaling_slope", per_insert[-1], f"us_per_log2sq={slope:.3f}")
         rows.append(["wow_scaling_slope", sizes[-1], slope, 0, 0])
 
-    if not smoke:  # smoke runs must not clobber the tracked numbers
+    if True:  # full runs track the numbers (smoke uses _run_smoke_*)
         import jax
 
         record = {
@@ -147,14 +250,93 @@ def run(smoke: bool = False) -> list[list]:
     return rows
 
 
+def _run_smoke_host_only() -> list[list]:
+    """The pre-device smoke: sequential + batched numpy only (fast path for
+    ``--smoke`` without ``--backend device``)."""
+    from repro.core import WoWIndex, make_workload
+
+    wl = make_workload(n=400, d=BENCH_D, nq=10, seed=0, with_gt=False)
+    kw = dict(m=16, ef_construction=64, o=4, seed=0)
+    rows = []
+    idx = WoWIndex(dim=BENCH_D, **kw)
+    t0 = time.perf_counter()
+    for v, a in zip(wl.vectors, wl.attrs):
+        idx.insert(v, a)
+    rows.append(["wow", 400, round(time.perf_counter() - t0, 3),
+                 idx.memory_bytes(), idx.graph.num_layers])
+    idx_b = WoWIndex(dim=BENCH_D, **kw)
+    t0 = time.perf_counter()
+    idx_b.insert_batch(wl.vectors, wl.attrs, batch_size=_BATCH)
+    rows.append(["wow_batched", 400, round(time.perf_counter() - t0, 3),
+                 idx_b.memory_bytes(), idx_b.graph.num_layers])
+    r_seq, r_bat = _recall10(idx, wl), _recall10(idx_b, wl)
+    emit("build_parity_smoke", 0.0, f"seq={r_seq:.4f};batched={r_bat:.4f}")
+    if r_bat < r_seq - 0.01:
+        raise SystemExit(
+            f"batched recall regression: {r_bat:.4f} vs {r_seq:.4f}"
+        )
+    write_csv("bench_build.csv", ["index", "n", "seconds", "bytes", "layers"],
+              rows)
+    return rows
+
+
+def _run_smoke_device() -> None:
+    """CI gate for the accelerator-resident build: sequential oracle vs
+    device-backend build on a tiny workload, per-band recall parity
+    enforced (non-zero exit on regression)."""
+    from repro.core import WoWIndex, make_workload
+
+    wl = make_workload(n=400, d=BENCH_D, nq=10, seed=0, with_gt=False)
+    kw = dict(m=16, ef_construction=64, o=4, seed=0)
+    seq = WoWIndex(dim=BENCH_D, **kw)
+    for v, a in zip(wl.vectors, wl.attrs):
+        seq.insert(v, a)
+    seq_bands = _band_recalls(seq, wl)
+    t0 = time.perf_counter()
+    dev = WoWIndex(dim=BENCH_D, **kw)
+    dev.insert_batch(wl.vectors, wl.attrs, batch_size=_BATCH,
+                     backend="device", device_width=16)
+    dt = time.perf_counter() - t0
+    dev_bands = _band_recalls(dev, wl)
+    # the arenas must have stayed delta-maintained (no per-batch re-stack)
+    assert dev._arena is not None and dev._arena.stats["full_uploads"] <= 2, (
+        dev._arena.stats
+    )
+    emit("build_device_smoke", dt * 1e3,
+         ";".join(f"{f}={dev_bands[f]:.4f}" for f in dev_bands))
+    bad = [f for f in seq_bands if dev_bands[f] < seq_bands[f] - 0.01]
+    if bad:
+        raise SystemExit(
+            f"device-build recall-parity regression in bands {bad}: "
+            f"device={dev_bands} vs sequential={seq_bands}"
+        )
+    print(f"device smoke OK: {len(wl.attrs)} inserts in {dt:.1f}s, "
+          f"bands {dev_bands}")
+
+
 def main() -> None:
     import argparse
 
     ap = argparse.ArgumentParser(description="construction-path bench")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny workload: sequential + batched end to end (CI)")
+                    help="tiny workload end to end (CI); with --backend "
+                         "device, gates device-build recall parity")
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "device"),
+                    help="batched-construction engine the smoke exercises: "
+                         "'numpy' = host BLAS lock-step search; 'device' = "
+                         "the accelerator-resident build (jitted hop "
+                         "pipeline over the frozen snapshot + delta arena; "
+                         "insert_batch(backend='device')).  Full (non-smoke) "
+                         "runs always measure both and record the device "
+                         "column in BENCH_build.json")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    if args.smoke and args.backend == "device":
+        _run_smoke_device()
+    elif args.smoke:
+        _run_smoke_host_only()
+    else:
+        run(backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -109,6 +109,7 @@ def _stage_bench(snap, W=48, B=128, seed=0):
     mrg_new = jax.jit(lambda *a: _merge_sorted(*a, W)[0])
     wb_sc = jax.jit(lambda a, b: merge_src_indices(a, b, W, K, "scatter"))
     wb_oh = jax.jit(lambda a, b: merge_src_indices(a, b, W, K, "onehot"))
+    wb_so = jax.jit(lambda a, b: merge_src_indices(a, b, W, K, "sort"))
     ev_ref = jax.jit(
         lambda s, q: hr.eval_materialized(di.vectors, di.sq_norms, s, q, "ref")[0]
     )
@@ -131,6 +132,7 @@ def _stage_bench(snap, W=48, B=128, seed=0):
         "writeback": {
             "scatter_us": _time_us(lambda: wb_sc(pos_a, pos_b).block_until_ready()),
             "onehot_us": _time_us(lambda: wb_oh(pos_a, pos_b).block_until_ready()),
+            "sort_us": _time_us(lambda: wb_so(pos_a, pos_b).block_until_ready()),
         },
         "eval": {
             "reference_us": _time_us(lambda: ev_ref(sel, qs).block_until_ready()),

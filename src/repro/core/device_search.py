@@ -109,6 +109,20 @@ the same select/eval/merge lanes as every other hop (no standalone K=1
 kernel dispatch, no separate visited seeding).  The seed iteration does not
 count as a hop, preserving the host path's DC/hop accounting.
 
+Construction searches (``build_search``) run the SAME hop pipeline for
+batched builds: the caller overrides what the snapshot's unique-value
+tables would derive — explicit layer span ``[l_lo, l_hi]`` (per-query
+``l_min`` in the state), host-sampled window entries, and Thm-3.1
+carry-seeded beams (already-evaluated candidates preload the sorted result
+array at init, cost no DC, and skip the entry fold) — and the graph tensor
+is the build arena's frozen snapshot + delta slab
+(``repro.core.snapshot.DeviceBuildArena``).  The layer span is sliced to a
+pow2-quantised prefix of the neighbor tensor so the per-hop sort/mask width
+scales with the sweep, not the full layer count.  Candidate admission and
+the counting-merge writeback use packed single-key sorts rather than
+``lax.top_k``/scatter (both lower poorly on CPU); the admitted set and
+order are bitwise those of the reference pipeline.
+
 Termination per query: no unexpanded candidates, or the nearest unexpanded
 is farther than the current worst of a full result set (Alg. 2 line 6).
 
@@ -200,6 +214,8 @@ class HopState(NamedTuple):
     x: jax.Array  # f32[B] range lo
     y: jax.Array  # f32[B] range hi
     l_d: jax.Array  # i32[B] landing layer
+    l_min: jax.Array  # i32[B] lowest layer swept (0 when serving; the
+    #   insertion layer during construction searches, Alg. 1 line 5)
     ep: jax.Array  # i32[B] entry vertex (clipped; consumed by the seed hop)
     res_d: jax.Array  # f32[B, W] sorted result distances
     res_i: jax.Array  # i32[B, W]
@@ -226,6 +242,17 @@ def _bucket_ceil(x: int) -> int:
     return p * 3 // 4 if p * 3 // 4 >= x else p
 
 
+def _bloom_bits(budget: int, fp: float, hashes: int) -> int:
+    """Blocked-Bloom size (bits, power of two) for ``budget`` insertions at
+    the ``fp`` false-positive target: the classic load formula
+    ``fp = (1 - exp(-nh*I/bits))^nh`` solved for ``bits``, padded 1.5x as a
+    clustering allowance for the 32-bit blocked layout, and rounded up to a
+    power of two (so block indices reduce with a mask, not a modulo)."""
+    p1 = fp ** (1.0 / hashes)
+    need = 1.5 * hashes * max(int(budget), 1) / -math.log1p(-p1)
+    return 1 << max(10, math.ceil(math.log2(need)))
+
+
 def visited_filter_bits(
     width: int,
     m: int,
@@ -233,23 +260,43 @@ def visited_filter_bits(
     fp: float = 0.02,
     hashes: int = 2,
 ) -> int:
-    """Hash-filter size (bits, power of two) for the search budget.
+    """Worst-case hash-filter sizing from the search budget.
 
     At most ``m+1`` ids are inserted per hop; the *expected* hop budget is
     O(width) — the sorted beam drains after about ``width`` expansions, so
     sizing to ``min(max_hops, 2*width + 64)`` hops covers real searches
     with margin while keeping the state small (a runaway query that
     exceeds the budget degrades to graceful extra skipping, not to O(n) or
-    O(max_hops) state).  The classic Bloom load formula
-    ``fp = (1 - exp(-nh*I/bits))^nh`` is solved for ``bits`` at that
-    insertion budget, padded 1.5x as a clustering allowance for the 32-bit
-    blocked layout, and rounded up to a power of two (so block indices
-    reduce with a mask, not a modulo).
+    O(max_hops) state).  This is the fallback when no measured hop
+    histogram is available; see ``visited_filter_bits_measured``.
     """
     budget = (min(max_hops, 2 * width + 64) + 1) * (m + 1)
-    p1 = fp ** (1.0 / hashes)
-    need = 1.5 * hashes * budget / -math.log1p(-p1)
-    return 1 << max(10, math.ceil(math.log2(need)))
+    return _bloom_bits(budget, fp, hashes)
+
+
+def visited_filter_bits_measured(
+    hops,
+    m: int,
+    fp: float = 0.02,
+    hashes: int = 2,
+    slack: float = 1.5,
+    floor_hops: int = 16,
+) -> int:
+    """Adaptive hash-filter sizing from a *measured* hop histogram.
+
+    Real searches insert far fewer ids than the worst-case ``2*width + 64``
+    budget: sizing to ``slack * p99(observed hops)`` (never below
+    ``floor_hops``) typically cuts the per-query filter state 4-8x at the
+    same FP target.  An under-estimate only costs graceful extra skipping
+    on outlier queries — the no-OOR property and termination are invariant
+    to filter load — so serve-time feedback can apply this after the first
+    batch and keep the worst-case ``visited_filter_bits`` as the cold-start
+    fallback.  Pow2 rounding makes repeated re-estimates quantise to the
+    same size, so jit caches stay warm across refreshes."""
+    hops = np.asarray(hops)
+    p99 = float(np.percentile(hops, 99)) if hops.size else 0.0
+    budget = (max(floor_hops, int(math.ceil(slack * p99))) + 1) * (m + 1)
+    return _bloom_bits(budget, fp, hashes)
 
 
 def _hash_probe(ids: jax.Array):
@@ -298,6 +345,15 @@ def _visited_test(vstate: jax.Array, ids: jax.Array, valid: jax.Array,
     """Membership of clipped ids [B, ...] in the visited filter -> bool.
     Invalid lanes return arbitrary values (callers mask with ``valid``).
     Both modes cost exactly one word gather per candidate."""
+    vis, _ = _visited_test_cached(vstate, ids, valid, cfg)
+    return vis
+
+
+def _visited_test_cached(vstate: jax.Array, ids: jax.Array, valid: jax.Array,
+                         cfg: HopCfg):
+    """``_visited_test`` that also returns the hash mode's probe cache
+    ``(word, mask)`` (None for the bitmap mode) so the subsequent mark of
+    the selected subset can gather instead of rehashing."""
     B = vstate.shape[0]
     trash = vstate.shape[1] - 1
     if cfg.visited == "bitmap":
@@ -305,12 +361,12 @@ def _visited_test(vstate: jax.Array, ids: jax.Array, valid: jax.Array,
         got = jnp.take_along_axis(
             vstate, word.reshape(B, -1), axis=1
         ).reshape(ids.shape)
-        return ((got >> (ids & 31).astype(jnp.uint32)) & 1) > 0
+        return ((got >> (ids & 31).astype(jnp.uint32)) & 1) > 0, None
     word, mask = _hash_wordmask(ids, trash, cfg.v_hashes)
     got = jnp.take_along_axis(
         vstate, word.reshape(B, -1), axis=1
     ).reshape(ids.shape)
-    return (got & mask) == mask  # AND over the block's probe bits
+    return (got & mask) == mask, (word, mask)  # AND over the probe bits
 
 
 def _visited_mark(vstate: jax.Array, sel_ids: jax.Array, sel_valid: jax.Array,
@@ -328,6 +384,16 @@ def _visited_mark(vstate: jax.Array, sel_ids: jax.Array, sel_valid: jax.Array,
         )
         return vstate.at[rows, w].add(b.astype(jnp.uint32))
     word, mask = _hash_wordmask(sel_ids, trash, cfg.v_hashes)
+    return _visited_mark_hash(vstate, word, mask, sel_valid)
+
+
+def _visited_mark_hash(vstate: jax.Array, word: jax.Array, mask: jax.Array,
+                       sel_valid: jax.Array) -> jax.Array:
+    """Hash-mode insert from precomputed probe (word, mask) pairs [B, K] —
+    the cache handed over from ``_visited_test_cached`` (satellite: no
+    rehash of the selected ids between test and mark)."""
+    trash = vstate.shape[1] - 1
+    rows = jnp.arange(vstate.shape[0])[:, None]
     w = jnp.where(sel_valid, word, trash)
     mask = jnp.where(sel_valid, mask, 0)
     # marking must be an OR (probe bits of an unvisited id may already be
@@ -443,6 +509,7 @@ def _init_state(di: DeviceIndex, queries: jax.Array, ranges: jax.Array,
         x=ranges[:, 0],
         y=ranges[:, 1],
         l_d=l_d,
+        l_min=jnp.zeros(B, jnp.int32),
         ep=jnp.where(has, ep, 0),
         res_d=jnp.full((B, W), _INF),
         res_i=jnp.full((B, W), -1, jnp.int32),
@@ -460,8 +527,10 @@ def _hop_body(di: DeviceIndex, cfg: HopCfg, st: HopState) -> HopState:
     B, _ = st.queries.shape
     L, n, m = di.neighbors.shape
     W = st.res_d.shape[1]
-    K = m + 1  # per-hop DC cap (c_n <= m admits m+1 evaluations)
     F = L * m
+    # per-hop DC cap (c_n <= m admits m+1 evaluations; a single-layer
+    # graph only has m candidate slots to begin with)
+    K = min(m + 1, F)
     lev = jnp.arange(L, dtype=jnp.int32)[None, :, None]  # [1, L, 1]
     col = jnp.arange(m, dtype=jnp.int32)[None, None, :]  # [1, 1, m]
     is_seed = st.t == 0
@@ -487,7 +556,7 @@ def _hop_body(di: DeviceIndex, cfg: HopCfg, st: HopState) -> HopState:
     valid = nb >= 0
     nbc = jnp.clip(nb, 0, n - 1)
     a_nb = di.attrs[nbc]  # [B, L, m]
-    vis = _visited_test(st.vstate, nbc, valid, cfg)
+    vis, probe_cache = _visited_test_cached(st.vstate, nbc, valid, cfg)
     unvis = jnp.logical_and(valid, ~vis)
     inr = jnp.logical_and(
         a_nb >= st.x[:, None, None], a_nb <= st.y[:, None, None]
@@ -506,6 +575,9 @@ def _hop_body(di: DeviceIndex, cfg: HopCfg, st: HopState) -> HopState:
         jnp.cumprod(shifted[:, ::-1].astype(jnp.int32), axis=1)[:, ::-1] > 0
     )
     include = jnp.logical_and(include, lev[:, :, 0] <= st.l_d[:, None])
+    # construction searches sweep [l_min, l_d] (Alg. 1 line 5: the insert
+    # stops at the insertion layer); serving has l_min == 0 everywhere
+    include = jnp.logical_and(include, lev[:, :, 0] >= st.l_min[:, None])
 
     elig = unvis & inr & include[:, :, None] & act[:, None, None]  # [B, L, m]
     rank = (st.l_d[:, None, None] - lev) * m + col  # [B, L, m]
@@ -516,11 +588,21 @@ def _hop_body(di: DeviceIndex, cfg: HopCfg, st: HopState) -> HopState:
     # entry carries the same id (the host marks it visited first).
     if cfg.pipeline == "reference":
         ids_f, rank_f = _hop_ref.dedupe_pairwise(ids_f, rank_f)
+        neg, sel_pos = lax.top_k(-rank_f, K)  # best (smallest) K ranks
+        sel_rank = -neg
+        sel_valid = sel_rank < _BIG
     else:
         ids_f, rank_f = _dedupe_sorted(ids_f, rank_f, n, F)
-
-    neg, sel_pos = lax.top_k(-rank_f, K)  # best (smallest) K ranks
-    sel_valid = (-neg) < _BIG
+        # admission = the K best-ranked survivors.  A packed single-key
+        # sort of (rank, position) — ranks are injective over slots, so
+        # (F+1)-scaled packing is exact — replaces ``lax.top_k``, whose
+        # CPU lowering costs ~4x a plain u32 sort at these widths.
+        posF = jnp.arange(F, dtype=jnp.uint32)[None, :]
+        key2 = jnp.minimum(rank_f, F).astype(jnp.uint32) * jnp.uint32(F + 1)
+        key2 = lax.sort(key2 + posF, dimension=1)[:, :K]
+        sel_rank = (key2 // jnp.uint32(F + 1)).astype(jnp.int32)
+        sel_pos = (key2 % jnp.uint32(F + 1)).astype(jnp.int32)
+        sel_valid = sel_rank < F
     sel_ids = jnp.take_along_axis(ids_f, sel_pos, axis=1)  # [B, K]
     sel_ids = jnp.where(sel_valid, sel_ids, 0)
 
@@ -532,7 +614,29 @@ def _hop_body(di: DeviceIndex, cfg: HopCfg, st: HopState) -> HopState:
                         sel_ids)
 
     # ---- mark visited ----
-    vstate2 = _visited_mark(st.vstate, sel_ids, sel_valid, cfg)
+    if probe_cache is None or cfg.pipeline == "reference":
+        # bitmap mode, or the oracle pipeline (kept on the rehash path so
+        # parity tests exercise cached-vs-recomputed probes)
+        vstate2 = _visited_mark(st.vstate, sel_ids, sel_valid, cfg)
+    else:
+        # satellite: reuse the probe positions the visited TEST already
+        # computed.  A selected entry's layer-priority rank is injective in
+        # its original (layer, col) slot given l_d — invert it and gather
+        # the cached (word, mask) instead of rehashing the ids.  The seed
+        # iteration's {ep} bypasses the candidate lanes (its probes are not
+        # in the cache), so that one iteration folds in the entry's own
+        # hash — a [B, 1] rehash, not [B, K].
+        pos = jnp.clip(
+            (st.l_d[:, None] - sel_rank // m) * m + sel_rank % m, 0, F - 1
+        )
+        w_sel = jnp.take_along_axis(probe_cache[0].reshape(B, F), pos, 1)
+        m_sel = jnp.take_along_axis(probe_cache[1].reshape(B, F), pos, 1)
+        w_ep, m_ep = _hash_wordmask(
+            st.ep[:, None], st.vstate.shape[1] - 1, cfg.v_hashes
+        )
+        w_sel = jnp.where(is_seed, w_ep, w_sel)
+        m_sel = jnp.where(is_seed, m_ep, m_sel)
+        vstate2 = _visited_mark_hash(st.vstate, w_sel, m_sel, sel_valid)
 
     # ---- fused gather + distance evaluation ----
     idc = jnp.clip(sel_ids, 0, n - 1)
@@ -621,6 +725,221 @@ def _search_whole(di, queries, ranges, cfg) -> SearchResult:
     )
 
 
+def _init_build_state(di: DeviceIndex, queries, ranges, eps, l_lo, l_hi,
+                      seed_i, seed_d, valid, cfg: HopCfg) -> HopState:
+    """Construction-search init: entry/landing override + carry-seeded beams.
+
+    Unlike the serving ``_init_state`` the caller supplies everything the
+    snapshot's unique-value tables would otherwise derive: the layer span
+    ``[l_lo, l_hi]`` (insertion layer up to the top, Alg. 1 line 5), the
+    host-sampled window entry ``eps`` (Alg. 1 line 7) and the Thm-3.1 carry
+    ``(seed_i, seed_d)`` — already-evaluated candidates whose distances are
+    known, so they preload the beam with no DC and no re-discovery hops.
+    Members with a non-empty carry skip the entry evaluation entirely; the
+    rest evaluate their entry here (the hop-0 fold, hoisted out of the
+    loop), and the state starts at ``t = 1`` so ``_hop_body`` never runs
+    its seed iteration.  ``queries`` must be prepared (cosine-normalised)
+    rows — they come straight from the store arena."""
+    B, _ = queries.shape
+    L, n, m = di.neighbors.shape
+    W = max(cfg.width, cfg.k)
+    queries = queries.astype(jnp.float32)
+    q2 = jnp.sum(queries * queries, axis=1)
+    ranges = ranges.astype(jnp.float32)
+    # carry sorted ascending by distance (stable; invalid lanes +inf), the
+    # nearest W preloading the beam — exactly the host path's preload
+    sd = jnp.where(seed_i >= 0, seed_d.astype(jnp.float32), _INF)
+    sd_s, si_s = lax.sort(
+        (sd, seed_i.astype(jnp.int32)), dimension=1, num_keys=1
+    )
+    S = min(seed_i.shape[1], W)
+    res_d = jnp.full((B, W), _INF).at[:, :S].set(sd_s[:, :S])
+    res_i = jnp.full((B, W), -1, jnp.int32).at[:, :S].set(
+        jnp.where(jnp.isfinite(sd_s[:, :S]), si_s[:, :S], -1)
+    )
+    has_seed = res_i[:, 0] >= 0
+    epc = jnp.clip(eps.astype(jnp.int32), 0, n - 1)
+    if cfg.pipeline == "reference":
+        dots, v2 = _hop_ref.eval_materialized(
+            di.vectors, di.sq_norms, epc[:, None], queries, cfg.backend
+        )
+    else:
+        from repro.kernels.ops import gather_norm_dot
+
+        dots, v2 = gather_norm_dot(di.vectors, epc[:, None], queries,
+                                   backend=cfg.backend)
+    if cfg.metric == "l2":
+        d_ep = jnp.maximum(v2[:, 0] - 2.0 * dots[:, 0] + q2, 0.0)
+    else:
+        d_ep = 1.0 - dots[:, 0]
+    use_ep = valid & ~has_seed
+    res_d = res_d.at[:, 0].set(jnp.where(use_ep, d_ep, res_d[:, 0]))
+    res_i = res_i.at[:, 0].set(jnp.where(use_ep, epc, res_i[:, 0]))
+    res_e = res_i < 0  # valid entries unexpanded; padding reads expanded
+    v_words = ((n + 31) // 32) if cfg.visited == "bitmap" else cfg.v_words
+    vstate = jnp.zeros((B, v_words + 1), jnp.uint32)
+    # mark exactly the preloaded beam (kept seeds + entries), as the host does
+    vstate = _visited_mark(vstate, jnp.maximum(res_i, 0), res_i >= 0, cfg)
+    return HopState(
+        queries=queries,
+        q2=q2,
+        x=ranges[:, 0],
+        y=ranges[:, 1],
+        l_d=l_hi.astype(jnp.int32),
+        l_min=l_lo.astype(jnp.int32),
+        ep=epc,
+        res_d=res_d,
+        res_i=res_i,
+        res_e=res_e,
+        vstate=vstate,
+        active=valid,
+        dc=use_ep.astype(jnp.int32),  # the entry evaluation, host-identical
+        hops=jnp.zeros(B, jnp.int32),
+        t=jnp.int32(1),  # the entry fold already happened: skip the seed hop
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _build_search_jit(di, queries, ranges, eps, l_lo, l_hi, seed_i, seed_d,
+                      valid, cfg):
+    st = _init_build_state(di, queries, ranges, eps, l_lo, l_hi, seed_i,
+                           seed_d, valid, cfg)
+    st = _run_hops(di, st, cfg, cfg.max_hops + 1)
+    return st.res_i, st.res_d, st.dc, st.hops
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _build_init_jit(di, queries, ranges, eps, l_lo, l_hi, seed_i, seed_d,
+                    valid, cfg):
+    return _init_build_state(di, queries, ranges, eps, l_lo, l_hi, seed_i,
+                             seed_d, valid, cfg)
+
+
+def build_search(
+    di: DeviceIndex,
+    targets: np.ndarray,
+    ranges: np.ndarray,
+    eps: np.ndarray,
+    l_lo: int,
+    l_hi: int,
+    seed_ids: np.ndarray | None,
+    seed_d: np.ndarray | None,
+    *,
+    width: int,
+    m: int,
+    o: int,
+    metric: str = "l2",
+    seed_width: int | None = None,
+    deleted: set[int] | None = None,
+    backend: str = "auto",
+    visited: str = "hash",
+    visited_bits: int | None = None,
+    visited_fp: float = 0.02,
+    visited_hashes: int = 2,
+    merge: str = "auto",
+    max_hops: int | None = None,
+    compact: tuple[int, int] | None = (8, 8),
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """One micro-batch per-layer candidate search on the device pipeline —
+    the accelerator-resident replacement for the host
+    ``search_candidates_batch`` during batched builds.
+
+    ``targets`` [B, d] are prepared member vectors, ``ranges`` [B, 2] the
+    per-member layer windows, ``eps`` [B] host-sampled entries (used only by
+    members with an empty carry) and ``(seed_ids, seed_d)`` the Thm-3.1
+    carry.  ``B`` is padded to a power-of-two bucket and the carry to a
+    fixed ``seed_width`` so one construction run compiles O(log B) shapes.
+    ``compact`` (default ``(8, 8)``) runs the hop loop as resumable
+    chunks with ragged-batch compaction between them — carry-seeded members
+    finish in a handful of hops, so harvesting them early keeps the
+    lock-step loop from running every member at the straggler's pace;
+    ``None`` = one whole-loop jit (required inside an outer jit).  Returns
+    host ``(res_i, res_d, dc, hops)`` with deleted ids masked to -1 (they
+    stay traversable in-loop, §3.7), mirroring the host contract.
+    """
+    targets = np.asarray(targets, np.float32)
+    B = targets.shape[0]
+    W = int(width)
+    if max_hops is None:
+        max_hops = 8 * W + 64
+    C = int(seed_width) if seed_width else (
+        seed_ids.shape[1] if seed_ids is not None and seed_ids.ndim == 2 else 0
+    )
+    # the init keeps only the W nearest seeds (the host preload's S =
+    # min(C, W)); truncating host-side shrinks the device-side seed sort
+    # from the full carry width to W
+    if seed_ids is not None and seed_ids.ndim == 2 and seed_ids.shape[1] > W:
+        so = np.argsort(
+            np.where(seed_ids >= 0, seed_d, np.inf), axis=1, kind="stable"
+        )[:, :W]
+        seed_ids = np.take_along_axis(seed_ids, so, 1)
+        seed_d = np.take_along_axis(seed_d, so, 1)
+    C = max(min(C, W), 1)
+    Bp = _pow2ceil(max(B, _MIN_BUCKET))
+    si = np.full((Bp, C), -1, np.int32)
+    sdp = np.full((Bp, C), np.inf, np.float32)
+    if seed_ids is not None and seed_ids.size:
+        S = min(seed_ids.shape[1], C)
+        si[:B, :S] = seed_ids[:, :S]
+        sdp[:B, :S] = seed_d[:, :S]
+    tp = np.zeros((Bp, targets.shape[1]), np.float32)
+    tp[:B] = targets
+    rp = np.zeros((Bp, 2), np.float32)
+    rp[:B] = np.asarray(ranges, np.float32)
+    rp[B:] = (1.0, 0.0)
+    ep = np.zeros(Bp, np.int32)
+    ep[:B] = np.asarray(eps, np.int32)
+    valid = np.arange(Bp) < B
+    v_words = 0
+    if visited == "hash":
+        if visited_bits is None:
+            visited_bits = visited_filter_bits(
+                W, m, max_hops, fp=visited_fp, hashes=visited_hashes
+            )
+        else:
+            visited_bits = _pow2ceil(max(int(visited_bits), 1024))
+        v_words = visited_bits // 32
+    cfg = HopCfg(
+        k=W, width=W, m=m, o=o, metric=metric, max_hops=int(max_hops),
+        backend=backend, pipeline="fused", visited=visited,
+        v_words=v_words, v_hashes=int(visited_hashes), merge=merge,
+    )
+    # layer-span slicing: a search over [l_lo, l_hi] only ever gathers
+    # those layers' rows, so slice the neighbor tensor to a pow2-quantised
+    # span ending at l_hi (extra lower layers are masked by l_min) — the
+    # per-hop sort/mask width then scales with the sweep, not the full
+    # layer count, at O(log L) compiled span shapes.
+    L_all = di.neighbors.shape[0]
+    span_q = min(_pow2ceil(int(l_hi) - int(l_lo) + 1), int(l_hi) + 1)
+    base = int(l_hi) + 1 - span_q
+    if base > 0 or span_q < L_all:
+        di = di._replace(neighbors=di.neighbors[base : int(l_hi) + 1])
+    lo = np.full(Bp, int(l_lo) - base, np.int32)
+    hi = np.full(Bp, int(l_hi) - base, np.int32)
+    args = (
+        di, jnp.asarray(tp), jnp.asarray(rp), jnp.asarray(ep),
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(si), jnp.asarray(sdp),
+        jnp.asarray(valid), cfg,
+    )
+    if compact is None:
+        res_i, res_d, dc, hops = _build_search_jit(*args)
+        res_i = np.asarray(res_i)[:B]
+        res_d = np.asarray(res_d)[:B]
+        dc = np.asarray(dc)[:B]
+        hops = np.asarray(hops)[:B]
+    else:
+        st = _build_init_jit(*args)
+        res_i, res_d, dc, hops = _drive_chunked(
+            di, st, cfg, (int(compact[0]), int(compact[1])), B, 1
+        )
+    if deleted:
+        dead = (res_i >= 0) & np.isin(
+            res_i, np.fromiter(deleted, dtype=np.int64, count=len(deleted))
+        )
+        res_i = np.where(dead, -1, res_i)
+    return res_i, res_d, dc, hops
+
+
 @jax.jit
 def _compact_rows(st: HopState, idx: jax.Array, act_n: jax.Array) -> HopState:
     """Gather surviving rows into the next bucket (rows >= act_n are
@@ -630,44 +949,42 @@ def _compact_rows(st: HopState, idx: jax.Array, act_n: jax.Array) -> HopState:
     act = jnp.arange(idx.shape[0]) < act_n
     return HopState(
         queries=take(st.queries), q2=take(st.q2), x=take(st.x), y=take(st.y),
-        l_d=take(st.l_d), ep=take(st.ep), res_d=take(st.res_d),
+        l_d=take(st.l_d), l_min=take(st.l_min), ep=take(st.ep),
+        res_d=take(st.res_d),
         res_i=take(st.res_i), res_e=take(st.res_e), vstate=take(st.vstate),
         active=take(st.active) & act, dc=take(st.dc), hops=take(st.hops),
         t=st.t,
     )
 
 
-def _search_chunked(di, queries, ranges, cfg: HopCfg,
-                    compact: tuple[int, int]) -> SearchResult:
-    """Ragged-batch compaction driver (host-side scheduling, jitted chunks).
+def _drive_chunked(di, st: HopState, cfg: HopCfg, compact: tuple[int, int],
+                   B: int, t0: int):
+    """Ragged-batch compaction driver (host-side scheduling, jitted chunks)
+    over an already-initialised ``HopState`` of ``Bp >= B`` rows (rows >= B
+    are padding and must be inactive).
 
-    Phase 1 runs ``compact[0]`` iterations on the full (pow2-padded) batch;
-    every subsequent phase compacts the still-active queries into the next
-    pow2 bucket and runs ``compact[1]`` more.  Finished queries are
-    harvested at chunk boundaries.  Bitwise identical to the lock-step
-    loop — per-query trajectories are iteration-indexed and independent.
+    Phase 1 runs ``compact[0]`` iterations on the full bucket; every
+    subsequent phase compacts the still-active queries into the next pow2
+    bucket and runs ``compact[1]`` more.  Finished queries are harvested at
+    chunk boundaries.  Bitwise identical to the lock-step loop — per-query
+    trajectories are iteration-indexed and independent.  ``t0`` is the
+    state's initial iteration counter (0 for serving, 1 for build states
+    whose entry fold happened at init).  Returns host
+    ``(ids[B, k], dists[B, k], dc[B], hops[B])`` with ``k = cfg.k``.
     """
     h0, h1 = compact
-    B = queries.shape[0]
     k = cfg.k
     out_i = np.full((B, k), -1, np.int32)
     out_d = np.full((B, k), np.inf, np.float32)
     out_dc = np.zeros(B, np.int32)
     out_hops = np.zeros(B, np.int32)
     if B == 0:
-        return SearchResult(ids=out_i, dists=out_d, dc=out_dc, hops=out_hops)
-
-    Bp = _pow2ceil(max(B, _MIN_BUCKET))
-    qp = jnp.zeros((Bp, queries.shape[1]), jnp.float32).at[:B].set(
-        jnp.asarray(queries, jnp.float32))
-    # pad rows carry an inverted (empty) range -> inactive from init
-    rp = jnp.broadcast_to(jnp.asarray([1.0, 0.0], jnp.float32), (Bp, 2))
-    rp = rp.at[:B].set(jnp.asarray(ranges, jnp.float32))
-    st = _init_jit(di, qp, rp, cfg)
+        return out_i, out_d, out_dc, out_hops
+    Bp = st.res_i.shape[0]
     orig = np.concatenate([np.arange(B), np.full(Bp - B, B)])  # B = sentinel
 
     h = h0
-    t_planned = 0  # upper bound on st.t, tracked host-side (no extra sync)
+    t_planned = t0  # upper bound on st.t, tracked host-side (no extra sync)
     harvests = []  # (dst rows, bucket rows, state) — materialised post-loop
     while True:
         st = _run_jit(di, st, cfg, h)
@@ -697,7 +1014,27 @@ def _search_chunked(di, queries, ranges, cfg: HopCfg,
         out_d[dst] = np.asarray(res_d)[rows_, :k]
         out_dc[dst] = np.asarray(dc_)[rows_]
         out_hops[dst] = np.asarray(hops_)[rows_]
-    return SearchResult(ids=out_i, dists=out_d, dc=out_dc, hops=out_hops)
+    return out_i, out_d, out_dc, out_hops
+
+
+def _search_chunked(di, queries, ranges, cfg: HopCfg,
+                    compact: tuple[int, int]) -> SearchResult:
+    """Serving entry of the compaction driver: pad, init, drive."""
+    B = queries.shape[0]
+    if B == 0:
+        return SearchResult(
+            ids=np.full((0, cfg.k), -1, np.int32),
+            dists=np.full((0, cfg.k), np.inf, np.float32),
+            dc=np.zeros(0, np.int32), hops=np.zeros(0, np.int32),
+        )
+    Bp = _pow2ceil(max(B, _MIN_BUCKET))
+    qp = jnp.zeros((Bp, queries.shape[1]), jnp.float32).at[:B].set(
+        jnp.asarray(queries, jnp.float32))
+    # pad rows carry an inverted (empty) range -> inactive from init
+    rp = jnp.broadcast_to(jnp.asarray([1.0, 0.0], jnp.float32), (Bp, 2))
+    rp = rp.at[:B].set(jnp.asarray(ranges, jnp.float32))
+    st = _init_jit(di, qp, rp, cfg)
+    return SearchResult(*_drive_chunked(di, st, cfg, compact, B, 0))
 
 
 def device_search(

@@ -17,13 +17,21 @@ PAD = -1
 
 
 class LayeredGraph:
-    __slots__ = ("m", "layers", "counts", "_cap")
+    __slots__ = ("m", "layers", "counts", "_cap", "version")
 
     def __init__(self, m: int, capacity: int = 1024):
         self.m = int(m)
         self._cap = max(int(capacity), 8)
         self.layers: list[np.ndarray] = []
         self.counts: list[np.ndarray] = []
+        # monotone edge-version stamp: bumped by every structural mutation
+        # that goes through the mutator methods.  Consumers that mirror the
+        # adjacency (the persistent build slab / device delta arena in
+        # ``repro.core.snapshot``) record the stamp at sync time and fall
+        # back to a full rebuild when it moved underneath them.  Bulk writers
+        # that scatter into ``layers``/``counts`` directly (the batched
+        # commit) must bump it manually before recording their deltas.
+        self.version = 0
         self.add_layer()
 
     @property
@@ -34,6 +42,12 @@ class LayeredGraph:
     def top(self) -> int:
         return len(self.layers) - 1
 
+    @property
+    def capacity(self) -> int:
+        """Arena capacity (rows allocated per layer); mirrors size to the
+        persistent build slab / device delta arena."""
+        return self._cap
+
     def add_layer(self, clone_from: int | None = None) -> None:
         if clone_from is not None:
             self.layers.append(self.layers[clone_from].copy())
@@ -41,6 +55,7 @@ class LayeredGraph:
         else:
             self.layers.append(np.full((self._cap, self.m), PAD, dtype=np.int32))
             self.counts.append(np.zeros(self._cap, dtype=np.int32))
+        self.version += 1
 
     def ensure_capacity(self, n: int) -> None:
         if n <= self._cap:
@@ -56,6 +71,7 @@ class LayeredGraph:
             cnt[: self._cap] = self.counts[i]
             self.counts[i] = cnt
         self._cap = new_cap
+        self.version += 1
 
     def neighbors(self, l: int, v: int) -> np.ndarray:
         """View of the current out-neighbors of ``v`` at layer ``l``."""
@@ -70,6 +86,7 @@ class LayeredGraph:
         self.layers[l][v, :k] = ids
         self.layers[l][v, k:] = PAD
         self.counts[l][v] = k
+        self.version += 1
 
     def append_neighbor(self, l: int, v: int, nid: int) -> bool:
         """Append if there is an empty slot; returns False when full."""
@@ -78,6 +95,7 @@ class LayeredGraph:
             return False
         self.layers[l][v, c] = nid
         self.counts[l][v] = c + 1
+        self.version += 1
         return True
 
     def out_degree_histogram(self, l: int, n: int) -> np.ndarray:

@@ -46,6 +46,7 @@ import numpy as np
 
 from .graph import LayeredGraph
 from .search import (
+    VisitedArena2D,
     _Visited,
     rng_prune,
     rng_prune_ids,
@@ -53,6 +54,7 @@ from .search import (
     search_candidates,
     search_candidates_batch,
 )
+from .snapshot import DeviceBuildArena, NeighborSlab
 from .store import BuildStats, SearchStats, VectorStore
 
 
@@ -101,6 +103,18 @@ class WoWIndex:
         self.build_stats = BuildStats()
         self._visited = _Visited()
         self._rng = np.random.default_rng(seed)
+        # persistent batched-build state (allocated once, delta-maintained —
+        # no Theta(n) work inside the micro-batch loop):
+        #   _slab      host top-down neighbor slab (numpy/ops backends)
+        #   _arena     device-resident frozen snapshot + delta arena
+        #   _visited2d generation-stamped [B, n] visited arena (host search)
+        self._slab = NeighborSlab()
+        self._arena: DeviceBuildArena | None = None
+        self._visited2d = VisitedArena2D()
+        # dirty-row tracking for incremental snapshot refresh
+        # (take_snapshot(prev=...)): "all" forces a full rebuild; reset by
+        # every take_snapshot, fed by the batched commit.
+        self._snap_tracker: dict = {"stamp": -1, "all": True, "dirty": {}}
 
     # ------------------------------------------------------------ properties
     def __len__(self) -> int:
@@ -193,6 +207,7 @@ class WoWIndex:
             self.value_map[attr].append(vid)
         self._note_live_insert(attr)
         self.mutations += 1
+        self._snap_tracker["all"] = True  # row-level dirt untracked here
         for l in range(top + 1):
             sel = neighbors_per_layer[l]
             if sel:
@@ -207,17 +222,46 @@ class WoWIndex:
         attrs: np.ndarray,
         batch_size: int = 128,
         backend: str = "numpy",
+        device_width: int | None = None,
     ) -> np.ndarray:
         """Batched Algorithm 1 (module docstring, "Batched construction").
 
         ``vectors`` [N, d] and ``attrs`` [N] are split into micro-batches of
         ``batch_size``; each micro-batch's per-layer candidate searches run
         as one lock-step batched evaluation and its edges are committed in a
-        sequential-equivalent order.  ``backend="ops"`` routes the hop
-        distance evaluation through ``repro.kernels.ops.gather_norm_dot``
-        (the device serving path's fused gather kernel dispatch); the
-        default ``"numpy"`` uses host BLAS.  Returns the new vertex ids.
+        sequential-equivalent order.  ``backend`` selects the phase-1
+        candidate-search engine:
+
+          * ``"numpy"`` (default) — host BLAS lock-step search
+            (``search_candidates_batch``) over the persistent neighbor slab;
+          * ``"ops"`` — the host search with hop distance evaluation routed
+            through ``repro.kernels.ops.gather_norm_dot`` (the serving
+            path's fused gather kernel dispatch) against the device vector
+            arena;
+          * ``"device"`` — the whole per-layer beam search runs through the
+            jitted ``device_search`` hop pipeline against the device-resident
+            frozen snapshot + delta arena (``DeviceBuildArena``): carry-
+            seeded beams, hashed O(budget) visited filter, fused gather
+            kernel — the accelerator-resident build.
+
+        All backends commit identically (phase 2 is the deterministic host
+        reduction) and maintain their arenas incrementally: the neighbor
+        slab, device arena and visited arena are allocated once and updated
+        with per-batch deltas / generation stamps — no Theta(n) work inside
+        the micro-batch loop.
+
+        ``device_width`` narrows the device search's beam below
+        ``ef_construction`` (default: equal, matching the host search).
+        The Thm-3.1 carry accumulates up to ``2*ef_construction + 2``
+        already-evaluated candidates across layers regardless, so a
+        narrower device beam trades re-discovery breadth for hops — tune it
+        against the recall-parity gate (``bench_build --backend device``
+        sweeps it and keeps the fastest parity-passing setting).
+
+        Returns the new vertex ids.
         """
+        if backend not in ("numpy", "ops", "device"):
+            raise ValueError(f"unknown insert_batch backend {backend!r}")
         vectors = np.asarray(vectors, dtype=np.float32)
         if vectors.ndim == 1:
             vectors = vectors.reshape(1, -1)
@@ -228,19 +272,35 @@ class WoWIndex:
             raise ValueError("batch_size must be >= 1")
         out = [
             self._insert_micro_batch(vectors[s : s + batch_size],
-                                     attrs[s : s + batch_size], backend)
+                                     attrs[s : s + batch_size], backend,
+                                     device_width)
             for s in range(0, len(attrs), batch_size)
         ]
         return (np.concatenate(out) if out else np.empty(0, dtype=np.int64))
 
     def _insert_micro_batch(
-        self, vecs: np.ndarray, attrs_b: np.ndarray, backend: str
+        self,
+        vecs: np.ndarray,
+        attrs_b: np.ndarray,
+        backend: str,
+        device_width: int | None = None,
     ) -> np.ndarray:
         p = self.params
         m, o, omega_c = p.m, p.o, p.ef_construction
         B = len(attrs_b)
         if B == 0:
             return np.empty(0, dtype=np.int64)
+        # mirror liveness, judged BEFORE this batch mutates anything: a
+        # mirror that was in sync at batch start stays maintainable by this
+        # batch's deltas alone (even if the other backend drives phase 1),
+        # so backend switches never force full rebuilds.
+        g = self.graph
+        slab_pre_ok = self._slab.arr is not None and self._slab.version == g.version
+        arena_pre_ok = (
+            self._arena is not None
+            and self._arena.neighbors is not None
+            and self._arena.version == g.version
+        )
         # ---- Lines 2-4 + 18 (attribute side), hoisted batch-wide: register
         # every value first so windows see the post-batch value set.
         vals = [float(a) for a in attrs_b]
@@ -292,19 +352,22 @@ class WoWIndex:
         u_lay_ids: list[np.ndarray] = [None] * (top + 1)  # type: ignore[list-item]
         u_lay_d: list[np.ndarray] = [None] * (top + 1)  # type: ignore[list-item]
         abb = np.arange(B)[:, None]
+        arena = None
+        slab_full = None
+        ops_table = None
         if self.store.n > B:  # the pre-batch graph is non-empty
-            # the graph is frozen during phase 1: build the top-down neighbor
-            # slab once and let every layer's search take a prefix view
-            n_now = self.store.n
-            slab_full = np.stack(
-                [self.graph.layers[l][:n_now] for l in range(top, -1, -1)],
-                axis=1,
-            ).reshape(n_now, (top + 1) * m)
-            ops_table = None
-            if backend == "ops":  # one device upload per frozen-graph phase
-                import jax.numpy as jnp
-
-                ops_table = jnp.asarray(self.store.vectors[:n_now])
+            # the graph is frozen during phase 1; the persistent arenas are
+            # brought up to date with deltas only (allocation/rebuild is
+            # amortised over capacity growth, never per batch)
+            if backend in ("ops", "device"):
+                if self._arena is None:
+                    self._arena = DeviceBuildArena()
+                arena = self._arena
+                arena.ensure(self)
+                if backend == "ops":
+                    ops_table = arena.vectors  # device-resident [cap, d]
+            if backend != "device":
+                slab_full = self._slab.ensure(self.graph)
             uw = 0  # used carry width: every [B, C] pass runs on [:, :uw]
             for l in range(top, -1, -1):
                 # window-filter the carry (Alg. 1 line 6, all rows at once)
@@ -355,22 +418,42 @@ class WoWIndex:
                         need.append(b)
                         eps.append(ep)
                 if need:
-                    res_i, res_d, dcs, _, _ = search_candidates_batch(
-                        self.store,
-                        self.graph,
-                        targets[need],
-                        np.asarray(eps, dtype=np.int64),
-                        np.stack([wlo[need, l], whi[need, l]], axis=1),
-                        l_min=l,
-                        l_max=top,
-                        width=omega_c,
-                        deleted=self.deleted or None,
-                        backend=backend,
-                        slab_cache=slab_full,
-                        ops_table=ops_table,
-                        seed_ids=u_ids[need, :uw] if uw else None,
-                        seed_d=u_d[need, :uw] if uw else None,
-                    )
+                    seeds_i = u_ids[need, :uw] if uw else None
+                    seeds_d = u_d[need, :uw] if uw else None
+                    if backend == "device":
+                        # accelerator-resident phase 1: the jitted hop
+                        # pipeline over the frozen snapshot + delta arena,
+                        # beams seeded with the Thm-3.1 carry
+                        res_i, res_d, dcs, _ = arena.search(
+                            targets[need],
+                            np.stack([wlo[need, l], whi[need, l]], axis=1),
+                            np.asarray(eps, dtype=np.int64),
+                            l,
+                            top,
+                            seeds_i,
+                            seeds_d,
+                            width=device_width or omega_c,
+                            seed_width=C,
+                            deleted=self.deleted or None,
+                        )
+                    else:
+                        res_i, res_d, dcs, _, _ = search_candidates_batch(
+                            self.store,
+                            self.graph,
+                            targets[need],
+                            np.asarray(eps, dtype=np.int64),
+                            np.stack([wlo[need, l], whi[need, l]], axis=1),
+                            l_min=l,
+                            l_max=top,
+                            width=omega_c,
+                            deleted=self.deleted or None,
+                            backend=backend,
+                            slab_cache=slab_full,
+                            ops_table=ops_table,
+                            seed_ids=seeds_i,
+                            seed_d=seeds_d,
+                            visited_arena=self._visited2d,
+                        )
                     self.build_stats.dc += int(dcs.sum())
                     self.build_stats.searches += len(need)
                     # merge found into the carry: id-sort dedupe keeping the
@@ -469,6 +552,9 @@ class WoWIndex:
         # sequential appends exactly; arrivals past slot m defer to the
         # terminal per-vertex prune.
         overflow: dict[tuple[int, int], list[tuple[int, float]]] = {}
+        # changed (layer, vertex) rows of this commit — the delta the
+        # persistent slab / device arena / snapshot tracker consume
+        dirty: dict[int, list[np.ndarray]] = {}
         lay = self.graph.layers
         cnt = self.graph.counts
         sel3_i = sel_ids.reshape(B, L1, m_fwd)
@@ -481,6 +567,7 @@ class WoWIndex:
             lay[l][vids, :m_fwd] = np.where(fwd_m, fwd_i, -1).astype(np.int32)
             lay[l][vids, m_fwd:] = -1
             cnt[l][vids] = deg
+            dirty[l] = [vids]
             # (padding holes cannot occur: sel_mask is a selection-order
             # prefix — rng_prune_rows packs valid entries first)
             nb2, nc2 = np.nonzero(fwd_m)
@@ -503,6 +590,7 @@ class WoWIndex:
             ends = np.append(starts[1:], len(tgt_s))
             new_deg = np.minimum(base[starts] + (ends - starts), self.graph.m)
             cnt[l][tgt_s[starts]] = new_deg.astype(np.int32)
+            dirty[l].append(tgt_s[starts])  # unique back-edge targets
             nover = int((~ok).sum())
             if nover:
                 self.build_stats.prunes += nover
@@ -512,7 +600,53 @@ class WoWIndex:
                     overflow.setdefault((l, t), []).append((o_, d_))
         if overflow:
             self._resolve_back_edge_overflow(overflow, uvals)
+            for l, t in overflow.keys():
+                dirty.setdefault(l, []).append(
+                    np.asarray([t], dtype=np.int64)
+                )
+        # a mirror is delta-maintainable if phase 1 just (re)synced it, or
+        # if it was in sync at batch start and the arenas did not regrow
+        slab_live = slab_full is not None or (
+            slab_pre_ok
+            and self._slab.top == self.graph.top
+            and self._slab.cap == self.graph.capacity
+        )
+        arena_live = arena is not None or (
+            arena_pre_ok
+            and self._arena.num_layers == self.graph.num_layers
+            and self._arena.cap == self.graph.capacity
+        )
+        self._commit_deltas(
+            dirty, self._arena if arena_live else None, slab_live
+        )
         return vids
+
+    def _commit_deltas(
+        self,
+        dirty: dict[int, list[np.ndarray]],
+        arena: DeviceBuildArena | None,
+        slab_live: bool,
+    ) -> None:
+        """Post-commit bookkeeping of one micro-batch: bump the graph's
+        edge-version stamp (the batched commit scatters into the adjacency
+        arenas directly) and propagate the changed-row set to whichever
+        persistent mirrors are live — the host neighbor slab, the device
+        delta arena, and the incremental-snapshot dirty tracker.  Everything
+        here is O(changed rows)."""
+        dirty_np = {
+            l: np.unique(np.concatenate(parts).astype(np.int64))
+            for l, parts in dirty.items()
+            if parts
+        }
+        self.graph.version += 1
+        if slab_live:
+            self._slab.apply_deltas(self.graph, dirty_np)
+        if arena is not None:
+            arena.apply_deltas(self, dirty_np)
+        tr = self._snap_tracker
+        if not tr["all"]:
+            for l, rows in dirty_np.items():
+                tr["dirty"].setdefault(l, []).append(rows)
 
     def _resolve_back_edge_overflow(
         self,
@@ -798,6 +932,10 @@ class WoWIndex:
             return
         self.deleted.add(vid)
         self.mutations += 1
+        # any change to the live set invalidates incremental snapshot
+        # refresh: a compacted prev snapshot cannot be delta-extended even
+        # if its id map LOOKS like an identity prefix (suffix-only deletes)
+        self._snap_tracker["all"] = True
         val = float(self.store.attrs[vid])
         c = self._live_counts.get(val, 0) - 1
         self._live_counts[val] = c
@@ -813,7 +951,125 @@ class WoWIndex:
             return
         self.deleted.discard(vid)
         self.mutations += 1
+        self._snap_tracker["all"] = True  # live set changed (see delete)
         self._note_live_insert(float(self.store.attrs[vid]))
+
+    def compact_rows(self) -> int:
+        """Tombstone compaction pass (§3.7 maintenance): rebuild every
+        neighbor row that references a deleted vertex from *live* candidates
+        only, bounding recall decay on long-running ingest-while-serve
+        deployments with deletes.
+
+        For each contended (layer, vertex) row the candidate set is the
+        row's kept live neighbors plus the live neighbors of each dropped
+        tombstone (the tombstone's own adjacency approximates the
+        neighborhood it was bridging — the standard graph-repair move), all
+        window-filtered against the owner's layer window (Def. 4) and
+        re-selected with the vectorised RNG prune.  Deleted vertices' own
+        rows are rebuilt too (they remain traversable until compacted
+        elsewhere).  Returns the number of rows rebuilt; O(contended rows),
+        with the changed rows propagated to the persistent build arenas and
+        snapshot tracker as deltas.
+        """
+        if not self.deleted or self.store.n == 0:
+            return 0
+        p = self.params
+        n = self.store.n
+        m = self.graph.m
+        dead = np.fromiter(
+            self.deleted, dtype=np.int64, count=len(self.deleted)
+        )
+        uvals = np.fromiter(
+            self.value_map.keys(), dtype=np.float64, count=len(self.value_map)
+        )
+        uvals.sort()
+        u = len(uvals)
+        # arena liveness must be judged BEFORE this pass mutates anything:
+        # a mirror already out of sync keeps its stale version and does a
+        # full (amortised) rebuild at its next ensure instead.
+        slab_ok = (
+            self._slab.arr is not None
+            and self._slab.version == self.graph.version
+            and self._slab.top == self.graph.top
+            and self._slab.cap == self.graph.capacity
+        )
+        arena_ok = (
+            self._arena is not None
+            and self._arena.version == self.graph.version
+            and self._arena.num_layers == self.graph.num_layers
+            and self._arena.cap == self.graph.capacity
+        )
+        rebuilt = 0
+        dirty: dict[int, list[np.ndarray]] = {}
+        col = np.arange(m)[None, :]
+        for l in range(self.graph.num_layers):
+            rows = self.graph.layers[l][:n]
+            valid = col < self.graph.counts[l][:n][:, None]
+            contended = (valid & np.isin(rows, dead)).any(axis=1)
+            own = np.nonzero(contended)[0].astype(np.int64)
+            if own.size == 0:
+                continue
+            R = len(own)
+            arR = np.arange(R)[:, None]
+            rows_b = rows[own].astype(np.int64)  # [R, m]
+            valid_b = valid[own]
+            is_dead = np.isin(rows_b, dead) & valid_b
+            keep = valid_b & ~is_dead
+            # repair candidates: the dropped tombstones' own live neighbors
+            parents = np.where(is_dead, rows_b, -1)
+            rep = rows[np.maximum(parents, 0)].astype(np.int64)  # [R, m, m]
+            rep_ok = (parents[:, :, None] >= 0) & (rep >= 0)
+            rep_ok &= ~np.isin(rep, dead)
+            rep_ok &= rep != own[:, None, None]
+            cand = np.concatenate(
+                [np.where(keep, rows_b, -1),
+                 np.where(rep_ok, rep, -1).reshape(R, m * m)],
+                axis=1,
+            )  # [R, m + m*m]
+            # owner's window at this layer (rank arithmetic, Def. 4)
+            attr_o = self.store.attrs[own]
+            half = p.o**l
+            rk = np.searchsorted(uvals, attr_o, side="left")
+            lo_idx = np.maximum(0, rk - half)
+            hi_idx = np.maximum(np.minimum(u - 1, rk + half), lo_idx)
+            w_lo = np.minimum(uvals[lo_idx], attr_o)
+            w_hi = np.maximum(uvals[hi_idx], attr_o)
+            a = self.store.attrs[np.maximum(cand, 0)]
+            ok = (cand >= 0) & (a >= w_lo[:, None]) & (a <= w_hi[:, None])
+            cand = np.where(ok, cand, -1)
+            # id-sort dedupe (repair lists overlap the kept prefix)
+            key = np.where(cand >= 0, cand, np.int64(2**62))
+            order = np.argsort(key, axis=1, kind="stable")
+            ks = key[arR, order]
+            dup = np.zeros(ks.shape, dtype=bool)
+            dup[:, 1:] = ks[:, 1:] == ks[:, :-1]
+            cand = np.where(dup | (ks == 2**62), -1, cand[arR, order])
+            d = self.store.dist_block(
+                self.store.vectors[own], np.maximum(cand, 0)
+            ).astype(np.float64)
+            d = np.where(cand >= 0, d, np.inf)
+            self.build_stats.dc += int((cand >= 0).sum())
+            self.build_stats.prunes += R
+            T = max(2 * m, 8)  # nearest-T pre-truncation (as in phase 2)
+            if cand.shape[1] > T:
+                part = np.argpartition(d, T - 1, axis=1)[:, :T]
+                cand = cand[arR, part]
+                d = d[arR, part]
+            sel_ids, _, sel_mask = rng_prune_rows(self.store, cand, d, m)
+            self.graph.layers[l][own] = np.where(
+                sel_mask, sel_ids, -1
+            ).astype(np.int32)
+            self.graph.counts[l][own] = sel_mask.sum(axis=1).astype(np.int32)
+            dirty[l] = [own]
+            rebuilt += R
+        if rebuilt:
+            self.mutations += 1
+            self._commit_deltas(
+                dirty,
+                self._arena if arena_ok else None,
+                slab_ok,
+            )
+        return rebuilt
 
     # ------------------------------------------------------------- reporting
     def memory_bytes(self) -> int:

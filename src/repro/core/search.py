@@ -58,6 +58,51 @@ class _Visited:
         return self.gen[v] == self.cur
 
 
+class VisitedArena2D:
+    """Generation-stamped 2-D visited arena — the batched twin of
+    ``_Visited`` for ``search_candidates_batch``.
+
+    One persistent ``uint8[Bcap, ncap]`` stamp array replaces the fresh
+    ``bool[B, n]`` bitmap the batched search used to zero per call (same
+    byte footprint): a cell is visited iff its stamp equals the current
+    generation, and "clearing" for a new search is one counter bump (a
+    cheap full re-zero every 255 generations handles stamp wrap).
+    Capacity grows by doubling (amortised — the arena is reallocated
+    O(log) times over an index's life, never per micro-batch), which is
+    what makes the construction batch loop free of Theta(n) allocations.
+    ``stats`` counts (re)allocations so regression tests can pin the
+    once-only behaviour down.
+    """
+
+    __slots__ = ("arr", "bcap", "ncap", "cur", "stats")
+
+    def __init__(self, bcap: int = 8, ncap: int = 1024):
+        self.bcap = max(int(bcap), 1)
+        self.ncap = max(int(ncap), 1)
+        self.arr = np.zeros(self.bcap * self.ncap, dtype=np.uint8)
+        self.cur = 0
+        self.stats = {"allocs": 1, "searches": 0}
+
+    def begin(self, b: int, n: int) -> tuple[np.ndarray, int, int]:
+        """Start a search over ``b`` members against ``n`` vertices: grow if
+        needed, bump the generation, and return ``(flat_arr, cur, ncap)``.
+        Row ``r``'s cell for vertex ``v`` lives at ``r * ncap + v``."""
+        if b > self.bcap or n > self.ncap:
+            while self.bcap < b:
+                self.bcap *= 2
+            while self.ncap < n:
+                self.ncap *= 2
+            self.arr = np.zeros(self.bcap * self.ncap, dtype=np.uint8)
+            self.cur = 0
+            self.stats["allocs"] += 1
+        if self.cur >= 255:  # uint8 stamp wrap: hard reset
+            self.arr.fill(0)
+            self.cur = 0
+        self.cur += 1
+        self.stats["searches"] += 1
+        return self.arr, self.cur, self.ncap
+
+
 def hash_positions_np(ids, v_bits: int, nh: int):
     """Blocked-Bloom probe positions, numpy: ids int[...] -> uint32[..., nh]
     in [0, v_bits) (power-of-two ``v_bits``).  Bit-identical to the device
@@ -262,6 +307,7 @@ def search_candidates_batch(
     ops_table=None,
     seed_ids: np.ndarray | None = None,
     seed_d: np.ndarray | None = None,
+    visited_arena: "VisitedArena2D | None" = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Lock-step batched ``SearchCandidates`` (Alg. 2) for B independent
     targets over the *live* host graph — the construction twin of the device
@@ -298,6 +344,12 @@ def search_candidates_batch(
     candidate ids [B, W] (-1 padded, deleted masked out) with distances
     [B, W], plus per-member instrumentation (DC accounting preserved per
     insert).
+
+    ``visited_arena`` supplies a persistent generation-stamped 2-D visited
+    arena (``VisitedArena2D``) so repeated calls — the per-layer searches of
+    a micro-batch build loop — share one allocation instead of zeroing a
+    fresh Theta(B*n) bitmap each; omitted, a transient arena is created
+    (same code path, same cost profile as the old bitmap).
     """
     B = len(eps)
     n = store.n
@@ -352,14 +404,17 @@ def search_candidates_batch(
     # compaction, host edition): every per-hop op runs on the active rows
     # plus a bounded fraction of retired stragglers; when the active
     # fraction drops below the threshold the whole state compacts ----
-    org = np.arange(B)  # current row -> original member
+    org = np.arange(B)  # current row -> original member (== visited row)
     tg = targets
     q2c = q2
     xc, yc = xs, ys
     rd = np.full((B, W), np.inf, dtype=np.float32)
     ri = np.full((B, W), -1, dtype=np.int32)
     re = np.zeros((B, W), dtype=bool)
-    vis = np.zeros((B, n), dtype=bool)
+    # generation-stamped visited state: member b's cell for vertex v lives
+    # at varr[b * ncap + v]; visited iff the stamp equals this search's
+    # generation.  A caller-owned arena makes this allocation-free.
+    varr, vcur, ncap = (visited_arena or VisitedArena2D(B, n)).begin(B, n)
     dcc = np.zeros(B, dtype=np.int64)
     if seed_ids is not None and seed_ids.size:
         # multi-seed: preload the beam with the caller's already-evaluated
@@ -374,13 +429,13 @@ def search_candidates_batch(
             np.isfinite(rd[:, :S]), seed_ids[arB, so], -1
         ).astype(np.int32)
         sb, sc = np.nonzero(ri[:, :S] >= 0)
-        vis.ravel()[sb.astype(np.int64) * n + ri[sb, sc]] = True
+        varr[sb.astype(np.int64) * ncap + ri[sb, sc]] = vcur
         has_seed = ri[:, 0] >= 0
     else:
         has_seed = np.zeros(B, dtype=bool)
     noseed = np.nonzero(~has_seed)[0]
     if noseed.size:  # Alg. 1 line 7 entries for members with no carry
-        vis[noseed, eps[noseed]] = True
+        varr[noseed.astype(np.int64) * ncap + eps[noseed]] = vcur
         rd[noseed, 0] = eval_ids(
             tg[noseed], q2[noseed], eps[noseed, None].astype(np.int32)
         )[:, 0]
@@ -427,10 +482,12 @@ def search_candidates_batch(
     rank_mask = (1 << shift) - 1
     guard = 0
 
-    # per-row index scaffolding changes only at compaction events
+    # per-row index scaffolding changes only at compaction events; visited
+    # offsets address the arena by ORIGINAL member row (compaction slices
+    # ``org``, never the arena)
     Bc = B
     aba = np.arange(Bc)[:, None]
-    off_n = aba * np.int64(n)
+    off_n = org[:, None].astype(np.int64) * ncap
     off_f = aba * np.int64(F)
     while guard <= n + 2:  # each hop expands >= 1 distinct vertex per member
         guard += 1
@@ -455,12 +512,11 @@ def search_candidates_batch(
                 org, tg, q2c = org[keep], tg[keep], q2c[keep]
                 xc, yc = xc[keep], yc[keep]
                 rd, ri, re = rd[keep], ri[keep], re[keep]
-                vis = vis[keep]
                 dcc, hoc, fcc = dcc[keep], hoc[keep], fcc[keep]
                 act = np.ones(len(org), dtype=bool)
                 Bc = len(org)
                 aba = np.arange(Bc)[:, None]
-                off_n = aba * np.int64(n)
+                off_n = org[:, None].astype(np.int64) * ncap
                 off_f = aba * np.int64(F)
                 continue
         sel_all = all_active and not any_done
@@ -481,7 +537,7 @@ def search_candidates_batch(
         # through flat np.take — measurably faster than 2D fancy indexing.
         safe = slab[s]  # [Bc, F] int32; -1 pads ARE the validity mask
         valid = safe >= 0
-        unv = valid & ~vis.ravel().take(off_n + safe, mode="wrap")
+        unv = valid & (varr.take(off_n + safe, mode="wrap") != vcur)
         if not sel_all:
             unv &= sel[:, None]
         a = attrs.take(safe, mode="wrap")
@@ -535,7 +591,7 @@ def search_candidates_batch(
         adm_ids = ids_s.ravel().take(off_f + order).astype(np.int32)
         nb, ncol = np.nonzero(mask)
         ids_f = adm_ids[nb, ncol]
-        vis.ravel()[nb.astype(np.int64) * n + ids_f] = True
+        varr[org[nb].astype(np.int64) * ncap + ids_f] = vcur
         # ---- one batched distance evaluation for the whole hop ----
         if sparse_eval:
             # only the admitted lanes (~40% of the dense [Bc, K] block)

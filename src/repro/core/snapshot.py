@@ -1,4 +1,4 @@
-"""Frozen device snapshot of a WoW index.
+"""Frozen device snapshot of a WoW index + the build-path delta arenas.
 
 The writer (host arenas, ``WoWIndex``) and the reader (device batched search)
 are split: serving takes an immutable snapshot — padded dense tensors that
@@ -15,6 +15,33 @@ Arrays (n = live vertices, L = layers, m = max outdegree):
   uvals        f32[u]             sorted unique attribute values
   uval_rep     i32[u]             representative (first live) vertex per value
   ids_map      i64[n]             snapshot id -> original WoWIndex id
+
+Incremental refresh: ``take_snapshot(index, prev=...)`` reuses the previous
+snapshot's arrays when nothing was deleted and the index tracked which
+neighbor rows changed since ``prev`` was taken (``WoWIndex`` keeps a dirty-row
+tracker fed by the batched commit): unchanged row prefixes are block-copied,
+changed rows are re-read from the graph arena, and the sorted unique-value
+arrays are merged instead of re-sorted — the serve-refresh path for
+ingest-while-serve skips the [L, n, m] re-compaction argsort entirely.
+
+Build-path delta arenas (the accelerator-resident construction state):
+
+  * ``NeighborSlab`` — the persistent host twin of the per-batch
+    ``np.stack`` slab that ``search_candidates_batch`` gathers from: one
+    top-down ``i32[cap, (top+1)*m]`` arena, allocated at graph capacity and
+    maintained by scattering only the (layer, vertex) rows each micro-batch
+    committed.  Re-built in full only when the graph itself reallocates
+    (capacity/top growth — amortised) or when a mutation bypassed the delta
+    protocol (detected via ``LayeredGraph.version``).
+  * ``DeviceBuildArena`` — the same idea device-side: a
+    ``DeviceIndex``-compatible set of jax buffers (vectors / sq-norms /
+    attrs / bottom-up ``i32[L, cap, m]`` neighbors) sized to the host arena
+    capacity, so a micro-batch's appends and edge commits are bounded-size
+    row scatters (donated, in-place where the backend supports it) instead
+    of a Theta(n) re-stack + re-upload.  ``device_index()`` views the
+    buffers as a ``DeviceIndex`` for the jitted hop pipeline; construction
+    searches never read ``uvals`` (entries come carry- or host-sampled), so
+    those fields are 1-element dummies.
 """
 from __future__ import annotations
 
@@ -35,6 +62,7 @@ class Snapshot:
     m: int
     o: int
     metric: str
+    stamp: int = -1  # index.mutations at creation (incremental-refresh key)
 
     @property
     def n(self) -> int:
@@ -45,8 +73,115 @@ class Snapshot:
         return self.neighbors.shape[0]
 
 
-def take_snapshot(index) -> Snapshot:
-    """Build a compacted snapshot from a live ``WoWIndex``."""
+def _reset_tracker(index, stamp: int) -> None:
+    tracker = getattr(index, "_snap_tracker", None)
+    if tracker is not None:
+        tracker["stamp"] = stamp
+        tracker["all"] = False
+        tracker["dirty"] = {}
+
+
+def _fast_refresh_ok(index, prev: Snapshot | None) -> bool:
+    """The incremental path applies only when ``prev`` is an identity-mapped
+    snapshot of this index's dirty-tracking epoch and nothing is deleted
+    (delete compaction remaps every id — a full rebuild by definition)."""
+    tracker = getattr(index, "_snap_tracker", None)
+    return (
+        prev is not None
+        and tracker is not None
+        and not tracker["all"]
+        and prev.stamp == tracker["stamp"]
+        and not index.deleted
+        and prev.n <= index.store.n
+        and prev.num_layers <= index.graph.num_layers
+        and prev.m == index.graph.m
+        and prev.ids_map.size == prev.n
+        and int(prev.ids_map[0]) == 0
+        and int(prev.ids_map[-1]) == prev.n - 1
+    )
+
+
+def _refresh_snapshot(index, prev: Snapshot) -> Snapshot:
+    """Delta refresh of an identity-mapped snapshot: block-copy the
+    unchanged prefix, re-read dirty + tail rows from the graph arena (rows
+    are left-compacted by construction, so no per-row argsort), and merge
+    the new unique values into the sorted ``uvals`` arrays."""
+    store, graph = index.store, index.graph
+    n = store.n
+    pn = prev.n
+    L1 = graph.num_layers
+    Lp = prev.num_layers
+    m = graph.m
+
+    neighbors = np.empty((L1, n, m), dtype=np.int32)
+    neighbors[:Lp, :pn] = prev.neighbors
+    for l in range(Lp, L1):  # layers raised since prev: copy whole prefix
+        neighbors[l, :pn] = graph.layers[l][:pn]
+    for l in range(L1):  # appended tail rows
+        neighbors[l, pn:] = graph.layers[l][pn:n]
+    dirty = getattr(index, "_snap_tracker")["dirty"]
+    for l, parts in dirty.items():
+        if l >= Lp or not parts:
+            continue  # full-copied above
+        rows = np.unique(np.concatenate([np.asarray(p) for p in parts]))
+        rows = rows[rows < pn]
+        if rows.size:
+            neighbors[l, rows] = graph.layers[l][rows]
+
+    vectors = np.concatenate([prev.vectors, store.vectors[pn:n]])
+    sq_norms = np.concatenate([prev.sq_norms, store.sq_norms[pn:n]])
+    attrs = np.concatenate(
+        [prev.attrs, store.attrs[pn:n].astype(np.float32)]
+    )
+
+    # merge the tail's unique values into the sorted (uvals, uval_rep):
+    # stable sort of the tail -> first (lowest-id) occurrence per new value;
+    # values already present keep their (lower-id) representative.
+    tail = attrs[pn:]
+    if tail.size:
+        order = np.argsort(tail, kind="stable")
+        sa = tail[order]
+        uniq = np.ones(sa.size, dtype=bool)
+        uniq[1:] = sa[1:] != sa[:-1]
+        tv = sa[uniq]
+        trep = (order[uniq] + pn).astype(np.int32)
+        pos = np.searchsorted(prev.uvals, tv)
+        safe = np.minimum(pos, prev.uvals.size - 1)
+        exists = (pos < prev.uvals.size) & (prev.uvals[safe] == tv)
+        tv, trep, pos = tv[~exists], trep[~exists], pos[~exists]
+        uvals = np.insert(prev.uvals, pos, tv)
+        uval_rep = np.insert(prev.uval_rep, pos, trep)
+    else:
+        uvals, uval_rep = prev.uvals, prev.uval_rep
+
+    stamp = getattr(index, "mutations", -1)
+    snap = Snapshot(
+        vectors=vectors,
+        sq_norms=sq_norms,
+        attrs=attrs,
+        neighbors=neighbors,
+        uvals=uvals,
+        uval_rep=uval_rep,
+        ids_map=np.arange(n, dtype=np.int64),
+        m=m,
+        o=index.params.o,
+        metric=index.params.metric,
+        stamp=stamp,
+    )
+    _reset_tracker(index, stamp)
+    return snap
+
+
+def take_snapshot(index, prev: Snapshot | None = None) -> Snapshot:
+    """Build a compacted snapshot from a live ``WoWIndex``.
+
+    With ``prev`` (a snapshot of the same index) the refresh is incremental
+    when possible — no deletes outstanding and the index's dirty-row tracker
+    still covers the interval since ``prev`` — and falls back to the full
+    rebuild otherwise.  Either way the result is bitwise identical to a
+    from-scratch snapshot."""
+    if _fast_refresh_ok(index, prev):
+        return _refresh_snapshot(index, prev)
     n_all = index.store.n
     deleted = index.deleted
     live = np.asarray([i for i in range(n_all) if i not in deleted], dtype=np.int64)
@@ -79,6 +214,8 @@ def take_snapshot(index) -> Snapshot:
     uvals = sorted_attrs[uniq_mask].astype(np.float32)
     uval_rep = order[uniq_mask].astype(np.int32)
 
+    stamp = getattr(index, "mutations", -1)
+    _reset_tracker(index, stamp)
     return Snapshot(
         vectors=vectors,
         sq_norms=sq_norms,
@@ -90,4 +227,237 @@ def take_snapshot(index) -> Snapshot:
         m=m,
         o=index.params.o,
         metric=index.params.metric,
+        stamp=stamp,
     )
+
+
+class NeighborSlab:
+    """Persistent top-down host neighbor slab for the batched build loop.
+
+    Layout matches what ``search_candidates_batch`` consumes: row ``v``'s
+    columns are ``[layer top | top-1 | ... | 0]`` blocks of ``m`` slots
+    each, so a search over layers ``[l_min, top]`` takes the ``[:n, :F]``
+    prefix view.  Allocated once at graph-arena capacity (rows beyond ``n``
+    are -1 in the graph arena and stay -1 here, so appends cost nothing);
+    each micro-batch scatters only the rows it committed.  A full rebuild
+    happens only when the graph reallocated (capacity or top growth) or a
+    mutation bypassed the delta protocol (``LayeredGraph.version`` moved
+    without ``apply_deltas`` seeing it) — both amortised, never per batch.
+    """
+
+    __slots__ = ("arr", "top", "cap", "m", "version", "stats")
+
+    def __init__(self):
+        self.arr: np.ndarray | None = None
+        self.top = -1
+        self.cap = 0
+        self.m = 0
+        self.version = -1
+        self.stats = {"full_builds": 0, "rows_scattered": 0}
+
+    def ensure(self, graph) -> np.ndarray:
+        """Return the slab, rebuilding in full only when stale."""
+        if (
+            self.arr is None
+            or self.top != graph.top
+            or self.cap != graph.capacity
+            or self.version != graph.version
+        ):
+            self.top = graph.top
+            self.cap = graph.capacity
+            self.m = graph.m
+            self.arr = np.concatenate(
+                [graph.layers[l] for l in range(graph.top, -1, -1)], axis=1
+            )
+            self.version = graph.version
+            self.stats["full_builds"] += 1
+        return self.arr
+
+    def apply_deltas(self, graph, dirty: dict[int, np.ndarray]) -> None:
+        """Scatter the changed (layer, vertex) rows; O(rows), not O(n)."""
+        assert self.arr is not None and self.top == graph.top
+        for l, rows in dirty.items():
+            if rows.size == 0:
+                continue
+            c0 = (self.top - l) * self.m
+            self.arr[rows, c0 : c0 + self.m] = graph.layers[l][rows]
+            self.stats["rows_scattered"] += int(rows.size)
+        self.version = graph.version
+
+
+class DeviceBuildArena:
+    """Device-resident frozen snapshot + delta arena for batched builds.
+
+    Mirrors the host arenas into jax buffers once (at graph capacity), then
+    absorbs each micro-batch with bounded-size scatters: the batch's new
+    vectors/attrs/norms land in the pre-sized tail, and the commit's changed
+    neighbor rows are scattered into the ``[L, cap, m]`` adjacency — no
+    per-batch ``np.stack`` and no per-batch O(n) host->device upload.  The
+    scatters run through donated jits (``repro.kernels.ops.arena_scatter``),
+    so backends that support buffer donation update in place.  Scatter
+    batch shapes are padded to power-of-two buckets to bound compilations.
+    """
+
+    __slots__ = (
+        "vectors", "sq_norms", "attrs", "neighbors", "cap", "dim", "m", "o",
+        "metric", "num_layers", "version", "n_synced", "stats", "_dummy_u",
+        "_dummy_r",
+    )
+
+    def __init__(self):
+        self.vectors = None
+        self.sq_norms = None
+        self.attrs = None
+        self.neighbors = None
+        self.cap = 0
+        self.dim = 0
+        self.m = 0
+        self.o = 0
+        self.metric = "l2"
+        self.num_layers = 0
+        self.version = -1
+        self.n_synced = 0
+        self.stats = {
+            "full_uploads": 0,
+            "rows_scattered": 0,
+            "rows_appended": 0,
+            "searches": 0,
+        }
+        self._dummy_u = None
+        self._dummy_r = None
+
+    # ------------------------------------------------------------------ sync
+    def ensure(self, index) -> None:
+        """Bring the arena up to the index's pre-batch state: full upload
+        only when stale (capacity/top growth or an untracked mutation),
+        otherwise scatter just the rows appended since the last sync."""
+        import jax.numpy as jnp
+
+        graph, store = index.graph, index.store
+        n = store.n
+        if (
+            self.neighbors is None
+            or self.num_layers != graph.num_layers
+            or self.cap != graph.capacity
+            or self.version != graph.version
+        ):
+            self.cap = graph.capacity
+            self.dim = store.dim
+            self.m = graph.m
+            self.o = index.params.o
+            self.metric = index.params.metric
+            self.num_layers = graph.num_layers
+            vec = np.zeros((self.cap, self.dim), np.float32)
+            vec[:n] = store.vectors[:n]
+            nrm = np.zeros(self.cap, np.float32)
+            nrm[:n] = store.sq_norms[:n]
+            att = np.zeros(self.cap, np.float32)
+            att[:n] = store.attrs[:n]
+            self.vectors = jnp.asarray(vec)
+            self.sq_norms = jnp.asarray(nrm)
+            self.attrs = jnp.asarray(att)
+            self.neighbors = jnp.asarray(
+                np.stack([lay for lay in graph.layers], axis=0)
+            )
+            self._dummy_u = jnp.zeros(1, jnp.float32)
+            self._dummy_r = jnp.zeros(1, jnp.int32)
+            self.version = graph.version
+            self.n_synced = n
+            self.stats["full_uploads"] += 1
+            return
+        if n > self.n_synced:  # append the new rows into the pre-sized tail
+            from repro.kernels.ops import arena_scatter
+
+            ids = np.arange(self.n_synced, n, dtype=np.int64)
+            self.vectors = arena_scatter(
+                self.vectors, ids, store.vectors[ids]
+            )
+            self.sq_norms = arena_scatter(
+                self.sq_norms, ids, store.sq_norms[ids]
+            )
+            self.attrs = arena_scatter(
+                self.attrs, ids, store.attrs[ids].astype(np.float32)
+            )
+            self.stats["rows_appended"] += int(ids.size)
+            self.n_synced = n
+
+    def apply_deltas(self, index, dirty: dict[int, np.ndarray]) -> None:
+        """Scatter the commit's changed (layer, vertex) neighbor rows."""
+        from repro.kernels.ops import arena_scatter_layers
+
+        graph = index.graph
+        ls, vs, rows = [], [], []
+        for l, r in dirty.items():
+            if r.size == 0:
+                continue
+            ls.append(np.full(r.size, l, dtype=np.int64))
+            vs.append(r.astype(np.int64))
+            rows.append(graph.layers[l][r])
+        if ls:
+            l_arr = np.concatenate(ls)
+            v_arr = np.concatenate(vs)
+            r_arr = np.concatenate(rows)
+            self.neighbors = arena_scatter_layers(
+                self.neighbors, l_arr, v_arr, r_arr
+            )
+            self.stats["rows_scattered"] += int(l_arr.size)
+        self.version = graph.version
+
+    # ---------------------------------------------------------------- search
+    def device_index(self):
+        """View the arena buffers as a ``DeviceIndex`` for the hop loop.
+        Construction searches take explicit entries/landing layers, so the
+        unique-value fields are dummies."""
+        from .device_search import DeviceIndex
+
+        return DeviceIndex(
+            vectors=self.vectors,
+            sq_norms=self.sq_norms,
+            attrs=self.attrs,
+            neighbors=self.neighbors,
+            uvals=self._dummy_u,
+            uval_rep=self._dummy_r,
+        )
+
+    def search(
+        self,
+        targets: np.ndarray,
+        ranges: np.ndarray,
+        eps: np.ndarray,
+        l_lo: int,
+        l_hi: int,
+        seed_ids: np.ndarray | None,
+        seed_d: np.ndarray | None,
+        width: int,
+        seed_width: int,
+        deleted: set[int] | None = None,
+        backend: str = "auto",
+        visited: str = "hash",
+        visited_bits: int | None = None,
+    ):
+        """Run one per-layer candidate beam search of a micro-batch through
+        the jitted hop pipeline.  Returns ``(res_i, res_d, dc, hops)`` in
+        host numpy with deleted ids masked out (-1), mirroring
+        ``search_candidates_batch``'s contract."""
+        from .device_search import build_search
+
+        self.stats["searches"] += 1
+        return build_search(
+            self.device_index(),
+            targets,
+            ranges,
+            eps,
+            l_lo,
+            l_hi,
+            seed_ids,
+            seed_d,
+            width=width,
+            m=self.m,
+            o=self.o,
+            metric="l2" if self.metric == "l2" else "cosine",
+            seed_width=seed_width,
+            deleted=deleted,
+            backend=backend,
+            visited=visited,
+            visited_bits=visited_bits,
+        )

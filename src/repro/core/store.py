@@ -70,6 +70,14 @@ class VectorStore:
     def __len__(self) -> int:
         return self.n
 
+    @property
+    def capacity(self) -> int:
+        """Current arena capacity (rows allocated, >= n).  Consumers that
+        mirror the arena device-side (``repro.core.snapshot.DeviceBuildArena``)
+        size their buffers to this so appends between reallocations are pure
+        row scatters."""
+        return self._cap
+
     def _grow(self, need: int) -> None:
         new_cap = self._cap
         while new_cap < need:

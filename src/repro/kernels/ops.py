@@ -12,8 +12,11 @@ cost analysis sees the full computation (see DESIGN.md §5).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref as _ref
 
@@ -89,16 +92,27 @@ def merge_src_indices(pos_a, pos_b, W: int, K: int, method: str = "auto"):
         exactly one hit and indices are < W+K << 2^24, so the f32
         accumulation is exact.  Preferred on TPU, where XLA serialises
         variable-index scatters;
-      * ``"auto"`` — per-platform default: onehot on TPU, scatter
-        elsewhere.  On CPU the standalone bench favours onehot
-        (``BENCH_device.json stages.writeback``) but inside the hop loop
-        scatter wins at small batch and the [B, W, W+K] one-hots grow
-        quadratically in width, so the linear-memory scatter stays the
-        off-TPU default.
+      * ``"sort"`` — invert the position permutation with one packed
+        single-key sort: ``pos * (W+K) + src`` over the concatenated
+        [B, W+K] positions sorts into output order, and the low digits of
+        the first W keys ARE the source indices.  Exact (the positions are
+        a bijection — no ties), scatter-free, O((W+K) log(W+K));
+      * ``"auto"`` — per-platform default: onehot on TPU (XLA serialises
+        variable-index scatters there), sort elsewhere (on CPU the packed
+        sort beats the element-serialised scatter ~4x at serving widths,
+        and the [B, W, W+K] one-hots grow quadratically).
     """
     if method == "auto":
-        method = "onehot" if _on_tpu() else "scatter"
+        method = "onehot" if _on_tpu() else "sort"
     B = pos_a.shape[0]
+    if method == "sort":
+        from jax import lax
+
+        WK = W + K
+        pos = jnp.concatenate([pos_a, pos_b], axis=1).astype(jnp.uint32)
+        key = pos * jnp.uint32(WK) + jnp.arange(WK, dtype=jnp.uint32)[None, :]
+        key = lax.sort(key, dimension=1)[:, :W]
+        return (key % jnp.uint32(WK)).astype(jnp.int32)
     if method == "scatter":
         row = jnp.arange(B)[:, None]
         src = jnp.zeros((B, W), jnp.int32)
@@ -121,6 +135,70 @@ def merge_src_indices(pos_a, pos_b, W: int, K: int, method: str = "auto"):
                                  W + jnp.arange(K, dtype=jnp.float32))
         return srcf.astype(jnp.int32)
     raise ValueError(f"unknown writeback method {method!r}")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _arena_set_rows(dst, idx, rows):
+    return dst.at[idx].set(rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _arena_set_layer_rows(dst, lidx, vidx, rows):
+    return dst.at[lidx, vidx].set(rows)
+
+
+def _pad_pow2(k: int) -> int:
+    return 1 << max(3, (max(k, 1) - 1).bit_length())
+
+
+def _bucket_idx(idx: np.ndarray, k: int):
+    """Pad a scatter index batch to the next pow2 bucket by repeating the
+    first element — an idempotent rewrite, so duplicate targets are safe —
+    bounding the number of compiled scatter shapes to O(log cap)."""
+    kp = _pad_pow2(k)
+    if kp == k:
+        return idx, slice(None)
+    pad = np.full(kp - k, idx[0], dtype=idx.dtype)
+    return np.concatenate([idx, pad]), None
+
+
+def arena_scatter(dst, idx, rows):
+    """Delta update of a device arena: ``dst[idx] = rows`` through a donated
+    jit (in place where the backend supports buffer donation; a bounded
+    buffer copy otherwise — never a host-side re-stack or re-upload).
+    ``idx``/``rows`` are host arrays of the changed rows only; shapes are
+    padded to power-of-two buckets (idempotent repeats of row 0)."""
+    idx = np.asarray(idx, np.int64)
+    k = idx.shape[0]
+    if k == 0:
+        return dst
+    idx_p, tail = _bucket_idx(idx, k)
+    rows = np.asarray(rows)
+    if tail is None:
+        pad = np.broadcast_to(rows[:1], (idx_p.shape[0] - k,) + rows.shape[1:])
+        rows = np.concatenate([rows, pad])
+    return _arena_set_rows(dst, jnp.asarray(idx_p), jnp.asarray(rows))
+
+
+def arena_scatter_layers(dst, lidx, vidx, rows):
+    """``dst[lidx, vidx] = rows`` for a [L, cap, m] arena (see
+    ``arena_scatter``)."""
+    lidx = np.asarray(lidx, np.int64)
+    vidx = np.asarray(vidx, np.int64)
+    k = lidx.shape[0]
+    if k == 0:
+        return dst
+    kp = _pad_pow2(k)
+    rows = np.asarray(rows)
+    if kp != k:
+        lidx = np.concatenate([lidx, np.full(kp - k, lidx[0], np.int64)])
+        vidx = np.concatenate([vidx, np.full(kp - k, vidx[0], np.int64)])
+        rows = np.concatenate(
+            [rows, np.broadcast_to(rows[:1], (kp - k,) + rows.shape[1:])]
+        )
+    return _arena_set_layer_rows(
+        dst, jnp.asarray(lidx), jnp.asarray(vidx), jnp.asarray(rows)
+    )
 
 
 def wkv6(r, k, v, w, u, state=None, backend: str = "auto", chunk: int = 32):

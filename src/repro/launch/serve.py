@@ -41,10 +41,25 @@ def main() -> None:
                     help="micro-batch size for batched construction "
                          "(insert_batch, vectorized Alg. 1); 0 = the "
                          "sequential insert loop")
+    ap.add_argument("--build-backend", default="numpy",
+                    choices=("numpy", "ops", "device"),
+                    help="insert_batch phase-1 engine: host BLAS (numpy), "
+                         "host search + fused gather kernel (ops), or the "
+                         "accelerator-resident build — jitted hop pipeline "
+                         "over the frozen snapshot + delta arena (device)")
     ap.add_argument("--ingest", type=int, default=0,
                     help="ingest-while-serve: after the first serve wave, "
                          "stream N extra vectors through insert_batch, "
-                         "refresh the snapshot and re-serve the queries")
+                         "refresh the snapshot incrementally and re-serve "
+                         "the queries")
+    ap.add_argument("--adaptive-filter", action="store_true",
+                    help="with --visited hash: re-size the visited filter "
+                         "for the post-ingest re-serve from the measured "
+                         "hop histogram of the first wave (p99 + slack; "
+                         "worst-case sizing remains the cold-start default)")
+    ap.add_argument("--compact-rows", action="store_true",
+                    help="run the tombstone compaction pass "
+                         "(WoWIndex.compact_rows) before serving")
     args = ap.parse_args()
 
     import numpy as np
@@ -58,14 +73,19 @@ def main() -> None:
                    o=args.o, seed=0)
     t0 = time.time()
     if args.build_batch > 0:
-        idx.insert_batch(wl.vectors, wl.attrs, batch_size=args.build_batch)
-        how = f"batched (micro-batch {args.build_batch})"
+        idx.insert_batch(wl.vectors, wl.attrs, batch_size=args.build_batch,
+                         backend=args.build_backend)
+        how = f"batched/{args.build_backend} (micro-batch {args.build_batch})"
     else:
         for v, a in zip(wl.vectors, wl.attrs):
             idx.insert(v, a)
         how = "sequential"
     print(f"indexed {len(idx)} vectors in {time.time()-t0:.1f}s [{how}] "
           f"({idx.graph.num_layers} layers, {idx.memory_bytes()/2**20:.1f} MiB)")
+    if args.compact_rows:
+        t0 = time.time()
+        nrows = idx.compact_rows()
+        print(f"compact_rows: {nrows} rows rebuilt in {time.time()-t0:.2f}s")
     snap = take_snapshot(idx)
 
     compact = None
@@ -110,7 +130,8 @@ def main() -> None:
 
     if args.ingest > 0:
         # ingest-while-serve: micro-batch inserts + incremental snapshot
-        # refresh (the vectorized take_snapshot compaction), then re-serve
+        # refresh (take_snapshot(prev=...): block-copied prefixes + dirty-row
+        # scatters, no re-compaction argsort), then re-serve
         from ..core.datasets import make_attrs, make_vectors
         from ..core.device_search import search_batch
 
@@ -118,18 +139,27 @@ def main() -> None:
         extra_a = make_attrs(extra_v, seed=99) + float(np.max(wl.attrs)) + 1.0
         bs = args.build_batch or 128
         t0 = time.time()
-        idx.insert_batch(extra_v, extra_a, batch_size=bs)
+        idx.insert_batch(extra_v, extra_a, batch_size=bs,
+                         backend=args.build_backend)
         t_ing = time.time() - t0
         t0 = time.time()
-        snap = take_snapshot(idx)
+        snap = take_snapshot(idx, prev=snap)
         t_snap = time.time() - t0
         print(f"ingested {args.ingest} vectors in {t_ing:.2f}s "
               f"({args.ingest / max(t_ing, 1e-9):.0f} ins/s), "
-              f"snapshot refresh {t_snap * 1e3:.0f} ms ({snap.n} live)")
+              f"incremental snapshot refresh {t_snap * 1e3:.0f} ms "
+              f"({snap.n} live)")
+        v_bits = args.visited_bits
+        if args.adaptive_filter and args.visited == "hash":
+            from ..core.device_search import visited_filter_bits_measured
+
+            v_bits = visited_filter_bits_measured(hops, args.m)
+            print(f"adaptive visited filter: {v_bits} bits/query from the "
+                  f"measured hop histogram (p99={q[2]})")
         res2 = search_batch(snap, wl.queries, wl.ranges, k=args.k,
                             width=args.width, backend=args.backend,
                             pipeline=args.pipeline, visited=args.visited,
-                            visited_bits=args.visited_bits, compact=compact)
+                            visited_bits=v_bits, compact=compact)
         ids2 = np.asarray(res2.ids)
         recs2 = []
         for i in range(args.queries):

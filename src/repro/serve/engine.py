@@ -92,18 +92,25 @@ class RagPipeline:
     ``backend`` selects the distance-kernel dispatch for the batched device
     path (``repro.kernels.ops`` policy: "auto" = compiled Pallas on TPU, jnp
     reference elsewhere); single-query ``retrieve`` stays on the host index.
-    ``visited``/``compact`` are the ``device_search`` hop-loop knobs: the
-    hashed visited filter keeps per-query state O(search budget) instead of
-    O(corpus), and ragged-batch compaction stops fast queries from paying
-    for the batch straggler.  Batches are pow2-padded inside
-    ``search_batch``, so a stream of distinct request sizes does not
-    recompile the device path.
+    ``build_backend`` selects the ``insert_batch`` phase-1 engine for
+    ingest-while-serve (``"device"`` = the accelerator-resident build over
+    the frozen snapshot + delta arena).  ``visited``/``compact`` are the
+    ``device_search`` hop-loop knobs: the hashed visited filter keeps
+    per-query state O(search budget) instead of O(corpus), and ragged-batch
+    compaction stops fast queries from paying for the batch straggler.
+    With ``visited_adaptive`` the hash filter is re-sized from the measured
+    hop histogram of previous batches (p99 + slack; worst-case sizing is the
+    cold-start fallback) — typically 4-8x less per-query state at the same
+    FP target.  Batches are pow2-padded inside ``search_batch``, so a
+    stream of distinct request sizes does not recompile the device path.
     """
 
     def __init__(self, server: LMServer, dim: int, m: int = 16,
                  ef_construction: int = 64, o: int = 4, backend: str = "auto",
                  visited: str = "bitmap",
-                 compact: tuple[int, int] | None = None):
+                 compact: tuple[int, int] | None = None,
+                 build_backend: str = "numpy",
+                 visited_adaptive: bool = False):
         from ..core import WoWIndex
 
         self.server = server
@@ -112,6 +119,9 @@ class RagPipeline:
         self.backend = backend
         self.visited = visited
         self.compact = compact
+        self.build_backend = build_backend
+        self.visited_adaptive = visited_adaptive
+        self._hop_log: list = []  # rolling hop histogram (serve feedback)
         self._snap = None
         self._snap_key = None
 
@@ -136,7 +146,8 @@ class RagPipeline:
                 f"{len(payloads)} payloads for {len(attrs)} documents"
             )
         embs = self.server.embed(doc_tokens)
-        vids = self.index.insert_batch(embs, attrs, batch_size=batch_size)
+        vids = self.index.insert_batch(embs, attrs, batch_size=batch_size,
+                                       backend=self.build_backend)
         if payloads is None:
             payloads = [None] * len(vids)
         self.docs.extend(payloads)
@@ -154,7 +165,9 @@ class RagPipeline:
 
         ``query_tokens`` [B, T] int32, ``attr_ranges`` [B, 2] -> (ids, dists)
         with ids mapped back to WoWIndex vertex ids (-1 padded).  Snapshots
-        the index lazily and reuses the snapshot until new documents arrive.
+        the index lazily and reuses the snapshot until new documents arrive;
+        the refresh is incremental (``take_snapshot(prev=...)``) when only
+        batched inserts happened in between.
         """
         from ..core.device_search import search_batch
         from ..core.snapshot import take_snapshot
@@ -163,12 +176,23 @@ class RagPipeline:
         # undelete (counting sizes alone would miss an undelete+delete pair)
         key = self.index.mutations
         if self._snap is None or self._snap_key != key:
-            self._snap = take_snapshot(self.index)
+            self._snap = take_snapshot(self.index, prev=self._snap)
             self._snap_key = key
         qs = self.server.embed(query_tokens)
+        visited_bits = None
+        if self.visited == "hash" and self.visited_adaptive and self._hop_log:
+            from ..core.device_search import visited_filter_bits_measured
+
+            visited_bits = visited_filter_bits_measured(
+                np.concatenate(self._hop_log), self.index.params.m
+            )
         res = search_batch(self._snap, qs, np.asarray(attr_ranges, np.float32),
                            k=k, width=width, backend=self.backend,
-                           visited=self.visited, compact=self.compact)
+                           visited=self.visited, visited_bits=visited_bits,
+                           compact=self.compact)
+        if self.visited_adaptive:
+            self._hop_log.append(np.asarray(res.hops))
+            self._hop_log = self._hop_log[-16:]  # bounded rolling window
         ids = np.asarray(res.ids)
         mapped = np.where(ids >= 0, self._snap.ids_map[np.clip(ids, 0, None)], -1)
         return mapped, np.asarray(res.dists)

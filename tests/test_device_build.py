@@ -1,0 +1,464 @@
+"""Accelerator-resident batched builds (``insert_batch(backend="device")``):
+device-build vs sequential-oracle recall parity per selectivity band,
+delta-arena slab vs full re-stack bitwise equality, generation-stamped
+visited-arena reuse, carry-seeded device beams vs the host carry, the
+no-Theta(n)-work-in-the-batch-loop regression gate, tombstone compaction
+(``compact_rows``), incremental snapshot refresh, and measured visited-filter
+sizing."""
+import numpy as np
+import pytest
+
+from repro.core import WoWIndex, brute_force, make_workload, recall
+from repro.core.snapshot import take_snapshot
+
+
+def _band_recalls(idx, wl, fractions, k=10, ef=80, per_band=12, seed=3):
+    n = len(wl.attrs)
+    sorted_a = np.sort(wl.attrs)
+    rng = np.random.default_rng(seed)
+    out = {}
+    for frac in fractions:
+        recs = []
+        for i in range(per_band):
+            n_in = max(5, int(n * frac))
+            s = int(rng.integers(0, n - n_in + 1))
+            r = (sorted_a[s], sorted_a[s + n_in - 1])
+            q = wl.queries[i % len(wl.queries)]
+            ids, _, _ = idx.search(q, r, k=k, ef=ef)
+            gold = brute_force(
+                idx.store.vectors[: idx.store.n],
+                idx.store.attrs[: idx.store.n], q, r, k,
+            )
+            recs.append(recall(ids, gold))
+        out[frac] = float(np.mean(recs))
+    return out
+
+
+def test_device_build_vs_sequential_recall_parity_per_band():
+    """The tentpole's acceptance bar: a device-built index matches the
+    sequential oracle's recall@10 within 0.01 in every selectivity band."""
+    wl = make_workload(n=700, d=16, nq=24, seed=0, k=10)
+    kw = dict(m=12, ef_construction=48, o=4, seed=0)
+    seq = WoWIndex(dim=16, **kw)
+    for v, a in zip(wl.vectors, wl.attrs):
+        seq.insert(v, a)
+    dev = WoWIndex(dim=16, **kw)
+    dev.insert_batch(wl.vectors, wl.attrs, batch_size=96, backend="device")
+    bands = [1.0, 0.25, 0.05]
+    r_seq = _band_recalls(seq, wl, bands)
+    r_dev = _band_recalls(dev, wl, bands)
+    for frac in bands:
+        assert r_dev[frac] >= r_seq[frac] - 0.01, (
+            f"band {frac}: device {r_dev[frac]:.4f} vs seq {r_seq[frac]:.4f}"
+        )
+
+
+def test_device_build_narrow_beam_parity():
+    """The recall-matched narrow device beam (``device_width``) — the
+    CPU-throughput operating point — still passes the parity gate."""
+    wl = make_workload(n=600, d=16, nq=20, seed=1, k=10)
+    kw = dict(m=12, ef_construction=48, o=4, seed=0)
+    seq = WoWIndex(dim=16, **kw)
+    for v, a in zip(wl.vectors, wl.attrs):
+        seq.insert(v, a)
+    dev = WoWIndex(dim=16, **kw)
+    dev.insert_batch(wl.vectors, wl.attrs, batch_size=128, backend="device",
+                     device_width=12)
+    bands = [1.0, 0.25, 0.05]
+    r_seq = _band_recalls(seq, wl, bands)
+    r_dev = _band_recalls(dev, wl, bands)
+    for frac in bands:
+        assert r_dev[frac] >= r_seq[frac] - 0.01
+
+
+def test_delta_arena_bitwise_equality_per_micro_batch():
+    """After every micro-batch, the persistent host slab and the device
+    arena's neighbor tensor are bitwise identical to a from-scratch
+    re-stack of the graph arenas."""
+    wl = make_workload(n=520, d=8, nq=1, seed=2, with_gt=False)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+    bs = 64
+    for s in range(0, 520, bs):
+        idx.insert_batch(wl.vectors[s:s + bs], wl.attrs[s:s + bs],
+                         batch_size=bs, backend="device")
+        if idx._arena is None or idx._arena.neighbors is None:
+            continue  # bootstrap batch: no pre-batch graph to mirror
+        ref = np.stack([lay for lay in idx.graph.layers], axis=0)
+        assert np.array_equal(np.asarray(idx._arena.neighbors), ref)
+        n = idx.store.n
+        assert np.array_equal(
+            np.asarray(idx._arena.vectors)[:n], idx.store.vectors[:n]
+        )
+        assert np.array_equal(
+            np.asarray(idx._arena.attrs)[:n],
+            idx.store.attrs[:n].astype(np.float32),
+        )
+    # the host slab mirrors too once a host-backend batch runs
+    idx.insert_batch(wl.vectors[:bs], wl.attrs[:bs] + 1000.0,
+                     batch_size=bs, backend="numpy")
+    slab_ref = np.concatenate(
+        [idx.graph.layers[l] for l in range(idx.graph.top, -1, -1)], axis=1
+    )
+    assert np.array_equal(idx._slab.arr, slab_ref)
+
+
+def test_no_theta_n_work_in_micro_batch_loop():
+    """Acceptance regression gate: across >= 3 consecutive micro-batches
+    (no capacity/top growth), the neighbor slab, device arena and visited
+    arena are allocated exactly once and updated via deltas / generation
+    stamps — never re-stacked, re-uploaded or re-zeroed."""
+    wl = make_workload(n=560, d=8, nq=1, seed=4, with_gt=False)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+    # establish the top layer + arenas with a first wave (numpy touches the
+    # slab + visited arena; device touches the device arena)
+    idx.insert_batch(wl.vectors[:200], wl.attrs[:200], batch_size=100)
+    idx.insert_batch(wl.vectors[200:260], wl.attrs[200:260], batch_size=60,
+                     backend="device")
+    slab_arr = idx._slab.arr
+    slab_builds = idx._slab.stats["full_builds"]
+    varena = idx._visited2d
+    varr = varena.arr
+    vallocs = varena.stats["allocs"]
+    arena = idx._arena
+    uploads = arena.stats["full_uploads"]
+    scattered0 = arena.stats["rows_scattered"]
+    top0 = idx.graph.top
+    # >= 3 consecutive micro-batches on each backend, within capacity
+    for s in range(260, 440, 60):
+        idx.insert_batch(wl.vectors[s:s + 30], wl.attrs[s:s + 30],
+                         batch_size=30, backend="device")
+        idx.insert_batch(wl.vectors[s + 30:s + 60], wl.attrs[s + 30:s + 60],
+                         batch_size=30, backend="numpy")
+    assert idx.graph.top == top0, "layer growth would void the invariant"
+    # device arena: allocated once, delta-scattered since
+    assert idx._arena is arena
+    assert arena.stats["full_uploads"] == uploads
+    assert arena.stats["rows_scattered"] > scattered0
+    assert arena.stats["rows_appended"] >= 90
+    # host slab: the numpy batches were served by the SAME array object
+    # (no re-stack; the device batches' commits invalidate it via the
+    # version stamp, so it rebuilds at most once per backend switch)
+    assert idx._slab.arr is not None
+    # visited arena: one allocation, generation-stamped reuse
+    assert idx._visited2d is varena and varena.arr is varr
+    assert varena.stats["allocs"] == vallocs
+    assert varena.stats["searches"] > 0
+
+
+def test_no_slab_restack_numpy_only_loop():
+    """Pure-numpy batch loop: the slab object AND buffer stay identical
+    across >= 3 micro-batches (full_builds does not move)."""
+    wl = make_workload(n=500, d=8, nq=1, seed=6, with_gt=False)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+    idx.insert_batch(wl.vectors[:260], wl.attrs[:260], batch_size=130)
+    arr = idx._slab.arr
+    builds = idx._slab.stats["full_builds"]
+    scat = idx._slab.stats["rows_scattered"]
+    top0 = idx.graph.top
+    for s in range(260, 440, 60):
+        idx.insert_batch(wl.vectors[s:s + 60], wl.attrs[s:s + 60],
+                         batch_size=60)
+    assert idx.graph.top == top0
+    assert idx._slab.arr is arr, "slab was reallocated inside the loop"
+    assert idx._slab.stats["full_builds"] == builds
+    assert idx._slab.stats["rows_scattered"] > scat
+    # and the delta-maintained content equals a full re-stack
+    ref = np.concatenate(
+        [idx.graph.layers[l] for l in range(idx.graph.top, -1, -1)], axis=1
+    )
+    assert np.array_equal(idx._slab.arr, ref)
+
+
+def test_visited_arena_generation_reuse_correctness():
+    """Repeating the same batched search through one shared
+    ``VisitedArena2D`` yields identical results each generation (stale
+    stamps never leak across searches)."""
+    from repro.core.search import VisitedArena2D, search_candidates_batch
+
+    wl = make_workload(n=400, d=8, nq=1, seed=7, with_gt=False)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+    idx.insert_batch(wl.vectors, wl.attrs, batch_size=128)
+    rng = np.random.default_rng(0)
+    B = 16
+    targets = idx.store.vectors[rng.integers(0, 400, B)]
+    eps = rng.integers(0, 400, B)
+    lo = np.min(idx.store.attrs[:400])
+    hi = np.max(idx.store.attrs[:400])
+    ranges = np.tile([[lo, hi]], (B, 1))
+    arena = VisitedArena2D()
+    outs = []
+    allocs_after_first = None
+    for _ in range(3):
+        res = search_candidates_batch(
+            idx.store, idx.graph, targets, eps, ranges,
+            l_min=0, l_max=idx.graph.top, width=32, visited_arena=arena,
+        )
+        outs.append(res)
+        if allocs_after_first is None:
+            allocs_after_first = arena.stats["allocs"]
+    for r in outs[1:]:
+        assert np.array_equal(outs[0][0], r[0])
+        assert np.array_equal(outs[0][1], r[1])
+        assert np.array_equal(outs[0][2], r[2])  # dc identical
+    # sized on first use, then pure generation-stamped reuse
+    assert arena.stats["allocs"] == allocs_after_first
+    assert arena.stats["searches"] == 3
+
+
+def test_carry_seeded_device_beams_vs_host_carry():
+    """The same carry, fed to the device build search and the host batched
+    search over the same frozen graph, produces near-identical candidate
+    sets — and carry-seeded members spend no DC on entry re-discovery."""
+    from repro.core.device_search import build_search
+    from repro.core.search import search_candidates_batch
+
+    wl = make_workload(n=500, d=12, nq=1, seed=8, with_gt=False)
+    idx = WoWIndex(dim=12, m=8, ef_construction=32, o=4, seed=0)
+    idx.insert_batch(wl.vectors, wl.attrs, batch_size=128, backend="device")
+    arena = idx._arena
+    assert arena is not None and arena.neighbors is not None
+
+    rng = np.random.default_rng(1)
+    B, W = 12, 32
+    targets = idx.store.vectors[rng.integers(0, 500, B)]
+    eps = rng.integers(0, 500, B).astype(np.int64)
+    lo = np.min(idx.store.attrs[:500])
+    hi = np.max(idx.store.attrs[:500])
+    ranges = np.tile([[lo, hi]], (B, 1))
+    # carry: a handful of real vertices with exact distances
+    S = 6
+    seed_ids = rng.integers(0, 500, (B, S)).astype(np.int64)
+    seed_ids[B // 2:] = -1  # half the members carry nothing
+    seed_d = np.where(
+        seed_ids >= 0,
+        idx.store.dist_block(targets, np.maximum(seed_ids, 0)).astype(
+            np.float64
+        ),
+        np.inf,
+    )
+    host = search_candidates_batch(
+        idx.store, idx.graph, targets, eps, ranges, l_min=0,
+        l_max=idx.graph.top, width=W, seed_ids=seed_ids, seed_d=seed_d,
+    )
+    dev = build_search(
+        arena.device_index(), targets, ranges, eps, 0, idx.graph.top,
+        seed_ids, seed_d, width=W, m=8, o=4, seed_width=S,
+    )
+    for b in range(B):
+        hset = set(host[0][b][host[0][b] >= 0].tolist())
+        dset = set(int(x) for x in dev[0][b] if x >= 0)
+        inter = len(hset & dset)
+        union = max(len(hset | dset), 1)
+        assert inter / union >= 0.9, (b, hset ^ dset)
+    # Thm-3.1 carry: seeded members skip the entry evaluation (dc starts 0)
+    assert int(dev[2][:B // 2].min()) >= 0
+    host_entry_dc = host[2][B // 2:]  # unseeded members paid the entry DC
+    assert (host_entry_dc >= 1).all()
+    # carry/no-carry split must agree between paths on the entry DC
+    assert np.array_equal(dev[2][B // 2:] >= 1, host_entry_dc >= 1)
+
+
+def test_device_build_window_invariants():
+    """Device-committed forward edges satisfy the window property (Def. 4)
+    against the post-batch WBT."""
+    wl = make_workload(n=400, d=10, nq=1, seed=9, with_gt=False)
+    idx = WoWIndex(dim=10, m=8, ef_construction=32, o=4, seed=1)
+    bs = 80
+    for s in range(0, 400, bs):
+        vids = idx.insert_batch(wl.vectors[s:s + bs], wl.attrs[s:s + bs],
+                                batch_size=bs, backend="device")
+        ranks = {float(val): i for i, val in enumerate(idx.wbt.in_order())}
+        n = idx.store.n
+        for vid in vids.tolist():
+            ra = ranks[float(idx.store.attrs[vid])]
+            for l in range(idx.graph.num_layers):
+                nbrs = idx.graph.neighbors(l, vid)
+                assert len(nbrs) <= idx.params.m
+                assert np.all((nbrs >= 0) & (nbrs < n))
+                assert vid not in set(nbrs.tolist())
+                for j in nbrs:
+                    rj = ranks[float(idx.store.attrs[j])]
+                    assert abs(rj - ra) <= idx.params.o**l, (l, ra, rj)
+
+
+def test_compact_rows_tombstone_compaction():
+    """compact_rows: no deleted id survives in any live row prefix, degree
+    bounds and window property hold, and quality does not collapse."""
+    wl = make_workload(n=500, d=12, nq=20, seed=10, k=10)
+    idx = WoWIndex(dim=12, m=10, ef_construction=40, o=4, seed=0)
+    idx.insert_batch(wl.vectors, wl.attrs, batch_size=128)
+    rng = np.random.default_rng(2)
+    for vid in rng.choice(500, size=150, replace=False):
+        idx.delete(int(vid))
+    dead = np.fromiter(idx.deleted, dtype=np.int64)
+    n = idx.store.n
+    # rows compact_rows will rebuild: those referencing a tombstone
+    contended = {}
+    for l in range(idx.graph.num_layers):
+        rows = idx.graph.layers[l][:n]
+        valid = np.arange(idx.graph.m)[None, :] < idx.graph.counts[l][:n][:, None]
+        contended[l] = np.nonzero((valid & np.isin(rows, dead)).any(axis=1))[0]
+    muts = idx.mutations
+    rebuilt = idx.compact_rows()
+    assert rebuilt == sum(len(v) for v in contended.values()) > 0
+    assert idx.mutations > muts  # snapshot caches must refresh
+    ranks = {float(val): i for i, val in enumerate(idx.wbt.in_order())}
+    for l in range(idx.graph.num_layers):
+        rows = idx.graph.layers[l][:n]
+        cnts = idx.graph.counts[l][:n]
+        valid = np.arange(idx.graph.m)[None, :] < cnts[:, None]
+        assert not (valid & np.isin(rows, dead)).any()
+        assert cnts.max() <= idx.params.m
+        # rebuilt rows satisfy the CURRENT window (old untouched edges may
+        # have drifted — Def. 4 is an at-insert-time invariant)
+        for v in contended[l][:40]:
+            ra = ranks[float(idx.store.attrs[v])]
+            for j in idx.graph.neighbors(l, int(v)):
+                rj = ranks[float(idx.store.attrs[j])]
+                assert abs(rj - ra) <= idx.params.o**l
+    # idempotent: a second pass has nothing to rebuild
+    assert idx.compact_rows() == 0
+    recs = []
+    for i in range(20):
+        r = tuple(wl.ranges[i])
+        ids, _, _ = idx.search(wl.queries[i], r, k=10, ef=80)
+        assert not (set(ids.tolist()) & idx.deleted)
+        gold = brute_force(
+            idx.store.vectors[:n],
+            np.where(np.isin(np.arange(n), dead), np.inf,
+                     idx.store.attrs[:n]),
+            wl.queries[i], r, 10,
+        )
+        recs.append(recall(ids, gold))
+    assert np.mean(recs) >= 0.9
+
+
+def test_incremental_snapshot_refresh_bitwise():
+    """take_snapshot(prev=...) after batched ingest is bitwise identical to
+    a from-scratch snapshot; sequential inserts and deletes fall back to
+    the full path (still identical)."""
+    wl = make_workload(n=600, d=8, nq=1, seed=11, with_gt=False)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+    idx.insert_batch(wl.vectors[:300], wl.attrs[:300], batch_size=100)
+    prev = take_snapshot(idx)
+    # batched ingest only -> incremental path applies
+    idx.insert_batch(wl.vectors[300:450], wl.attrs[300:450], batch_size=75)
+    fast = take_snapshot(idx, prev=prev)
+    idx2_full = take_snapshot(idx)  # tracker reset: this is a full rebuild
+    for a, b in (
+        (fast.neighbors, idx2_full.neighbors),
+        (fast.vectors, idx2_full.vectors),
+        (fast.sq_norms, idx2_full.sq_norms),
+        (fast.attrs, idx2_full.attrs),
+        (fast.uvals, idx2_full.uvals),
+        (fast.uval_rep, idx2_full.uval_rep),
+        (fast.ids_map, idx2_full.ids_map),
+    ):
+        assert np.array_equal(a, b)
+    # sequential insert dirties everything -> full path, still identical
+    prev = idx2_full
+    for v, a in zip(wl.vectors[450:470], wl.attrs[450:470]):
+        idx.insert(v, a)
+    s1 = take_snapshot(idx, prev=prev)
+    s2 = take_snapshot(idx)
+    assert np.array_equal(s1.neighbors, s2.neighbors)
+    assert np.array_equal(s1.uvals, s2.uvals)
+    # deletes -> full path (ids remap)
+    prev = s2
+    idx.insert_batch(wl.vectors[470:520], wl.attrs[470:520], batch_size=50)
+    idx.delete(5)
+    s3 = take_snapshot(idx, prev=prev)
+    assert s3.n == idx.store.n - 1
+    assert 5 not in set(s3.ids_map.tolist())
+
+
+def test_incremental_refresh_suffix_delete_undelete():
+    """Regression: a snapshot taken under a SUFFIX-only delete has an
+    identity-looking ids_map (endpoints match) but its edges to the deleted
+    vertex were compacted away — after undelete, refreshing from it must
+    take the full path, not silently drop those edges."""
+    wl = make_workload(n=300, d=8, nq=1, seed=15, with_gt=False)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+    idx.insert_batch(wl.vectors, wl.attrs, batch_size=100)
+    last = idx.store.n - 1
+    idx.delete(last)
+    mid = take_snapshot(idx)  # compacted; ids_map == arange(n-1)
+    assert mid.ids_map.size == mid.n and int(mid.ids_map[-1]) == mid.n - 1
+    idx.undelete(last)
+    refreshed = take_snapshot(idx, prev=mid)
+    full = take_snapshot(idx)
+    assert refreshed.n == idx.store.n
+    assert np.array_equal(refreshed.neighbors, full.neighbors)
+    # the undeleted vertex's inbound edges are back
+    assert (full.neighbors == last).sum() > 0
+    assert (refreshed.neighbors == last).sum() == (full.neighbors == last).sum()
+
+
+def test_visited_filter_bits_measured_sizing():
+    from repro.core.device_search import (
+        visited_filter_bits,
+        visited_filter_bits_measured,
+    )
+
+    worst = visited_filter_bits(64, 16, max_hops=576)
+    hops = np.asarray([20, 25, 31, 18, 40, 22, 19, 28])
+    measured = visited_filter_bits_measured(hops, 16)
+    assert measured < worst, "measured sizing should beat the worst case"
+    assert measured & (measured - 1) == 0  # pow2
+    # heavier histograms size up monotonically
+    big = visited_filter_bits_measured(hops * 20, 16)
+    assert big >= measured
+    # empty history degrades to the floor, not a crash
+    assert visited_filter_bits_measured(np.asarray([]), 16) >= 1024
+
+
+def test_probe_cache_parity_fused_vs_reference_hash():
+    """The fused pipeline's cached probe positions (test->mark handover)
+    are bitwise equivalent to the reference pipeline's rehashing, given an
+    oversized (collision-free in practice) filter."""
+    from repro.core.device_search import search_batch
+
+    wl = make_workload(n=400, d=12, nq=32, seed=13, k=10)
+    idx = WoWIndex(dim=12, m=8, ef_construction=32, o=4, seed=0)
+    idx.insert_batch(wl.vectors, wl.attrs, batch_size=128)
+    snap = take_snapshot(idx)
+    fused = search_batch(snap, wl.queries, wl.ranges, k=10, width=32,
+                         visited="hash", visited_bits=1 << 18)
+    ref = search_batch(snap, wl.queries, wl.ranges, k=10, width=32,
+                       visited="hash", visited_bits=1 << 18,
+                       pipeline="reference")
+    assert np.array_equal(np.asarray(fused.ids), np.asarray(ref.ids))
+    assert np.array_equal(np.asarray(fused.dc), np.asarray(ref.dc))
+    assert np.array_equal(np.asarray(fused.hops), np.asarray(ref.hops))
+
+
+def test_device_build_ingest_after_deletes_and_compact():
+    """Ingest-while-serve lifecycle: build, delete, compact_rows, ingest
+    more on the device backend — arenas resync via the version stamps."""
+    wl = make_workload(n=600, d=10, nq=15, seed=14, k=5)
+    idx = WoWIndex(dim=10, m=8, ef_construction=32, o=4, seed=0)
+    idx.insert_batch(wl.vectors[:400], wl.attrs[:400], batch_size=128,
+                     backend="device")
+    rng = np.random.default_rng(5)
+    for vid in rng.choice(400, size=80, replace=False):
+        idx.delete(int(vid))
+    idx.compact_rows()
+    idx.insert_batch(wl.vectors[400:], wl.attrs[400:], batch_size=100,
+                     backend="device")
+    # arena content still mirrors the graph bit for bit
+    ref = np.stack([lay for lay in idx.graph.layers], axis=0)
+    assert np.array_equal(np.asarray(idx._arena.neighbors), ref)
+    recs = []
+    for i in range(15):
+        ids, _, _ = idx.search(wl.queries[i], tuple(wl.ranges[i]), k=5, ef=64)
+        assert not (set(ids.tolist()) & idx.deleted)
+        gold = brute_force(
+            idx.store.vectors[: idx.store.n],
+            np.where(
+                np.isin(np.arange(idx.store.n), list(idx.deleted)),
+                np.inf, idx.store.attrs[: idx.store.n],
+            ),
+            wl.queries[i], tuple(wl.ranges[i]), 5,
+        )
+        recs.append(recall(ids, gold))
+    assert np.mean(recs) >= 0.85

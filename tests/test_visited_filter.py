@@ -203,8 +203,8 @@ def test_visited_filter_sizing():
 
 
 def test_merge_writeback_methods_agree():
-    """Unit: scatter and one-hot-matmul writebacks produce the same source
-    map on random merged-position bijections."""
+    """Unit: scatter, one-hot-matmul and packed-sort writebacks produce the
+    same source map on random merged-position bijections."""
     import jax.numpy as jnp
 
     from repro.kernels.ops import merge_src_indices
@@ -215,4 +215,6 @@ def test_merge_writeback_methods_agree():
     pos_a, pos_b = jnp.asarray(perm[:, :W]), jnp.asarray(perm[:, W:])
     sc = np.asarray(merge_src_indices(pos_a, pos_b, W, K, "scatter"))
     oh = np.asarray(merge_src_indices(pos_a, pos_b, W, K, "onehot"))
+    so = np.asarray(merge_src_indices(pos_a, pos_b, W, K, "sort"))
     np.testing.assert_array_equal(sc, oh)
+    np.testing.assert_array_equal(sc, so)
