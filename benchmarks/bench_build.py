@@ -11,13 +11,23 @@ repo root so the construction-path perf trajectory is tracked across PRs:
   builds.<n>.device_ips            accelerator-resident build (insert_batch
                                    backend="device": jitted hop pipeline over
                                    the frozen snapshot + delta arena)
+  builds.<n>.sharded_ips           device build sharded over every visible
+                                   device (insert_batch backend="sharded":
+                                   shard_map'd phase-1 searches against the
+                                   replicated arena, deterministic commit)
   builds.<n>.speedup               batched vs sequential (median of ratios)
   builds.<n>.device_speedup        device vs sequential (median of ratios)
   builds.<n>.device_vs_host        device vs batched-numpy (median of ratios)
-  parity.{sequential,batched,device}_recall10   recall@10 vs brute force
+  builds.<n>.sharded_vs_device     sharded vs device (median of ratios)
+  builds.<n>.shards                build-mesh size the sharded column used
+  parity.{sequential,batched,device,sharded}_recall10  recall@10 vs brute
   parity.bands                     per-selectivity-band recall@10 for all
-                                   three paths (gate: batched/device within
-                                   0.01 of sequential in EVERY band)
+                                   four paths (gate: batched/device/sharded
+                                   within 0.01 of sequential in EVERY band)
+
+Datasets come from the shared regime generators (``tests/_workloads.py`` —
+the same Fig. 8 regimes the conformance harness gates); ``--regime`` picks
+one (default ``random``, the tracked configuration).
 
 The device backend's beam width is swept over {ef/4, ef/2, ef} and the
 fastest setting that passes the per-band parity gate is the one timed and
@@ -51,6 +61,18 @@ from .common import BENCH_D, BENCH_N, emit, write_csv
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _BATCH = 128  # insert_batch micro-batch size under test (host backends)
 _DEVICE_BATCH = 512  # device-backend micro-batch (lock-step amortisation)
+
+
+def _regime_workload(regime: str, n: int, nq: int, with_gt: bool = False,
+                     k: int = 10, seed: int = 0):
+    """Datasets from the shared regime generators
+    (``repro.core.datasets.make_regime_workload``, re-exported to tests as
+    ``tests/_workloads.py``) so the bench stresses exactly the
+    distributions the build-equivalence harness gates."""
+    from repro.core.datasets import make_regime_workload
+
+    return make_regime_workload(regime, n=n, d=BENCH_D, nq=nq, seed=seed,
+                                k=k, with_gt=with_gt)
 
 
 def _recall10(idx, wl, ef=64) -> float:
@@ -109,16 +131,21 @@ def _pick_device_width(wl, kw, seq_bands, dim) -> tuple[int, dict]:
     return ef, bands  # full width is the always-correct fallback
 
 
-def run(backend: str = "numpy") -> list[list]:
-    from repro.core import FlatNSW, WoWIndex, make_workload
+def run(regime: str = "random") -> list[list]:
+    """Full tracked run: always measures sequential + batched + device +
+    sharded (the ``--backend`` flag only selects which SMOKE gate runs)."""
+    import jax
+
+    from repro.core import FlatNSW, WoWIndex
 
     rows = []
     sizes, reps, nq = [BENCH_N // 4, BENCH_N // 2, BENCH_N], 5, 40
     builds = {}
     parity = None
     device_width = None
+    shards = len(jax.devices())
     for n in sizes:
-        wl = make_workload(n=n, d=BENCH_D, nq=nq, seed=0, with_gt=False)
+        wl = _regime_workload(regime, n=n, nq=nq)
         kw = dict(m=16, ef_construction=64, o=4, seed=0)
         if device_width is None:  # sweep once, on the first (smallest) size
             seq0 = WoWIndex(dim=BENCH_D, **kw)
@@ -127,9 +154,9 @@ def run(backend: str = "numpy") -> list[list]:
             device_width, _ = _pick_device_width(
                 wl, kw, _band_recalls(seq0, wl), BENCH_D
             )
-        t_seq = t_bat = t_dev = np.inf
-        idx = idx_b = idx_d = None
-        ratios, dev_ratios, dev_host = [], [], []
+        t_seq = t_bat = t_dev = t_shd = np.inf
+        idx = idx_b = idx_d = idx_s = None
+        ratios, dev_ratios, dev_host, shd_dev = [], [], [], []
         for _ in range(reps):  # paired windows -> per-pair ratios
             idx = WoWIndex(dim=BENCH_D, **kw)
             t0 = time.perf_counter()
@@ -152,14 +179,25 @@ def run(backend: str = "numpy") -> list[list]:
             t_dev = min(t_dev, dt_d)
             dev_ratios.append(dt_s / dt_d)
             dev_host.append(dt_b / dt_d)
+            idx_s = WoWIndex(dim=BENCH_D, **kw)
+            t0 = time.perf_counter()
+            idx_s.insert_batch(wl.vectors, wl.attrs,
+                               batch_size=_DEVICE_BATCH, backend="sharded",
+                               device_width=device_width, shards=shards)
+            dt_sh = time.perf_counter() - t0
+            t_shd = min(t_shd, dt_sh)
+            shd_dev.append(dt_d / dt_sh)
         speedup = float(np.median(ratios))
         builds[str(n)] = {
             "sequential_ips": round(n / t_seq, 1),
             "batched_ips": round(n / t_bat, 1),
             "device_ips": round(n / t_dev, 1),
+            "sharded_ips": round(n / t_shd, 1),
             "speedup": round(speedup, 2),
             "device_speedup": round(float(np.median(dev_ratios)), 2),
             "device_vs_host": round(float(np.median(dev_host)), 2),
+            "sharded_vs_device": round(float(np.median(shd_dev)), 2),
+            "shards": shards,
             "batch_size": _BATCH,
             "device_batch": _DEVICE_BATCH,
             "device_width": device_width,
@@ -170,39 +208,50 @@ def run(backend: str = "numpy") -> list[list]:
                      idx_b.graph.num_layers])
         rows.append(["wow_device", n, round(t_dev, 3), idx_d.memory_bytes(),
                      idx_d.graph.num_layers])
+        rows.append(["wow_sharded", n, round(t_shd, 3), idx_s.memory_bytes(),
+                     idx_s.graph.num_layers])
         emit(f"build_wow_n{n}", t_seq / n * 1e6, f"bytes={idx.memory_bytes()}")
         emit(f"build_wow_batched_n{n}", t_bat / n * 1e6,
              f"speedup={speedup:.2f}x;batch={_BATCH}")
         emit(f"build_wow_device_n{n}", t_dev / n * 1e6,
              f"vs_host={np.median(dev_host):.2f}x;width={device_width}")
+        emit(f"build_wow_sharded_n{n}", t_shd / n * 1e6,
+             f"vs_device={np.median(shd_dev):.2f}x;shards={shards}")
         if n == sizes[-1]:
             r_seq = _recall10(idx, wl)
             r_bat = _recall10(idx_b, wl)
             r_dev = _recall10(idx_d, wl)
+            r_shd = _recall10(idx_s, wl)
             b_seq = _band_recalls(idx, wl)
             b_bat = _band_recalls(idx_b, wl)
             b_dev = _band_recalls(idx_d, wl)
+            b_shd = _band_recalls(idx_s, wl)
             parity = {
                 "sequential_recall10": round(r_seq, 4),
                 "batched_recall10": round(r_bat, 4),
                 "device_recall10": round(r_dev, 4),
+                "sharded_recall10": round(r_shd, 4),
                 "delta": round(r_bat - r_seq, 4),
                 "device_delta": round(r_dev - r_seq, 4),
+                "sharded_delta": round(r_shd - r_seq, 4),
                 "bands": {
                     str(f): {
                         "sequential": round(b_seq[f], 4),
                         "batched": round(b_bat[f], 4),
                         "device": round(b_dev[f], 4),
+                        "sharded": round(b_shd[f], 4),
                     }
                     for f in b_seq
                 },
             }
             emit(f"build_parity_n{n}", 0.0,
-                 f"seq={r_seq:.4f};batched={r_bat:.4f};device={r_dev:.4f}")
+                 f"seq={r_seq:.4f};batched={r_bat:.4f};device={r_dev:.4f};"
+                 f"sharded={r_shd:.4f}")
             bad = [
                 (path, f)
                 for f in b_seq
-                for path, bands in (("batched", b_bat), ("device", b_dev))
+                for path, bands in (("batched", b_bat), ("device", b_dev),
+                                    ("sharded", b_shd))
                 if bands[f] < b_seq[f] - 0.01
             ]
             if bad:
@@ -234,28 +283,27 @@ def run(backend: str = "numpy") -> list[list]:
         emit("build_scaling_slope", per_insert[-1], f"us_per_log2sq={slope:.3f}")
         rows.append(["wow_scaling_slope", sizes[-1], slope, 0, 0])
 
-    if True:  # full runs track the numbers (smoke uses _run_smoke_*)
-        import jax
-
-        record = {
-            "platform": jax.devices()[0].platform,
-            "workload": {"d": BENCH_D, "m": 16, "ef_construction": 64, "o": 4},
-            "builds": builds,
-            "parity": parity,
-        }
-        with open(os.path.join(_REPO_ROOT, "BENCH_build.json"), "w") as f:
-            json.dump(record, f, indent=1)
+    record = {
+        "platform": jax.devices()[0].platform,
+        "devices": shards,
+        "workload": {"d": BENCH_D, "m": 16, "ef_construction": 64,
+                     "o": 4, "regime": regime},
+        "builds": builds,
+        "parity": parity,
+    }
+    with open(os.path.join(_REPO_ROOT, "BENCH_build.json"), "w") as f:
+        json.dump(record, f, indent=1)
 
     write_csv("bench_build.csv", ["index", "n", "seconds", "bytes", "layers"], rows)
     return rows
 
 
-def _run_smoke_host_only() -> list[list]:
+def _run_smoke_host_only(regime: str = "random") -> list[list]:
     """The pre-device smoke: sequential + batched numpy only (fast path for
     ``--smoke`` without ``--backend device``)."""
-    from repro.core import WoWIndex, make_workload
+    from repro.core import WoWIndex
 
-    wl = make_workload(n=400, d=BENCH_D, nq=10, seed=0, with_gt=False)
+    wl = _regime_workload(regime, n=400, nq=10)
     kw = dict(m=16, ef_construction=64, o=4, seed=0)
     rows = []
     idx = WoWIndex(dim=BENCH_D, **kw)
@@ -280,18 +328,47 @@ def _run_smoke_host_only() -> list[list]:
     return rows
 
 
-def _run_smoke_device() -> None:
-    """CI gate for the accelerator-resident build: sequential oracle vs
-    device-backend build on a tiny workload, per-band recall parity
-    enforced (non-zero exit on regression)."""
-    from repro.core import WoWIndex, make_workload
+def _smoke_oracle(regime: str):
+    """Shared smoke scaffold: tiny regime workload + the sequential-oracle
+    index and its per-band recalls (the reference side of every gate)."""
+    from repro.core import WoWIndex
 
-    wl = make_workload(n=400, d=BENCH_D, nq=10, seed=0, with_gt=False)
+    wl = _regime_workload(regime, n=400, nq=10)
     kw = dict(m=16, ef_construction=64, o=4, seed=0)
     seq = WoWIndex(dim=BENCH_D, **kw)
     for v, a in zip(wl.vectors, wl.attrs):
         seq.insert(v, a)
-    seq_bands = _band_recalls(seq, wl)
+    return wl, kw, _band_recalls(seq, wl)
+
+
+def _gate_bands(label: str, seq_bands: dict, got_bands: dict) -> None:
+    """Per-band recall-parity gate shared by every smoke (non-zero exit)."""
+    bad = [f for f in seq_bands if got_bands[f] < seq_bands[f] - 0.01]
+    if bad:
+        raise SystemExit(
+            f"{label} recall-parity regression in bands {bad}: "
+            f"{label}={got_bands} vs sequential={seq_bands}"
+        )
+
+
+def _gate_graphs_bitwise(label: str, a, b) -> None:
+    """Bitwise adjacency/degree equality gate (non-zero exit) — the bench
+    twin of ``tests/_invariants.assert_graph_equal``."""
+    if a.graph.num_layers != b.graph.num_layers:
+        raise SystemExit(f"{label}: layer counts diverge")
+    for l in range(a.graph.num_layers):
+        if not (np.array_equal(a.graph.layers[l], b.graph.layers[l])
+                and np.array_equal(a.graph.counts[l], b.graph.counts[l])):
+            raise SystemExit(f"{label}: graphs diverge at layer {l}")
+
+
+def _run_smoke_device(regime: str = "random") -> None:
+    """CI gate for the accelerator-resident build: sequential oracle vs
+    device-backend build on a tiny workload, per-band recall parity
+    enforced (non-zero exit on regression)."""
+    from repro.core import WoWIndex
+
+    wl, kw, seq_bands = _smoke_oracle(regime)
     t0 = time.perf_counter()
     dev = WoWIndex(dim=BENCH_D, **kw)
     dev.insert_batch(wl.vectors, wl.attrs, batch_size=_BATCH,
@@ -304,14 +381,41 @@ def _run_smoke_device() -> None:
     )
     emit("build_device_smoke", dt * 1e3,
          ";".join(f"{f}={dev_bands[f]:.4f}" for f in dev_bands))
-    bad = [f for f in seq_bands if dev_bands[f] < seq_bands[f] - 0.01]
-    if bad:
-        raise SystemExit(
-            f"device-build recall-parity regression in bands {bad}: "
-            f"device={dev_bands} vs sequential={seq_bands}"
-        )
+    _gate_bands("device-build", seq_bands, dev_bands)
     print(f"device smoke OK: {len(wl.attrs)} inserts in {dt:.1f}s, "
           f"bands {dev_bands}")
+
+
+def _run_smoke_sharded(regime: str = "random") -> None:
+    """CI gate for the sharded build (multi-device job): the sharded
+    backend over every visible device must produce a graph bitwise
+    identical to ``backend="device"`` AND stay within the per-band recall
+    parity gate vs the sequential oracle (non-zero exit on either)."""
+    import jax
+
+    from repro.core import WoWIndex
+
+    wl, kw, seq_bands = _smoke_oracle(regime)
+    dev = WoWIndex(dim=BENCH_D, **kw)
+    dev.insert_batch(wl.vectors, wl.attrs, batch_size=_BATCH,
+                     backend="device", device_width=16)
+    shards = len(jax.devices())
+    t0 = time.perf_counter()
+    shd = WoWIndex(dim=BENCH_D, **kw)
+    shd.insert_batch(wl.vectors, wl.attrs, batch_size=_BATCH,
+                     backend="sharded", device_width=16, shards=shards)
+    dt = time.perf_counter() - t0
+    _gate_graphs_bitwise(
+        f"sharded build (shards={shards}) vs device — the "
+        "shard-count-invariance gate", dev, shd,
+    )
+    shd_bands = _band_recalls(shd, wl)
+    emit("build_sharded_smoke", dt * 1e3,
+         f"shards={shards};" + ";".join(
+             f"{f}={shd_bands[f]:.4f}" for f in shd_bands))
+    _gate_bands("sharded-build", seq_bands, shd_bands)
+    print(f"sharded smoke OK: {len(wl.attrs)} inserts over {shards} "
+          f"shard(s) in {dt:.1f}s, bitwise == device, bands {shd_bands}")
 
 
 def main() -> None:
@@ -320,23 +424,35 @@ def main() -> None:
     ap = argparse.ArgumentParser(description="construction-path bench")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload end to end (CI); with --backend "
-                         "device, gates device-build recall parity")
+                         "device/sharded, gates build recall parity (and "
+                         "sharded-vs-device bitwise equality)")
     ap.add_argument("--backend", default="numpy",
-                    choices=("numpy", "device"),
+                    choices=("numpy", "device", "sharded"),
                     help="batched-construction engine the smoke exercises: "
                          "'numpy' = host BLAS lock-step search; 'device' = "
                          "the accelerator-resident build (jitted hop "
                          "pipeline over the frozen snapshot + delta arena; "
-                         "insert_batch(backend='device')).  Full (non-smoke) "
-                         "runs always measure both and record the device "
-                         "column in BENCH_build.json")
+                         "insert_batch(backend='device')); 'sharded' = the "
+                         "device build shard_map'd over every visible "
+                         "device.  Full (non-smoke) runs always measure all "
+                         "of them and record every column in "
+                         "BENCH_build.json")
+    ap.add_argument("--regime", default="random",
+                    help="workload regime from tests/_workloads.py "
+                         "(random, correlated, anticorrelated, clustered, "
+                         "duplicate_heavy, adversarial_sorted)")
     args = ap.parse_args()
-    if args.smoke and args.backend == "device":
-        _run_smoke_device()
+    if args.smoke and args.backend == "sharded":
+        _run_smoke_sharded(args.regime)
+    elif args.smoke and args.backend == "device":
+        _run_smoke_device(args.regime)
     elif args.smoke:
-        _run_smoke_host_only()
+        _run_smoke_host_only(args.regime)
     else:
-        run(backend=args.backend)
+        if args.backend != "numpy":
+            print(f"note: full runs measure every backend; --backend "
+                  f"{args.backend} only selects a smoke gate")
+        run(regime=args.regime)
 
 
 if __name__ == "__main__":

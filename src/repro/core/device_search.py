@@ -231,6 +231,13 @@ def _pow2ceil(x: int) -> int:
     return 1 << max(0, (int(x) - 1)).bit_length()
 
 
+def _default_max_hops(width: int) -> int:
+    """Global iteration cap from the beam width (the sorted beam drains
+    after O(width) expansions; the 8x + 64 slack covers pathological
+    workloads without unbounding the loop)."""
+    return 8 * int(width) + 64
+
+
 def _bucket_ceil(x: int) -> int:
     """Compaction bucket size: smallest of {pow2, 1.5*pow2} >= x.  The
     half-step granularity (8, 12, 16, 24, 32, 48, 64, 96, 128, ...) is what
@@ -274,6 +281,14 @@ def visited_filter_bits(
     return _bloom_bits(budget, fp, hashes)
 
 
+def _measured_bits_from_p99(
+    p99: float, m: int, fp: float, hashes: int, slack: float,
+    floor_hops: int,
+) -> int:
+    budget = (max(floor_hops, int(math.ceil(slack * p99))) + 1) * (m + 1)
+    return _bloom_bits(budget, fp, hashes)
+
+
 def visited_filter_bits_measured(
     hops,
     m: int,
@@ -282,7 +297,7 @@ def visited_filter_bits_measured(
     slack: float = 1.5,
     floor_hops: int = 16,
 ) -> int:
-    """Adaptive hash-filter sizing from a *measured* hop histogram.
+    """Adaptive hash-filter sizing from *measured* per-query hop counts.
 
     Real searches insert far fewer ids than the worst-case ``2*width + 64``
     budget: sizing to ``slack * p99(observed hops)`` (never below
@@ -295,8 +310,36 @@ def visited_filter_bits_measured(
     same size, so jit caches stay warm across refreshes."""
     hops = np.asarray(hops)
     p99 = float(np.percentile(hops, 99)) if hops.size else 0.0
-    budget = (max(floor_hops, int(math.ceil(slack * p99))) + 1) * (m + 1)
-    return _bloom_bits(budget, fp, hashes)
+    return _measured_bits_from_p99(p99, m, fp, hashes, slack, floor_hops)
+
+
+def visited_filter_bits_from_hist(
+    hist,
+    m: int,
+    fp: float = 0.02,
+    hashes: int = 2,
+    slack: float = 1.5,
+    floor_hops: int = 16,
+) -> int:
+    """``visited_filter_bits_measured`` computed directly from a hop
+    *histogram* (bin i = number of searches that took i hops) — the form
+    the sharded serving path reduces across shards — without materialising
+    the per-query sample.  The p99 reproduces ``np.percentile``'s linear
+    interpolation exactly via the cumulative counts, so both entry points
+    size identically for the same data."""
+    hist = np.asarray(hist, np.int64)
+    total = int(hist.sum())
+    if total == 0:
+        p99 = 0.0
+    else:
+        rank = (total - 1) * 0.99
+        lo_k = int(math.floor(rank))
+        hi_k = int(math.ceil(rank))
+        cum = np.cumsum(hist)
+        v_lo = int(np.searchsorted(cum, lo_k + 1))  # 0-indexed order stats
+        v_hi = int(np.searchsorted(cum, hi_k + 1))
+        p99 = v_lo + (rank - lo_k) * (v_hi - v_lo)
+    return _measured_bits_from_p99(p99, m, fp, hashes, slack, floor_hops)
 
 
 def _hash_probe(ids: jax.Array):
@@ -799,13 +842,22 @@ def _init_build_state(di: DeviceIndex, queries, ranges, eps, l_lo, l_hi,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _build_search_jit(di, queries, ranges, eps, l_lo, l_hi, seed_i, seed_d,
-                      valid, cfg):
+def _build_search_core(di, queries, ranges, eps, l_lo, l_hi, seed_i, seed_d,
+                       valid, cfg):
+    """Init + lock-step hop loop of one construction search: the pure
+    jittable core, shared by the single-device jit below and the
+    ``shard_map``-sharded build path (``repro.core.distributed``) — every
+    per-member trajectory is row-independent, so sharding the batch
+    dimension preserves results bitwise."""
     st = _init_build_state(di, queries, ranges, eps, l_lo, l_hi, seed_i,
                            seed_d, valid, cfg)
     st = _run_hops(di, st, cfg, cfg.max_hops + 1)
     return st.res_i, st.res_d, st.dc, st.hops
+
+
+_build_search_jit = functools.partial(jax.jit, static_argnames=("cfg",))(
+    _build_search_core
+)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -813,6 +865,135 @@ def _build_init_jit(di, queries, ranges, eps, l_lo, l_hi, seed_i, seed_d,
                     valid, cfg):
     return _init_build_state(di, queries, ranges, eps, l_lo, l_hi, seed_i,
                              seed_d, valid, cfg)
+
+
+class _BuildPrep(NamedTuple):
+    """Device-ready construction-search inputs (see ``_prep_build_inputs``):
+    ``args`` is the positional tuple ``_build_search_core`` consumes after
+    ``di`` (targets, ranges, eps, lo, hi, seed ids/dists, valid)."""
+
+    di: DeviceIndex  # layer-span-sliced view
+    args: tuple
+    cfg: HopCfg
+    B: int  # real (unpadded) member count
+
+
+def _prep_build_inputs(
+    di: DeviceIndex,
+    targets: np.ndarray,
+    ranges: np.ndarray,
+    eps: np.ndarray,
+    l_lo: int,
+    l_hi: int,
+    seed_ids: np.ndarray | None,
+    seed_d: np.ndarray | None,
+    *,
+    width: int,
+    m: int,
+    o: int,
+    metric: str,
+    seed_width: int | None,
+    backend: str,
+    visited: str,
+    visited_bits: int | None,
+    visited_fp: float,
+    visited_hashes: int,
+    merge: str,
+    max_hops: int | None,
+    multiple: int = 1,
+) -> _BuildPrep:
+    """Host-side prep of one construction search, shared bit-for-bit by the
+    single-device ``build_search`` and the sharded build path: seed
+    truncation, pow2 batch padding (additionally rounded up to ``multiple``
+    so the batch divides a build mesh), static config, and the layer-span
+    slice of the neighbor tensor.  Per-member trajectories are independent
+    of the padded batch size, so every consumer of one prep computes
+    identical per-member results."""
+    targets = np.asarray(targets, np.float32)
+    B = targets.shape[0]
+    W = int(width)
+    if max_hops is None:
+        max_hops = _default_max_hops(W)
+    C = int(seed_width) if seed_width else (
+        seed_ids.shape[1] if seed_ids is not None and seed_ids.ndim == 2 else 0
+    )
+    # the init keeps only the W nearest seeds (the host preload's S =
+    # min(C, W)); truncating host-side shrinks the device-side seed sort
+    # from the full carry width to W
+    if seed_ids is not None and seed_ids.ndim == 2 and seed_ids.shape[1] > W:
+        so = np.argsort(
+            np.where(seed_ids >= 0, seed_d, np.inf), axis=1, kind="stable"
+        )[:, :W]
+        seed_ids = np.take_along_axis(seed_ids, so, 1)
+        seed_d = np.take_along_axis(seed_d, so, 1)
+    C = max(min(C, W), 1)
+    Bp = _pow2ceil(max(B, _MIN_BUCKET))
+    if multiple > 1 and Bp % multiple:
+        Bp = -(-Bp // multiple) * multiple  # round up to the mesh size
+    si = np.full((Bp, C), -1, np.int32)
+    sdp = np.full((Bp, C), np.inf, np.float32)
+    if seed_ids is not None and seed_ids.size:
+        S = min(seed_ids.shape[1], C)
+        si[:B, :S] = seed_ids[:, :S]
+        sdp[:B, :S] = seed_d[:, :S]
+    tp = np.zeros((Bp, targets.shape[1]), np.float32)
+    tp[:B] = targets
+    rp = np.zeros((Bp, 2), np.float32)
+    rp[:B] = np.asarray(ranges, np.float32)
+    rp[B:] = (1.0, 0.0)
+    ep = np.zeros(Bp, np.int32)
+    ep[:B] = np.asarray(eps, np.int32)
+    valid = np.arange(Bp) < B
+    v_words = 0
+    if visited == "hash":
+        if visited_bits is None:
+            visited_bits = visited_filter_bits(
+                W, m, max_hops, fp=visited_fp, hashes=visited_hashes
+            )
+        else:
+            visited_bits = _pow2ceil(max(int(visited_bits), 1024))
+        v_words = visited_bits // 32
+    cfg = HopCfg(
+        k=W, width=W, m=m, o=o, metric=metric, max_hops=int(max_hops),
+        backend=backend, pipeline="fused", visited=visited,
+        v_words=v_words, v_hashes=int(visited_hashes), merge=merge,
+    )
+    # layer-span slicing: a search over [l_lo, l_hi] only ever gathers
+    # those layers' rows, so slice the neighbor tensor to a pow2-quantised
+    # span ending at l_hi (extra lower layers are masked by l_min) — the
+    # per-hop sort/mask width then scales with the sweep, not the full
+    # layer count, at O(log L) compiled span shapes.
+    L_all = di.neighbors.shape[0]
+    span_q = min(_pow2ceil(int(l_hi) - int(l_lo) + 1), int(l_hi) + 1)
+    base = int(l_hi) + 1 - span_q
+    if base > 0 or span_q < L_all:
+        di = di._replace(neighbors=di.neighbors[base : int(l_hi) + 1])
+    lo = np.full(Bp, int(l_lo) - base, np.int32)
+    hi = np.full(Bp, int(l_hi) - base, np.int32)
+    args = (
+        jnp.asarray(tp), jnp.asarray(rp), jnp.asarray(ep),
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(si), jnp.asarray(sdp),
+        jnp.asarray(valid),
+    )
+    return _BuildPrep(di=di, args=args, cfg=cfg, B=B)
+
+
+def _finish_build_search(
+    res_i, res_d, dc, hops, B: int, deleted: set[int] | None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Device->host readback of one construction search: strip the batch
+    padding and mask deleted ids to -1 (they stay traversable in-loop,
+    §3.7), mirroring ``search_candidates_batch``'s contract."""
+    res_i = np.asarray(res_i)[:B]
+    res_d = np.asarray(res_d)[:B]
+    dc = np.asarray(dc)[:B]
+    hops = np.asarray(hops)[:B]
+    if deleted:
+        dead = (res_i >= 0) & np.isin(
+            res_i, np.fromiter(deleted, dtype=np.int64, count=len(deleted))
+        )
+        res_i = np.where(dead, -1, res_i)
+    return res_i, res_d, dc, hops
 
 
 def build_search(
@@ -856,88 +1037,28 @@ def build_search(
     ``None`` = one whole-loop jit (required inside an outer jit).  Returns
     host ``(res_i, res_d, dc, hops)`` with deleted ids masked to -1 (they
     stay traversable in-loop, §3.7), mirroring the host contract.
+
+    The multi-device twin — the same prep, the same lock-step core, the
+    batch sharded over a build mesh — is
+    ``repro.core.distributed.sharded_build_search``.
     """
-    targets = np.asarray(targets, np.float32)
-    B = targets.shape[0]
-    W = int(width)
-    if max_hops is None:
-        max_hops = 8 * W + 64
-    C = int(seed_width) if seed_width else (
-        seed_ids.shape[1] if seed_ids is not None and seed_ids.ndim == 2 else 0
+    prep = _prep_build_inputs(
+        di, targets, ranges, eps, l_lo, l_hi, seed_ids, seed_d,
+        width=width, m=m, o=o, metric=metric, seed_width=seed_width,
+        backend=backend, visited=visited, visited_bits=visited_bits,
+        visited_fp=visited_fp, visited_hashes=visited_hashes, merge=merge,
+        max_hops=max_hops,
     )
-    # the init keeps only the W nearest seeds (the host preload's S =
-    # min(C, W)); truncating host-side shrinks the device-side seed sort
-    # from the full carry width to W
-    if seed_ids is not None and seed_ids.ndim == 2 and seed_ids.shape[1] > W:
-        so = np.argsort(
-            np.where(seed_ids >= 0, seed_d, np.inf), axis=1, kind="stable"
-        )[:, :W]
-        seed_ids = np.take_along_axis(seed_ids, so, 1)
-        seed_d = np.take_along_axis(seed_d, so, 1)
-    C = max(min(C, W), 1)
-    Bp = _pow2ceil(max(B, _MIN_BUCKET))
-    si = np.full((Bp, C), -1, np.int32)
-    sdp = np.full((Bp, C), np.inf, np.float32)
-    if seed_ids is not None and seed_ids.size:
-        S = min(seed_ids.shape[1], C)
-        si[:B, :S] = seed_ids[:, :S]
-        sdp[:B, :S] = seed_d[:, :S]
-    tp = np.zeros((Bp, targets.shape[1]), np.float32)
-    tp[:B] = targets
-    rp = np.zeros((Bp, 2), np.float32)
-    rp[:B] = np.asarray(ranges, np.float32)
-    rp[B:] = (1.0, 0.0)
-    ep = np.zeros(Bp, np.int32)
-    ep[:B] = np.asarray(eps, np.int32)
-    valid = np.arange(Bp) < B
-    v_words = 0
-    if visited == "hash":
-        if visited_bits is None:
-            visited_bits = visited_filter_bits(
-                W, m, max_hops, fp=visited_fp, hashes=visited_hashes
-            )
-        else:
-            visited_bits = _pow2ceil(max(int(visited_bits), 1024))
-        v_words = visited_bits // 32
-    cfg = HopCfg(
-        k=W, width=W, m=m, o=o, metric=metric, max_hops=int(max_hops),
-        backend=backend, pipeline="fused", visited=visited,
-        v_words=v_words, v_hashes=int(visited_hashes), merge=merge,
-    )
-    # layer-span slicing: a search over [l_lo, l_hi] only ever gathers
-    # those layers' rows, so slice the neighbor tensor to a pow2-quantised
-    # span ending at l_hi (extra lower layers are masked by l_min) — the
-    # per-hop sort/mask width then scales with the sweep, not the full
-    # layer count, at O(log L) compiled span shapes.
-    L_all = di.neighbors.shape[0]
-    span_q = min(_pow2ceil(int(l_hi) - int(l_lo) + 1), int(l_hi) + 1)
-    base = int(l_hi) + 1 - span_q
-    if base > 0 or span_q < L_all:
-        di = di._replace(neighbors=di.neighbors[base : int(l_hi) + 1])
-    lo = np.full(Bp, int(l_lo) - base, np.int32)
-    hi = np.full(Bp, int(l_hi) - base, np.int32)
-    args = (
-        di, jnp.asarray(tp), jnp.asarray(rp), jnp.asarray(ep),
-        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(si), jnp.asarray(sdp),
-        jnp.asarray(valid), cfg,
-    )
+    args = (prep.di, *prep.args, prep.cfg)
     if compact is None:
-        res_i, res_d, dc, hops = _build_search_jit(*args)
-        res_i = np.asarray(res_i)[:B]
-        res_d = np.asarray(res_d)[:B]
-        dc = np.asarray(dc)[:B]
-        hops = np.asarray(hops)[:B]
+        out = _build_search_jit(*args)
     else:
         st = _build_init_jit(*args)
-        res_i, res_d, dc, hops = _drive_chunked(
-            di, st, cfg, (int(compact[0]), int(compact[1])), B, 1
+        out = _drive_chunked(
+            prep.di, st, prep.cfg, (int(compact[0]), int(compact[1])),
+            prep.B, 1,
         )
-    if deleted:
-        dead = (res_i >= 0) & np.isin(
-            res_i, np.fromiter(deleted, dtype=np.int64, count=len(deleted))
-        )
-        res_i = np.where(dead, -1, res_i)
-    return res_i, res_d, dc, hops
+    return _finish_build_search(*out, prep.B, deleted)
 
 
 @jax.jit
@@ -1066,7 +1187,7 @@ def device_search(
         raise ValueError(f"unknown visited filter {visited!r}")
     W = max(width, k)
     if max_hops is None:
-        max_hops = 8 * W + 64
+        max_hops = _default_max_hops(W)
     v_words = 0
     if visited == "hash":
         if visited_bits is None:

@@ -57,6 +57,10 @@ from .search import (
 from .snapshot import DeviceBuildArena, NeighborSlab
 from .store import BuildStats, SearchStats, VectorStore
 
+#: registered ``insert_batch`` phase-1 engines; an unknown ``backend=``
+#: raises ``ValueError`` naming these (never a silent numpy fall-through).
+INSERT_BACKENDS = ("numpy", "ops", "device", "sharded")
+
 
 @dataclass
 class WoWParams:
@@ -223,6 +227,7 @@ class WoWIndex:
         batch_size: int = 128,
         backend: str = "numpy",
         device_width: int | None = None,
+        shards: int | None = None,
     ) -> np.ndarray:
         """Batched Algorithm 1 (module docstring, "Batched construction").
 
@@ -230,7 +235,8 @@ class WoWIndex:
         ``batch_size``; each micro-batch's per-layer candidate searches run
         as one lock-step batched evaluation and its edges are committed in a
         sequential-equivalent order.  ``backend`` selects the phase-1
-        candidate-search engine:
+        candidate-search engine (the registered set is ``INSERT_BACKENDS``;
+        anything else raises):
 
           * ``"numpy"`` (default) — host BLAS lock-step search
             (``search_candidates_batch``) over the persistent neighbor slab;
@@ -242,7 +248,13 @@ class WoWIndex:
             jitted ``device_search`` hop pipeline against the device-resident
             frozen snapshot + delta arena (``DeviceBuildArena``): carry-
             seeded beams, hashed O(budget) visited filter, fused gather
-            kernel — the accelerator-resident build.
+            kernel — the accelerator-resident build;
+          * ``"sharded"`` — the device build's searches sharded over
+            ``shards`` devices via ``shard_map`` on a build mesh
+            (``ShardedBuildArena``: replicated frozen snapshot, per-shard
+            member slices, delta broadcast on commit).  Phase-1 results are
+            bitwise those of ``"device"`` at every shard count, so the
+            committed graph is shard-count-invariant.
 
         All backends commit identically (phase 2 is the deterministic host
         reduction) and maintain their arenas incrementally: the neighbor
@@ -250,7 +262,7 @@ class WoWIndex:
         with per-batch deltas / generation stamps — no Theta(n) work inside
         the micro-batch loop.
 
-        ``device_width`` narrows the device search's beam below
+        ``device_width`` narrows the device/sharded search's beam below
         ``ef_construction`` (default: equal, matching the host search).
         The Thm-3.1 carry accumulates up to ``2*ef_construction + 2``
         already-evaluated candidates across layers regardless, so a
@@ -258,10 +270,32 @@ class WoWIndex:
         against the recall-parity gate (``bench_build --backend device``
         sweeps it and keeps the fastest parity-passing setting).
 
+        ``shards`` (``backend="sharded"`` only) is the build-mesh size;
+        default: every visible device.
+
         Returns the new vertex ids.
         """
-        if backend not in ("numpy", "ops", "device"):
-            raise ValueError(f"unknown insert_batch backend {backend!r}")
+        if backend not in INSERT_BACKENDS:
+            raise ValueError(
+                f"unknown insert_batch backend {backend!r}; registered "
+                f"backends: {', '.join(INSERT_BACKENDS)}"
+            )
+        if backend == "sharded":
+            if shards is None:
+                import jax
+
+                shards = len(jax.devices())
+            shards = int(shards)
+        elif shards is not None:
+            raise ValueError(
+                "shards= applies only to backend='sharded' "
+                f"(got backend={backend!r})"
+            )
+        if device_width is not None and backend not in ("device", "sharded"):
+            raise ValueError(
+                "device_width= applies only to backend='device'/'sharded' "
+                f"(got backend={backend!r})"
+            )
         vectors = np.asarray(vectors, dtype=np.float32)
         if vectors.ndim == 1:
             vectors = vectors.reshape(1, -1)
@@ -273,7 +307,7 @@ class WoWIndex:
         out = [
             self._insert_micro_batch(vectors[s : s + batch_size],
                                      attrs[s : s + batch_size], backend,
-                                     device_width)
+                                     device_width, shards)
             for s in range(0, len(attrs), batch_size)
         ]
         return (np.concatenate(out) if out else np.empty(0, dtype=np.int64))
@@ -284,12 +318,33 @@ class WoWIndex:
         attrs_b: np.ndarray,
         backend: str,
         device_width: int | None = None,
+        shards: int | None = None,
     ) -> np.ndarray:
         p = self.params
         m, o, omega_c = p.m, p.o, p.ef_construction
         B = len(attrs_b)
         if B == 0:
             return np.empty(0, dtype=np.int64)
+        # arena class resolution, BEFORE liveness is judged: the device
+        # backend owns a single-device ``DeviceBuildArena``, the sharded
+        # backend a ``ShardedBuildArena`` replicated over its build mesh —
+        # switching backends (or shard counts) swaps the arena, whose next
+        # ``ensure`` does one amortised full upload.
+        if backend in ("ops", "device", "sharded"):
+            from .snapshot import ShardedBuildArena
+
+            if backend == "sharded":
+                if (
+                    not isinstance(self._arena, ShardedBuildArena)
+                    or self._arena.num_shards != shards
+                ):
+                    from ..parallel.sharding import build_mesh
+
+                    self._arena = ShardedBuildArena(build_mesh(shards))
+            elif self._arena is None or isinstance(
+                self._arena, ShardedBuildArena
+            ):
+                self._arena = DeviceBuildArena()
         # mirror liveness, judged BEFORE this batch mutates anything: a
         # mirror that was in sync at batch start stays maintainable by this
         # batch's deltas alone (even if the other backend drives phase 1),
@@ -359,14 +414,12 @@ class WoWIndex:
             # the graph is frozen during phase 1; the persistent arenas are
             # brought up to date with deltas only (allocation/rebuild is
             # amortised over capacity growth, never per batch)
-            if backend in ("ops", "device"):
-                if self._arena is None:
-                    self._arena = DeviceBuildArena()
+            if backend in ("ops", "device", "sharded"):
                 arena = self._arena
                 arena.ensure(self)
                 if backend == "ops":
                     ops_table = arena.vectors  # device-resident [cap, d]
-            if backend != "device":
+            if backend not in ("device", "sharded"):
                 slab_full = self._slab.ensure(self.graph)
             uw = 0  # used carry width: every [B, C] pass runs on [:, :uw]
             for l in range(top, -1, -1):
@@ -420,10 +473,12 @@ class WoWIndex:
                 if need:
                     seeds_i = u_ids[need, :uw] if uw else None
                     seeds_d = u_d[need, :uw] if uw else None
-                    if backend == "device":
+                    if backend in ("device", "sharded"):
                         # accelerator-resident phase 1: the jitted hop
                         # pipeline over the frozen snapshot + delta arena,
-                        # beams seeded with the Thm-3.1 carry
+                        # beams seeded with the Thm-3.1 carry (the sharded
+                        # arena additionally splits the members over its
+                        # build mesh — same results bitwise)
                         res_i, res_d, dcs, _ = arena.search(
                             targets[need],
                             np.stack([wlo[need, l], whi[need, l]], axis=1),

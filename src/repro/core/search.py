@@ -351,6 +351,13 @@ def search_candidates_batch(
     fresh Theta(B*n) bitmap each; omitted, a transient arena is created
     (same code path, same cost profile as the old bitmap).
     """
+    if backend not in ("numpy", "ops"):
+        # this host engine only knows the two hop-eval routes; a typo'd
+        # backend must not silently degrade to the numpy path
+        raise ValueError(
+            f"unknown search_candidates_batch backend {backend!r}; "
+            "registered backends: numpy, ops"
+        )
     B = len(eps)
     n = store.n
     W = int(width)

@@ -42,6 +42,11 @@ Build-path delta arenas (the accelerator-resident construction state):
     buffers as a ``DeviceIndex`` for the jitted hop pipeline; construction
     searches never read ``uvals`` (entries come carry- or host-sampled), so
     those fields are 1-element dummies.
+  * ``ShardedBuildArena`` — the ``DeviceBuildArena`` replicated over a build
+    mesh for ``insert_batch(backend="sharded")``: full uploads place every
+    buffer replicated, delta scatters preserve the placement (the commit's
+    delta broadcast), and phase-1 searches dispatch through the
+    ``shard_map``-sharded hop pipeline in ``repro.core.distributed``.
 """
 from __future__ import annotations
 
@@ -460,4 +465,91 @@ class DeviceBuildArena:
             backend=backend,
             visited=visited,
             visited_bits=visited_bits,
+        )
+
+
+class ShardedBuildArena(DeviceBuildArena):
+    """``DeviceBuildArena`` whose frozen snapshot is *replicated* over a
+    build mesh and whose searches shard the micro-batch members across the
+    mesh devices (``insert_batch(backend="sharded")``).
+
+    Lifecycle: a full upload (amortised — capacity/top growth or untracked
+    mutations only) places every buffer replicated via
+    ``repro.kernels.ops.replicate``; the per-batch delta scatters
+    (``arena_scatter{,_layers}``'s donated jits) *preserve* that placement
+    by sharding propagation, so commits broadcast the changed rows to all
+    shards at O(changed rows) cost — the delta broadcast on commit.
+    Phase-1 searches dispatch through
+    ``repro.core.distributed.sharded_build_search``: a ``shard_map`` over
+    the mesh in which each shard runs the jitted lock-step hop pipeline on
+    its member slice against the replicated arena, and the per-member
+    candidate sets are all-gathered back to the host — bitwise identical
+    to the single-device build at any shard count, so the deterministic
+    phase-2 commit needs no shard awareness."""
+
+    __slots__ = ("mesh", "axis")
+
+    def __init__(self, mesh, axis: str = "build"):
+        super().__init__()
+        self.mesh = mesh
+        self.axis = axis
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def ensure(self, index) -> None:
+        uploads = self.stats["full_uploads"]
+        super().ensure(index)
+        if self.stats["full_uploads"] != uploads:
+            # fresh buffers live on the default device: replicate them over
+            # the build mesh once (delta scatters keep the placement)
+            from repro.kernels.ops import replicate
+
+            (self.vectors, self.sq_norms, self.attrs, self.neighbors,
+             self._dummy_u, self._dummy_r) = replicate(
+                (self.vectors, self.sq_norms, self.attrs, self.neighbors,
+                 self._dummy_u, self._dummy_r),
+                self.mesh,
+            )
+
+    def search(
+        self,
+        targets: np.ndarray,
+        ranges: np.ndarray,
+        eps: np.ndarray,
+        l_lo: int,
+        l_hi: int,
+        seed_ids: np.ndarray | None,
+        seed_d: np.ndarray | None,
+        width: int,
+        seed_width: int,
+        deleted: set[int] | None = None,
+        backend: str = "auto",
+        visited: str = "hash",
+        visited_bits: int | None = None,
+    ):
+        from .distributed import sharded_build_search
+
+        self.stats["searches"] += 1
+        return sharded_build_search(
+            self.mesh,
+            self.device_index(),
+            targets,
+            ranges,
+            eps,
+            l_lo,
+            l_hi,
+            seed_ids,
+            seed_d,
+            width=width,
+            m=self.m,
+            o=self.o,
+            metric="l2" if self.metric == "l2" else "cosine",
+            seed_width=seed_width,
+            deleted=deleted,
+            backend=backend,
+            visited=visited,
+            visited_bits=visited_bits,
+            axis=self.axis,
         )

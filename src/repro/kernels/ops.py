@@ -137,6 +137,18 @@ def merge_src_indices(pos_a, pos_b, W: int, K: int, method: str = "auto"):
     raise ValueError(f"unknown writeback method {method!r}")
 
 
+def replicate(tree, mesh):
+    """Place every leaf of ``tree`` replicated over ``mesh`` (NamedSharding
+    with an empty PartitionSpec).  The sharded build arena uses this once
+    per full upload; the delta scatters below preserve the placement (jit
+    propagates input shardings), so per-batch commits stay O(changed rows)
+    with no re-replication."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sh = NamedSharding(mesh, PartitionSpec())
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _arena_set_rows(dst, idx, rows):
     return dst.at[idx].set(rows)

@@ -42,11 +42,16 @@ def main() -> None:
                          "(insert_batch, vectorized Alg. 1); 0 = the "
                          "sequential insert loop")
     ap.add_argument("--build-backend", default="numpy",
-                    choices=("numpy", "ops", "device"),
+                    choices=("numpy", "ops", "device", "sharded"),
                     help="insert_batch phase-1 engine: host BLAS (numpy), "
-                         "host search + fused gather kernel (ops), or the "
+                         "host search + fused gather kernel (ops), the "
                          "accelerator-resident build — jitted hop pipeline "
-                         "over the frozen snapshot + delta arena (device)")
+                         "over the frozen snapshot + delta arena (device) — "
+                         "or that build shard_map'd over a device mesh "
+                         "(sharded; see --build-shards)")
+    ap.add_argument("--build-shards", type=int, default=0,
+                    help="with --build-backend sharded: build-mesh size "
+                         "(0 = every visible device)")
     ap.add_argument("--ingest", type=int, default=0,
                     help="ingest-while-serve: after the first serve wave, "
                          "stream N extra vectors through insert_batch, "
@@ -71,10 +76,15 @@ def main() -> None:
                        k=args.k)
     idx = WoWIndex(dim=args.dim, m=args.m, ef_construction=args.ef_construction,
                    o=args.o, seed=0)
+    build_kw = {}
+    if args.build_shards > 0:
+        if args.build_backend != "sharded":
+            ap.error("--build-shards requires --build-backend sharded")
+        build_kw["shards"] = args.build_shards
     t0 = time.time()
     if args.build_batch > 0:
         idx.insert_batch(wl.vectors, wl.attrs, batch_size=args.build_batch,
-                         backend=args.build_backend)
+                         backend=args.build_backend, **build_kw)
         how = f"batched/{args.build_backend} (micro-batch {args.build_batch})"
     else:
         for v, a in zip(wl.vectors, wl.attrs):
@@ -103,8 +113,13 @@ def main() -> None:
         serve = make_serving_fn(mesh, snap, k=args.k, width=args.width,
                                 backend=args.backend, pipeline=args.pipeline,
                                 visited=args.visited,
-                                visited_bits=args.visited_bits)
+                                visited_bits=args.visited_bits,
+                                visited_adaptive=args.adaptive_filter)
         res = serve(wl.queries, wl.ranges)
+        if args.adaptive_filter and args.visited == "hash":
+            print(f"adaptive visited filter (sharded, psum'd hop histogram): "
+                  f"{serve.state['bits']} bits/query after "
+                  f"{int(serve.state['hist'].sum())} queries")
     else:
         from ..core.device_search import search_batch
 
@@ -140,7 +155,7 @@ def main() -> None:
         bs = args.build_batch or 128
         t0 = time.time()
         idx.insert_batch(extra_v, extra_a, batch_size=bs,
-                         backend=args.build_backend)
+                         backend=args.build_backend, **build_kw)
         t_ing = time.time() - t0
         t0 = time.time()
         snap = take_snapshot(idx, prev=snap)

@@ -1,12 +1,36 @@
-"""Per-(arch x shape x mesh) input/state sharding specs."""
+"""Per-(arch x shape x mesh) input/state sharding specs, plus the 1-D build
+mesh the sharded WoW construction path (``insert_batch(backend="sharded")``)
+shards micro-batch phase-1 searches over."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
 from .logical import batch_axes
+
+
+def build_mesh(shards: int | None = None, axis: str = "build") -> Mesh:
+    """1-D mesh over the first ``shards`` local devices (default: all) for
+    sharded micro-batch construction.  A dedicated factory rather than
+    ``jax.make_mesh`` so a build can occupy a device *subset* (e.g. the
+    equivalence harness runs shard counts 1/2/8 against one 8-device
+    runtime) and so shard-count resolution lives in one place."""
+    devs = jax.devices()
+    if shards is None:
+        shards = len(devs)
+    shards = int(shards)
+    if shards < 1:
+        raise ValueError("build mesh needs >= 1 shard")
+    if shards > len(devs):
+        raise ValueError(
+            f"requested {shards} build shards but only {len(devs)} devices "
+            "are visible (set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=N for host-platform shards)"
+        )
+    return Mesh(np.asarray(devs[:shards]), (axis,))
 
 
 def _dp(mesh: Mesh, batch: int) -> tuple[str, ...] | None:

@@ -1,0 +1,122 @@
+"""Shared invariant checks for the construction test suites.
+
+One home for the checks every build path must pass — recall-parity bands,
+Def. 4 window invariants, degree/self-loop/id bounds, bitwise graph
+equality — so ``test_batch_build``, ``test_device_build`` and the
+cross-backend conformance harness (``test_build_equivalence``) stop
+duplicating them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import WoWIndex, brute_force, recall
+
+
+def build_index(
+    wl,
+    batch_size: int | None = None,
+    backend: str = "numpy",
+    shards: int | None = None,
+    device_width: int | None = None,
+    **kw,
+) -> WoWIndex:
+    """Build a fresh index from a workload: sequential Alg. 1 when
+    ``batch_size`` is None, ``insert_batch`` on the given backend otherwise."""
+    idx = WoWIndex(dim=wl.vectors.shape[1], **kw)
+    if batch_size is None:
+        for v, a in zip(wl.vectors, wl.attrs):
+            idx.insert(v, a)
+    else:
+        extra = {}
+        if shards is not None:
+            extra["shards"] = shards
+        if device_width is not None:
+            extra["device_width"] = device_width
+        idx.insert_batch(wl.vectors, wl.attrs, batch_size=batch_size,
+                         backend=backend, **extra)
+    return idx
+
+
+def band_recalls(
+    idx: WoWIndex,
+    wl,
+    fractions=(1.0, 0.25, 0.05),
+    k: int = 10,
+    ef: int = 80,
+    per_band: int = 12,
+    seed: int = 3,
+) -> dict[float, float]:
+    """Mean recall@k per selectivity band (ranges drawn like the workload's)
+    against the brute-force oracle — the parity-gate statistic."""
+    n = len(wl.attrs)
+    sorted_a = np.sort(wl.attrs)
+    rng = np.random.default_rng(seed)
+    out = {}
+    for frac in fractions:
+        recs = []
+        for i in range(per_band):
+            n_in = max(5, int(n * frac))
+            s = int(rng.integers(0, n - n_in + 1))
+            r = (sorted_a[s], sorted_a[s + n_in - 1])
+            q = wl.queries[i % len(wl.queries)]
+            ids, _, _ = idx.search(q, r, k=k, ef=ef)
+            gold = brute_force(
+                idx.store.vectors[: idx.store.n],
+                idx.store.attrs[: idx.store.n], q, r, k,
+            )
+            recs.append(recall(ids, gold))
+        out[frac] = float(np.mean(recs))
+    return out
+
+
+def assert_band_parity(
+    ref_bands: dict[float, float],
+    got_bands: dict[float, float],
+    tol: float = 0.01,
+    label: str = "",
+) -> None:
+    """Per-band recall parity: every band within ``tol`` of the reference."""
+    for frac, r in ref_bands.items():
+        assert got_bands[frac] >= r - tol, (
+            f"{label} band {frac}: {got_bands[frac]:.4f} vs ref {r:.4f}"
+        )
+
+
+def assert_window_invariants(idx: WoWIndex, vids) -> None:
+    """Def. 4 for the given fresh vertices at every layer — each neighbor's
+    value-rank distance is <= o^l against the CURRENT WBT — plus degree
+    bounds, id validity and no self loops."""
+    ranks = {float(val): i for i, val in enumerate(idx.wbt.in_order())}
+    n = idx.store.n
+    for vid in np.asarray(vids).tolist():
+        ra = ranks[float(idx.store.attrs[vid])]
+        for l in range(idx.graph.num_layers):
+            nbrs = idx.graph.neighbors(l, int(vid))
+            assert len(nbrs) <= idx.params.m
+            assert np.all((nbrs >= 0) & (nbrs < n))
+            assert vid not in set(nbrs.tolist())
+            for j in nbrs:
+                rj = ranks[float(idx.store.attrs[j])]
+                assert abs(rj - ra) <= idx.params.o**l, (l, ra, rj)
+
+
+def assert_degree_bounds(idx: WoWIndex) -> None:
+    """No vertex in any layer exceeds the m out-degree cap."""
+    n = idx.store.n
+    for l in range(idx.graph.num_layers):
+        if n:
+            assert idx.graph.counts[l][:n].max() <= idx.params.m
+
+
+def assert_graph_equal(a: WoWIndex, b: WoWIndex, label: str = "") -> None:
+    """Bitwise equality of two indexes' adjacency arenas and degree counts
+    (the sharded-vs-device acceptance gate)."""
+    assert a.graph.num_layers == b.graph.num_layers, label
+    for l in range(a.graph.num_layers):
+        assert np.array_equal(a.graph.layers[l], b.graph.layers[l]), (
+            f"{label}: layer {l} adjacency differs"
+        )
+        assert np.array_equal(a.graph.counts[l], b.graph.counts[l]), (
+            f"{label}: layer {l} degree counts differ"
+        )

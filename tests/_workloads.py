@@ -1,0 +1,30 @@
+"""Named attribute/workload regimes for the construction test suites.
+
+The generators live in ``repro.core.datasets`` (next to
+``make_vectors``/``make_attrs``/``make_ranges`` they build on, so the
+benchmarks can use them without reaching into the test tree); this module
+is the test-side entry point the equivalence harness imports:
+
+  * ``random``             — attribute is a random permutation rank (no
+                             vector correlation; the default everywhere);
+  * ``correlated``         — attribute follows a vector projection: near
+                             vectors tend to pass the same filter (Fig. 8);
+  * ``anticorrelated``     — near vectors land at opposite attribute
+                             extremes (Fig. 8's hard regime);
+  * ``clustered``          — attribute values clump around a few centers
+                             (non-uniform value spacing: windows cover wildly
+                             different value densities);
+  * ``duplicate_heavy``    — ~n/20 unique values (Fig. 12: duplicates share
+                             a WBT rank, only vectors enter the graphs);
+  * ``adversarial_sorted`` — the insertion *stream* arrives in ascending
+                             attribute order, the worst case for incremental
+                             window maintenance (every insert lands at the
+                             moving frontier of the value set).
+"""
+from __future__ import annotations
+
+from repro.core.datasets import (  # noqa: F401  (re-exported test API)
+    REGIMES,
+    make_regime_workload,
+    regime_attrs,
+)

@@ -39,7 +39,12 @@ def _run_subprocess(code: str, devices: int = 8, timeout: int = 420) -> str:
 
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    here = os.path.dirname(__file__)
+    # src for repro, the tests dir for the shared helper modules
+    # (_invariants/_workloads), so snippets reuse the same checkers
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), here]
+    )
     res = subprocess.run(
         [sys.executable, "-c", code],
         capture_output=True, text=True, timeout=timeout, env=env,

@@ -1,46 +1,22 @@
 """Batched construction (``WoWIndex.insert_batch``): batched-vs-sequential
 recall parity across selectivity bands, window invariants (Def. 4) per layer,
 bootstrap from empty, duplicate-value workloads, dtype unification, and
-snapshot refresh under deletes."""
+snapshot refresh under deletes.  Shared invariant checks live in
+``tests/_invariants.py`` (also used by ``test_device_build`` and the
+cross-backend harness ``test_build_equivalence``)."""
 import numpy as np
 import pytest
 
 from repro.core import WoWIndex, brute_force, make_workload, recall
 from repro.core.snapshot import take_snapshot
 
-
-def _build(wl, batch_size=None, backend="numpy", **kw):
-    idx = WoWIndex(dim=wl.vectors.shape[1], **kw)
-    if batch_size is None:
-        for v, a in zip(wl.vectors, wl.attrs):
-            idx.insert(v, a)
-    else:
-        idx.insert_batch(wl.vectors, wl.attrs, batch_size=batch_size,
-                         backend=backend)
-    return idx
-
-
-def _band_recalls(idx, wl, fractions, k=10, ef=80, per_band=12, seed=3):
-    """Mean recall@k per selectivity band (ranges drawn like the workload's)."""
-    n = len(wl.attrs)
-    sorted_a = np.sort(wl.attrs)
-    rng = np.random.default_rng(seed)
-    out = {}
-    for frac in fractions:
-        recs = []
-        for i in range(per_band):
-            n_in = max(5, int(n * frac))
-            s = int(rng.integers(0, n - n_in + 1))
-            r = (sorted_a[s], sorted_a[s + n_in - 1])
-            q = wl.queries[i % len(wl.queries)]
-            ids, _, _ = idx.search(q, r, k=k, ef=ef)
-            gold = brute_force(
-                idx.store.vectors[: idx.store.n],
-                idx.store.attrs[: idx.store.n], q, r, k,
-            )
-            recs.append(recall(ids, gold))
-        out[frac] = float(np.mean(recs))
-    return out
+from _invariants import (
+    assert_band_parity,
+    assert_degree_bounds,
+    assert_window_invariants,
+    band_recalls as _band_recalls,
+    build_index as _build,
+)
 
 
 def test_batched_vs_sequential_recall_parity():
@@ -51,13 +27,8 @@ def test_batched_vs_sequential_recall_parity():
     kw = dict(m=12, ef_construction=48, o=4, seed=0)
     seq = _build(wl, None, **kw)
     bat = _build(wl, 96, **kw)
-    bands = [1.0, 0.25, 0.05]
-    r_seq = _band_recalls(seq, wl, bands)
-    r_bat = _band_recalls(bat, wl, bands)
-    for frac in bands:
-        assert r_bat[frac] >= r_seq[frac] - 0.01, (
-            f"band {frac}: batched {r_bat[frac]:.4f} vs seq {r_seq[frac]:.4f}"
-        )
+    assert_band_parity(_band_recalls(seq, wl), _band_recalls(bat, wl),
+                       label="batched")
 
 
 def test_batched_window_invariants_per_layer():
@@ -70,21 +41,9 @@ def test_batched_window_invariants_per_layer():
     for s in range(0, len(wl.attrs), bs):
         vids = idx.insert_batch(wl.vectors[s:s + bs], wl.attrs[s:s + bs],
                                 batch_size=bs)
-        ranks = {float(val): i for i, val in enumerate(idx.wbt.in_order())}
-        n = idx.store.n
-        for vid in vids.tolist():
-            ra = ranks[float(idx.store.attrs[vid])]
-            for l in range(idx.graph.num_layers):
-                nbrs = idx.graph.neighbors(l, vid)
-                assert len(nbrs) <= idx.params.m
-                assert np.all((nbrs >= 0) & (nbrs < n))
-                assert vid not in set(nbrs.tolist())
-                for j in nbrs:
-                    rj = ranks[float(idx.store.attrs[j])]
-                    assert abs(rj - ra) <= idx.params.o**l, (l, ra, rj)
+        assert_window_invariants(idx, vids)
         # back-edge targets also stay within degree bounds
-        for l in range(idx.graph.num_layers):
-            assert idx.graph.counts[l][:n].max() <= idx.params.m
+        assert_degree_bounds(idx)
 
 
 def test_batched_bootstrap_from_empty_and_single_call():

@@ -1,0 +1,267 @@
+"""Cross-backend build-equivalence conformance harness.
+
+Every ``insert_batch`` phase-1 engine (host numpy, host+ops kernel, device
+hop pipeline, sharded device pipeline at 1/2/8 shards) must build the same
+graph quality from the same stream: per-band recall parity <= 0.01 vs the
+sequential Alg. 1 oracle, Def. 4 window invariants on every fresh vertex,
+and — for the sharded backend — a graph *bitwise identical* to
+``backend="device"`` at every shard count.  Workloads come from the shared
+regime generators (``tests/_workloads.py``, the Fig. 8 regimes); invariant
+checks from ``tests/_invariants.py``.  Multi-shard runs execute in a
+subprocess with 8 forced host-platform devices (see ``conftest``).
+"""
+import numpy as np
+import pytest
+
+from repro.core import WoWIndex, make_workload
+from repro.core.index import INSERT_BACKENDS
+
+from _invariants import (
+    assert_band_parity,
+    assert_degree_bounds,
+    assert_graph_equal,
+    assert_window_invariants,
+    band_recalls,
+    build_index,
+)
+from _workloads import REGIMES, make_regime_workload
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # image has no hypothesis; see the stub
+    from _hypothesis_stub import given, settings, st
+
+KW = dict(m=12, ef_construction=48, o=4, seed=0)
+# in-process backends (sharded runs on a 1-device build mesh here; the
+# multi-shard twin is the subprocess test below)
+BACKENDS = [("numpy", None), ("ops", None), ("device", None), ("sharded", 1)]
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return make_workload(n=600, d=16, nq=24, seed=0, k=10)
+
+
+@pytest.fixture(scope="module")
+def seq_bands(wl):
+    seq = build_index(wl, None, **KW)
+    return band_recalls(seq, wl)
+
+
+@pytest.mark.parametrize("backend,shards", BACKENDS)
+def test_recall_parity_vs_sequential(wl, seq_bands, backend, shards):
+    """The conformance bar: every backend within 0.01 of the sequential
+    oracle's recall@10 in every selectivity band."""
+    idx = build_index(wl, 96, backend=backend, shards=shards, **KW)
+    assert_band_parity(seq_bands, band_recalls(idx, wl), label=backend)
+
+
+@pytest.mark.parametrize("backend,shards", BACKENDS)
+def test_window_invariants_per_backend(backend, shards):
+    """Def. 4 + degree bounds on every fresh vertex of every micro-batch,
+    for every backend."""
+    wl = make_regime_workload("random", n=320, d=10, nq=1, seed=2,
+                              with_gt=False)
+    idx = WoWIndex(dim=10, m=8, ef_construction=32, o=4, seed=1)
+    bs = 80
+    extra = {"shards": shards} if shards is not None else {}
+    for s in range(0, 320, bs):
+        vids = idx.insert_batch(wl.vectors[s:s + bs], wl.attrs[s:s + bs],
+                                batch_size=bs, backend=backend, **extra)
+        assert_window_invariants(idx, vids)
+        assert_degree_bounds(idx)
+
+
+def test_sharded_bitwise_matches_device_at_one_shard():
+    """Sharded phase 1 is the device pipeline behind shard_map: at shard
+    count 1 the committed graph must be bitwise identical."""
+    wl = make_regime_workload("random", n=400, d=10, nq=1, seed=3,
+                              with_gt=False)
+    kw = dict(m=8, ef_construction=32, o=4, seed=0)
+    dev = build_index(wl, 96, backend="device", **kw)
+    shd = build_index(wl, 96, backend="sharded", shards=1, **kw)
+    assert_graph_equal(dev, shd, "sharded@1 vs device")
+
+
+def test_sharded_bitwise_matches_device_at_2_and_8_shards(run_subprocess):
+    """The tentpole acceptance gate: sharded builds over 2 and 8
+    host-platform devices produce graphs bitwise identical to the
+    single-device ``backend="device"`` build (phase-1 all-gather +
+    deterministic phase-2 reduction are shard-count-invariant)."""
+    code = """
+import numpy as np
+from repro.core import make_workload
+from _invariants import assert_graph_equal, build_index
+wl = make_workload(n=500, d=10, nq=1, seed=0, with_gt=False)
+kw = dict(m=8, ef_construction=32, o=4, seed=0)
+dev = build_index(wl, 96, backend="device", **kw)
+for s in (2, 8):
+    shd = build_index(wl, 96, backend="sharded", shards=s, **kw)
+    assert shd._arena.num_shards == s
+    assert_graph_equal(dev, shd, f"sharded@{s} vs device")
+    # the replicated arena stayed delta-maintained across micro-batches
+    assert shd._arena.stats["rows_scattered"] > 0
+print("OK bitwise 2/8")
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK bitwise 2/8" in out
+
+
+@pytest.mark.parametrize("regime", sorted(REGIMES))
+def test_sharded_regime_recall_parity(regime):
+    """Per-band recall parity vs sequential on every workload regime —
+    correlation, clustering, duplicates and adversarial stream order must
+    not open a quality gap for the sharded builder."""
+    wl = make_regime_workload(regime, n=400, d=12, nq=16, seed=1, k=10)
+    kw = dict(m=12, ef_construction=48, o=4, seed=0)
+    seq = build_index(wl, None, **kw)
+    shd = build_index(wl, 96, backend="sharded", shards=1, **kw)
+    assert_band_parity(
+        band_recalls(seq, wl, per_band=10),
+        band_recalls(shd, wl, per_band=10),
+        label=regime,
+    )
+
+
+# ---------------------------------------------------------- satellite gates
+def test_unknown_backend_raises_listing_registered():
+    """Regression: an unknown ``backend=`` raises (never a silent numpy
+    fall-through) and the message names every registered backend."""
+    idx = WoWIndex(dim=4, m=4, ef_construction=8)
+    with pytest.raises(ValueError) as ei:
+        idx.insert_batch(np.zeros((2, 4), np.float32), np.arange(2.0),
+                         backend="cuda")
+    msg = str(ei.value)
+    for b in INSERT_BACKENDS:
+        assert b in msg, f"registered backend {b!r} missing from: {msg}"
+    assert idx.store.n == 0  # nothing was inserted before the raise
+
+
+def test_shards_arg_only_valid_for_sharded_backend():
+    idx = WoWIndex(dim=4, m=4, ef_construction=8)
+    with pytest.raises(ValueError, match="sharded"):
+        idx.insert_batch(np.zeros((2, 4), np.float32), np.arange(2.0),
+                         backend="numpy", shards=2)
+    # device_width is a device/sharded knob too — no silent no-op on host
+    with pytest.raises(ValueError, match="device_width"):
+        idx.insert_batch(np.zeros((2, 4), np.float32), np.arange(2.0),
+                         backend="numpy", device_width=8)
+
+
+def test_search_candidates_batch_unknown_backend_raises():
+    """The host engine itself also validates (it used to treat any unknown
+    string as the numpy path)."""
+    from repro.core.search import search_candidates_batch
+
+    wl = make_regime_workload("random", n=60, d=6, nq=1, seed=0,
+                              with_gt=False)
+    idx = build_index(wl, 30, m=4, ef_construction=16, o=4, seed=0)
+    with pytest.raises(ValueError, match="registered backends"):
+        search_candidates_batch(
+            idx.store, idx.graph, idx.store.vectors[:2],
+            np.zeros(2, np.int64), np.tile([[0.0, 60.0]], (2, 1)),
+            l_min=0, l_max=idx.graph.top, width=8, backend="cudnn",
+        )
+
+
+def test_adaptive_filter_sharded_matches_single_device(run_subprocess):
+    """Satellite: ``make_serving_fn`` reduces the hop histogram across
+    shards (psum) and re-sizes the visited filter from it — the sharded
+    and single-device adaptive sizings must agree exactly."""
+    code = """
+import jax, numpy as np
+from repro.core import WoWIndex, make_workload
+from repro.core.snapshot import take_snapshot
+from repro.core.distributed import make_serving_fn
+from repro.core.device_search import visited_filter_bits
+wl = make_workload(n=500, d=8, nq=24, seed=0, k=5)
+idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=0)
+idx.insert_batch(wl.vectors, wl.attrs, batch_size=128)
+snap = take_snapshot(idx)
+mk = lambda shape: jax.make_mesh(
+    shape, ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+s_m = make_serving_fn(mk((4, 2)), snap, k=5, width=32, visited="hash",
+                      visited_adaptive=True)
+s_1 = make_serving_fn(mk((1, 1)), snap, k=5, width=32, visited="hash",
+                      visited_adaptive=True)
+r_m = s_m(wl.queries, wl.ranges)
+r_1 = s_1(wl.queries, wl.ranges)
+assert np.array_equal(np.asarray(r_m.ids), np.asarray(r_1.ids))
+assert np.array_equal(s_m.state["hist"], s_1.state["hist"]), (
+    "cross-shard hop histogram disagrees with single-device")
+assert int(s_m.state["hist"].sum()) == len(wl.queries)  # padding excluded
+assert s_m.state["bits"] == s_1.state["bits"]
+assert s_m.state["bits"] <= visited_filter_bits(32, 8, 8 * 32 + 64)
+r2_m = s_m(wl.queries, wl.ranges)  # second wave runs at the adapted size
+r2_1 = s_1(wl.queries, wl.ranges)
+assert np.array_equal(np.asarray(r2_m.ids), np.asarray(r2_1.ids))
+print("OK adaptive", s_m.state["bits"])
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK adaptive" in out
+
+
+def test_visited_filter_bits_from_hist_matches_measured():
+    """The histogram-native sizing (what the sharded serving path computes
+    from the psum'd bins) sizes identically to the per-sample
+    ``visited_filter_bits_measured`` for the same data."""
+    from repro.core.device_search import (
+        visited_filter_bits_from_hist,
+        visited_filter_bits_measured,
+    )
+
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        hops = rng.integers(0, 120, size=int(rng.integers(1, 400)))
+        hist = np.bincount(hops, minlength=200)
+        assert visited_filter_bits_from_hist(hist, 16) == (
+            visited_filter_bits_measured(hops, 16)
+        )
+    # empty history degrades to the floor on both entry points
+    assert visited_filter_bits_from_hist(np.zeros(10, np.int64), 16) == (
+        visited_filter_bits_measured(np.asarray([]), 16)
+    )
+
+
+# ------------------------------------------------- workload-generator gates
+def test_workload_regimes_structural_properties():
+    """Each regime generator actually produces its advertised structure."""
+    for regime in sorted(REGIMES):
+        w = make_regime_workload(regime, n=200, d=6, nq=4, seed=0, k=5)
+        assert w.vectors.shape == (200, 6)
+        assert w.attrs.shape == (200,)
+        assert w.gt is not None and len(w.gt) == 4
+        assert np.all(w.ranges[:, 0] <= w.ranges[:, 1])
+    dup = make_regime_workload("duplicate_heavy", n=200, d=6, nq=1, seed=0,
+                               with_gt=False)
+    assert len(np.unique(dup.attrs)) <= 200 // 10
+    srt = make_regime_workload("adversarial_sorted", n=200, d=6, nq=1,
+                               seed=0, with_gt=False)
+    assert np.all(np.diff(srt.attrs) >= 0)  # ascending insertion stream
+    clu = make_regime_workload("clustered", n=200, d=6, nq=1, seed=0,
+                               with_gt=False)
+    # clumped values: the largest value gap dwarfs the median gap
+    gaps = np.diff(np.sort(np.unique(clu.attrs)))
+    assert gaps.max() > 10 * np.median(gaps)
+
+
+def test_workload_unknown_regime_raises():
+    with pytest.raises(ValueError, match="registered regimes"):
+        make_regime_workload("zipfian", n=50, d=4, nq=1, with_gt=False)
+
+
+@settings(max_examples=4)
+@given(st.integers(0, 10**6), st.integers(120, 260))
+def test_property_batched_build_invariants(seed, n):
+    """Property test over random (regime, seed, n) draws: a batched build
+    always satisfies the window invariants and degree bounds."""
+    regime = sorted(REGIMES)[seed % len(REGIMES)]
+    w = make_regime_workload(regime, n=n, d=8, nq=1, seed=seed,
+                             with_gt=False)
+    idx = WoWIndex(dim=8, m=8, ef_construction=32, o=4, seed=seed % 97)
+    vids = idx.insert_batch(w.vectors, w.attrs, batch_size=64)
+    assert len(vids) == n
+    # Def. 4 is an at-insert-time invariant: only the FINAL micro-batch's
+    # vertices are guaranteed to satisfy it against the final value set
+    assert_window_invariants(idx, vids[n - (n % 64 or 64):])
+    assert_degree_bounds(idx)

@@ -11,27 +11,12 @@ import pytest
 from repro.core import WoWIndex, brute_force, make_workload, recall
 from repro.core.snapshot import take_snapshot
 
-
-def _band_recalls(idx, wl, fractions, k=10, ef=80, per_band=12, seed=3):
-    n = len(wl.attrs)
-    sorted_a = np.sort(wl.attrs)
-    rng = np.random.default_rng(seed)
-    out = {}
-    for frac in fractions:
-        recs = []
-        for i in range(per_band):
-            n_in = max(5, int(n * frac))
-            s = int(rng.integers(0, n - n_in + 1))
-            r = (sorted_a[s], sorted_a[s + n_in - 1])
-            q = wl.queries[i % len(wl.queries)]
-            ids, _, _ = idx.search(q, r, k=k, ef=ef)
-            gold = brute_force(
-                idx.store.vectors[: idx.store.n],
-                idx.store.attrs[: idx.store.n], q, r, k,
-            )
-            recs.append(recall(ids, gold))
-        out[frac] = float(np.mean(recs))
-    return out
+from _invariants import (
+    assert_band_parity,
+    assert_window_invariants,
+    band_recalls as _band_recalls,
+    build_index as _build,
+)
 
 
 def test_device_build_vs_sequential_recall_parity_per_band():
@@ -39,18 +24,10 @@ def test_device_build_vs_sequential_recall_parity_per_band():
     sequential oracle's recall@10 within 0.01 in every selectivity band."""
     wl = make_workload(n=700, d=16, nq=24, seed=0, k=10)
     kw = dict(m=12, ef_construction=48, o=4, seed=0)
-    seq = WoWIndex(dim=16, **kw)
-    for v, a in zip(wl.vectors, wl.attrs):
-        seq.insert(v, a)
-    dev = WoWIndex(dim=16, **kw)
-    dev.insert_batch(wl.vectors, wl.attrs, batch_size=96, backend="device")
-    bands = [1.0, 0.25, 0.05]
-    r_seq = _band_recalls(seq, wl, bands)
-    r_dev = _band_recalls(dev, wl, bands)
-    for frac in bands:
-        assert r_dev[frac] >= r_seq[frac] - 0.01, (
-            f"band {frac}: device {r_dev[frac]:.4f} vs seq {r_seq[frac]:.4f}"
-        )
+    seq = _build(wl, None, **kw)
+    dev = _build(wl, 96, backend="device", **kw)
+    assert_band_parity(_band_recalls(seq, wl), _band_recalls(dev, wl),
+                       label="device")
 
 
 def test_device_build_narrow_beam_parity():
@@ -58,17 +35,10 @@ def test_device_build_narrow_beam_parity():
     CPU-throughput operating point — still passes the parity gate."""
     wl = make_workload(n=600, d=16, nq=20, seed=1, k=10)
     kw = dict(m=12, ef_construction=48, o=4, seed=0)
-    seq = WoWIndex(dim=16, **kw)
-    for v, a in zip(wl.vectors, wl.attrs):
-        seq.insert(v, a)
-    dev = WoWIndex(dim=16, **kw)
-    dev.insert_batch(wl.vectors, wl.attrs, batch_size=128, backend="device",
-                     device_width=12)
-    bands = [1.0, 0.25, 0.05]
-    r_seq = _band_recalls(seq, wl, bands)
-    r_dev = _band_recalls(dev, wl, bands)
-    for frac in bands:
-        assert r_dev[frac] >= r_seq[frac] - 0.01
+    seq = _build(wl, None, **kw)
+    dev = _build(wl, 128, backend="device", device_width=12, **kw)
+    assert_band_parity(_band_recalls(seq, wl), _band_recalls(dev, wl),
+                       label="device narrow")
 
 
 def test_delta_arena_bitwise_equality_per_micro_batch():
@@ -267,18 +237,7 @@ def test_device_build_window_invariants():
     for s in range(0, 400, bs):
         vids = idx.insert_batch(wl.vectors[s:s + bs], wl.attrs[s:s + bs],
                                 batch_size=bs, backend="device")
-        ranks = {float(val): i for i, val in enumerate(idx.wbt.in_order())}
-        n = idx.store.n
-        for vid in vids.tolist():
-            ra = ranks[float(idx.store.attrs[vid])]
-            for l in range(idx.graph.num_layers):
-                nbrs = idx.graph.neighbors(l, vid)
-                assert len(nbrs) <= idx.params.m
-                assert np.all((nbrs >= 0) & (nbrs < n))
-                assert vid not in set(nbrs.tolist())
-                for j in nbrs:
-                    rj = ranks[float(idx.store.attrs[j])]
-                    assert abs(rj - ra) <= idx.params.o**l, (l, ra, rj)
+        assert_window_invariants(idx, vids)
 
 
 def test_compact_rows_tombstone_compaction():
