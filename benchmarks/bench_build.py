@@ -131,6 +131,73 @@ def _pick_device_width(wl, kw, seq_bands, dim) -> tuple[int, dict]:
     return ef, bands  # full width is the always-correct fallback
 
 
+def _bench_persistence(regime: str = "random") -> dict:
+    """Durable-lifecycle timings (the ``persistence`` key of
+    ``BENCH_build.json``): full vs incremental checkpoint save, checkpoint
+    load, crash recovery (checkpoint + WAL-suffix replay), and the
+    serve-from-checkpoint cold-start-to-first-query latency."""
+    import shutil
+    import tempfile
+
+    from repro.core import WoWIndex
+    from repro.core.device_search import search_batch
+    from repro.persist import load, load_serving_snapshot, open_durable, recover, save
+
+    n = BENCH_N // 4
+    wl = _regime_workload(regime, n=n, nq=8)
+    kw = dict(m=16, ef_construction=64, o=4, seed=0)
+    tail = max(n // 16, 1)  # steady-state mutation interval between ckpts
+    out = {"n": n, "delta_rows": tail}
+    root = tempfile.mkdtemp(prefix="wow-persist-")
+    root2 = tempfile.mkdtemp(prefix="wow-recover-")
+    try:
+        idx = WoWIndex(dim=BENCH_D, **kw)
+        idx.insert_batch(wl.vectors, wl.attrs, batch_size=_BATCH)
+        t0 = time.perf_counter()
+        path = save(idx, root, incremental=False)
+        out["full_save_ms"] = round((time.perf_counter() - t0) * 1e3, 1)
+        out["checkpoint_bytes"] = sum(
+            os.path.getsize(os.path.join(path, f)) for f in os.listdir(path)
+        )
+        idx.insert_batch(wl.vectors[:tail] + 0.5, wl.attrs[:tail] + 1.0,
+                         batch_size=_BATCH)
+        t0 = time.perf_counter()
+        save(idx, root, incremental=True)
+        out["delta_save_ms"] = round((time.perf_counter() - t0) * 1e3, 1)
+        t0 = time.perf_counter()
+        load(root)
+        out["load_ms"] = round((time.perf_counter() - t0) * 1e3, 1)
+
+        # recovery: checkpoint + a WAL suffix of one mutation interval
+        idx2 = open_durable(root2, create=dict(dim=BENCH_D, **kw))
+        idx2.insert_batch(wl.vectors, wl.attrs, batch_size=_BATCH)
+        idx2.checkpoint(root2)
+        idx2.insert_batch(wl.vectors[:tail] + 0.5, wl.attrs[:tail] + 1.0,
+                          batch_size=_BATCH)
+        idx2._wal.close()
+        t0 = time.perf_counter()
+        recover(root2)
+        out["recover_ms"] = round((time.perf_counter() - t0) * 1e3, 1)
+
+        # cold start: mmap the newest full checkpoint + first serve wave
+        t0 = time.perf_counter()
+        snap, _ = load_serving_snapshot(root2)
+        out["cold_load_ms"] = round((time.perf_counter() - t0) * 1e3, 1)
+        search_batch(snap, wl.queries, wl.ranges, k=10, width=64,
+                     backend="auto")
+        out["cold_first_query_ms"] = round((time.perf_counter() - t0) * 1e3, 1)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+        shutil.rmtree(root2, ignore_errors=True)
+    emit("persist_full_save", out["full_save_ms"],
+         f"bytes={out['checkpoint_bytes']}")
+    emit("persist_delta_save", out["delta_save_ms"], f"rows={tail}")
+    emit("persist_recover", out["recover_ms"], f"n={n}")
+    emit("persist_cold_first_query", out["cold_first_query_ms"],
+         f"load={out['cold_load_ms']}")
+    return out
+
+
 def run(regime: str = "random") -> list[list]:
     """Full tracked run: always measures sequential + batched + device +
     sharded (the ``--backend`` flag only selects which SMOKE gate runs)."""
@@ -290,6 +357,7 @@ def run(regime: str = "random") -> list[list]:
                      "o": 4, "regime": regime},
         "builds": builds,
         "parity": parity,
+        "persistence": _bench_persistence(regime),
     }
     with open(os.path.join(_REPO_ROOT, "BENCH_build.json"), "w") as f:
         json.dump(record, f, indent=1)
@@ -441,8 +509,23 @@ def main() -> None:
                     help="workload regime from tests/_workloads.py "
                          "(random, correlated, anticorrelated, clustered, "
                          "duplicate_heavy, adversarial_sorted)")
+    ap.add_argument("--persist-only", action="store_true",
+                    help="re-measure only the durable-lifecycle timings "
+                         "(checkpoint save/load, recovery, cold start) and "
+                         "update the 'persistence' key of BENCH_build.json "
+                         "in place, leaving the build columns untouched")
     args = ap.parse_args()
-    if args.smoke and args.backend == "sharded":
+    if args.persist_only:
+        path = os.path.join(_REPO_ROOT, "BENCH_build.json")
+        record = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                record = json.load(f)
+        record["persistence"] = _bench_persistence(args.regime)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"persistence: {record['persistence']}")
+    elif args.smoke and args.backend == "sharded":
         _run_smoke_sharded(args.regime)
     elif args.smoke and args.backend == "device":
         _run_smoke_device(args.regime)

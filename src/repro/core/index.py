@@ -39,6 +39,7 @@ The sequential ``insert`` path is unchanged and remains the parity oracle
 from __future__ import annotations
 
 import bisect
+import logging
 import math
 from dataclasses import dataclass, field
 
@@ -60,6 +61,8 @@ from .store import BuildStats, SearchStats, VectorStore
 #: registered ``insert_batch`` phase-1 engines; an unknown ``backend=``
 #: raises ``ValueError`` naming these (never a silent numpy fall-through).
 INSERT_BACKENDS = ("numpy", "ops", "device", "sharded")
+
+_log = logging.getLogger("repro.core.index")
 
 
 @dataclass
@@ -86,6 +89,7 @@ class WoWIndex:
         o: int = 4,
         metric: str = "l2",
         seed: int = 0,
+        compact_threshold: float | None = None,
     ):
         self.params = WoWParams(m, ef_construction, o, metric, seed)
         self.store = VectorStore(dim, metric=metric)
@@ -119,6 +123,28 @@ class WoWIndex:
         # (take_snapshot(prev=...)): "all" forces a full rebuild; reset by
         # every take_snapshot, fed by the batched commit.
         self._snap_tracker: dict = {"stamp": -1, "all": True, "dirty": {}}
+        # second dirty-row tracker for incremental checkpointing
+        # (repro.persist.checkpoint): same feed, independent reset — the
+        # snapshot consumer resetting its tracker must not blind the
+        # checkpoint consumer.  Unlike the snapshot tracker, deletes do NOT
+        # invalidate it (checkpoints serialize tombstones separately; the
+        # graph arrays are untouched by a mark-based delete).
+        self._ckpt_tracker: dict = {"stamp": -1, "all": True, "dirty": {}}
+        # durable lifecycle (repro.persist): attached write-ahead log,
+        # replay guard, and the LSN of the last logged-and-applied record
+        self._wal = None
+        self._wal_replaying = False
+        self._applied_lsn = 0
+        # background compaction cadence policy: auto-trigger compact_rows()
+        # when len(deleted)/n crosses the threshold, checked at
+        # insert_batch and checkpoint boundaries.  The latch
+        # (_compact_dead_done = len(deleted) at the last compaction) stops
+        # re-triggering until NEW tombstones accumulate — compact_rows
+        # never shrinks ``deleted``, so the raw fraction alone would
+        # re-fire on every batch.
+        self.compact_threshold = compact_threshold
+        self._compact_dead_done = 0
+        self.compactions = 0  # auto-triggered compaction count
 
     # ------------------------------------------------------------ properties
     def __len__(self) -> int:
@@ -142,6 +168,13 @@ class WoWIndex:
         p = self.params
         m, o, omega_c = p.m, p.o, p.ef_construction
         attr = float(attr)
+        vec = np.asarray(vec, dtype=np.float32)
+        self._validate_ingest(vec.reshape(1, -1),
+                              np.asarray([attr], dtype=np.float64))
+        if self._wal is not None and not self._wal_replaying:
+            lsn = self._wal.log_seq_insert(vec.reshape(-1), attr)
+        else:
+            lsn = None
         is_new_value = not self.wbt.contains(attr)
         u_after = self.wbt.n + (1 if is_new_value else 0)
 
@@ -212,12 +245,15 @@ class WoWIndex:
         self._note_live_insert(attr)
         self.mutations += 1
         self._snap_tracker["all"] = True  # row-level dirt untracked here
+        self._ckpt_tracker["all"] = True
         for l in range(top + 1):
             sel = neighbors_per_layer[l]
             if sel:
                 self.graph.set_neighbors(
                     l, vid, np.asarray([j for _, j in sel], dtype=np.int32)
                 )
+        if lsn is not None:
+            self._applied_lsn = lsn
         return vid
 
     def insert_batch(
@@ -304,13 +340,78 @@ class WoWIndex:
             raise ValueError(f"{len(vectors)} vectors vs {len(attrs)} attrs")
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
-        out = [
-            self._insert_micro_batch(vectors[s : s + batch_size],
-                                     attrs[s : s + batch_size], backend,
-                                     device_width, shards)
-            for s in range(0, len(attrs), batch_size)
-        ]
+        # reject the whole batch BEFORE any WBT/graph/WAL mutation: a bad
+        # row must never leave a half-committed micro-batch behind
+        self._validate_ingest(vectors, attrs)
+        # insert_batch is a compaction-cadence boundary (checked up front:
+        # the tombstone fraction only decreases within this call, so the
+        # per-call check replays deterministically record by record)
+        self._maybe_auto_compact()
+        log_wal = self._wal is not None and not self._wal_replaying
+        out = []
+        for s in range(0, len(attrs), batch_size):
+            vs = vectors[s : s + batch_size]
+            as_ = attrs[s : s + batch_size]
+            if log_wal:
+                # log -> fsync -> apply: a crash mid-apply replays the
+                # record; a crash before the append loses only this
+                # in-flight micro-batch (it was never acknowledged)
+                lsn = self._wal.log_insert(vs, as_, backend=backend,
+                                           device_width=device_width,
+                                           shards=shards)
+            out.append(
+                self._insert_micro_batch(vs, as_, backend, device_width,
+                                         shards)
+            )
+            if log_wal:
+                self._applied_lsn = lsn
         return (np.concatenate(out) if out else np.empty(0, dtype=np.int64))
+
+    def _validate_ingest(self, vectors: np.ndarray, attrs: np.ndarray) -> None:
+        """Ingest input validation (raises ``ValueError`` before any state
+        is touched): attribute values must be finite (NaN/inf would poison
+        the WBT's total order and every window bound), vectors must match
+        the store dimension and be finite (a NaN row turns every distance
+        involving it into NaN, silently corrupting neighbor selection)."""
+        if vectors.ndim != 2 or vectors.shape[1] != self.store.dim:
+            raise ValueError(
+                f"vectors have dimension {vectors.shape[-1] if vectors.ndim else 0}, "
+                f"index expects {self.store.dim}"
+            )
+        if attrs.size and not np.isfinite(attrs).all():
+            bad = np.nonzero(~np.isfinite(attrs))[0]
+            raise ValueError(
+                f"non-finite attribute value(s) at row(s) "
+                f"{bad[:8].tolist()}{'...' if bad.size > 8 else ''}"
+            )
+        if vectors.size and not np.isfinite(vectors).all():
+            bad = np.nonzero(~np.isfinite(vectors).all(axis=1))[0]
+            raise ValueError(
+                f"non-finite vector component(s) at row(s) "
+                f"{bad[:8].tolist()}{'...' if bad.size > 8 else ''}"
+            )
+
+    def _maybe_auto_compact(self) -> None:
+        """Background compaction cadence policy: run ``compact_rows`` when
+        the tombstone fraction reaches ``compact_threshold`` and new
+        tombstones accumulated since the last pass.  Called at
+        ``insert_batch`` and checkpoint boundaries; a WAL replay skips it —
+        every triggered pass was itself logged as a COMPACT record, so
+        replay reproduces compactions exactly where they happened."""
+        thr = self.compact_threshold
+        if thr is None or self._wal_replaying or self.store.n == 0:
+            return
+        nd = len(self.deleted)
+        if nd <= self._compact_dead_done or nd / self.store.n < thr:
+            return
+        rebuilt = self.compact_rows()
+        self.compactions += 1
+        _log.info(
+            "auto compaction #%d: tombstone fraction %.3f >= %.3f, "
+            "%d rows rebuilt (%d tombstones, n=%d)",
+            self.compactions, nd / self.store.n, thr, rebuilt, nd,
+            self.store.n,
+        )
 
     def _insert_micro_batch(
         self,
@@ -698,10 +799,10 @@ class WoWIndex:
             self._slab.apply_deltas(self.graph, dirty_np)
         if arena is not None:
             arena.apply_deltas(self, dirty_np)
-        tr = self._snap_tracker
-        if not tr["all"]:
-            for l, rows in dirty_np.items():
-                tr["dirty"].setdefault(l, []).append(rows)
+        for tr in (self._snap_tracker, self._ckpt_tracker):
+            if not tr["all"]:
+                for l, rows in dirty_np.items():
+                    tr["dirty"].setdefault(l, []).append(rows)
 
     def _resolve_back_edge_overflow(
         self,
@@ -985,6 +1086,8 @@ class WoWIndex:
         vid = int(vid)
         if not (0 <= vid < self.store.n) or vid in self.deleted:
             return
+        if self._wal is not None and not self._wal_replaying:
+            self._applied_lsn = self._wal.log_delete(vid)
         self.deleted.add(vid)
         self.mutations += 1
         # any change to the live set invalidates incremental snapshot
@@ -1004,6 +1107,8 @@ class WoWIndex:
         vid = int(vid)
         if vid not in self.deleted:
             return
+        if self._wal is not None and not self._wal_replaying:
+            self._applied_lsn = self._wal.log_undelete(vid)
         self.deleted.discard(vid)
         self.mutations += 1
         self._snap_tracker["all"] = True  # live set changed (see delete)
@@ -1028,6 +1133,13 @@ class WoWIndex:
         """
         if not self.deleted or self.store.n == 0:
             return 0
+        if self._wal is not None and not self._wal_replaying:
+            self._applied_lsn = self._wal.log_compact()
+        # compaction-cadence latch: tombstones at this pass are accounted
+        # for — auto-compaction re-fires only once NEW ones accumulate.
+        # Set unconditionally (manual or auto) so a WAL replay of the
+        # COMPACT record reproduces the latch exactly.
+        self._compact_dead_done = len(self.deleted)
         p = self.params
         n = self.store.n
         m = self.graph.m
@@ -1125,6 +1237,24 @@ class WoWIndex:
                 slab_ok,
             )
         return rebuilt
+
+    # ----------------------------------------------------- durable lifecycle
+    @classmethod
+    def recover(cls, root: str) -> "WoWIndex":
+        """Crash recovery: newest valid checkpoint under ``root`` + replay
+        of the valid WAL suffix (torn tails truncated cleanly).  See
+        ``repro.persist.recovery`` — use ``repro.persist.open_durable`` to
+        also attach the WAL for continued durable ingest."""
+        from ..persist.recovery import recover as _recover
+
+        return _recover(root)
+
+    def checkpoint(self, root: str, incremental: bool = True) -> str:
+        """Write a (full or incremental) checkpoint under ``root`` — see
+        ``repro.persist.checkpoint.save``.  Returns the checkpoint path."""
+        from ..persist.checkpoint import save as _save
+
+        return _save(self, root, incremental=incremental)
 
     # ------------------------------------------------------------- reporting
     def memory_bytes(self) -> int:

@@ -236,6 +236,84 @@ def take_snapshot(index, prev: Snapshot | None = None) -> Snapshot:
     )
 
 
+def snapshot_from_arrays(
+    vectors: np.ndarray,
+    sq_norms: np.ndarray,
+    attrs: np.ndarray,
+    neighbors: np.ndarray,
+    deleted: np.ndarray,
+    m: int,
+    o: int,
+    metric: str,
+    stamp: int = -1,
+) -> Snapshot:
+    """Build a serving ``Snapshot`` straight from checkpoint slabs — the
+    serve-from-checkpoint cold start (``repro.persist``), no live index.
+
+    ``vectors``/``sq_norms``/``neighbors`` may be memory-mapped arrays
+    (``np.load(mmap_mode="r")``): with no tombstones they are wrapped
+    as-is — graph rows are left-compacted by construction, exactly the
+    snapshot layout — so serving starts before the slabs are paged in.
+    With tombstones outstanding the dead rows are compacted out host-side
+    (same ops as ``take_snapshot``, hence bitwise the same snapshot).
+    ``attrs`` is the store's f64 slab; only its f32 cast is materialized.
+    """
+    n_all = vectors.shape[0]
+    deleted = np.asarray(deleted, dtype=np.int64)
+    if deleted.size == 0:
+        attrs32 = np.asarray(attrs, dtype=np.float32)
+        order = np.argsort(attrs32, kind="stable")
+        sorted_attrs = attrs32[order]
+        uniq_mask = np.ones(n_all, dtype=bool)
+        uniq_mask[1:] = sorted_attrs[1:] != sorted_attrs[:-1]
+        return Snapshot(
+            vectors=vectors,
+            sq_norms=sq_norms,
+            attrs=attrs32,
+            neighbors=neighbors,
+            uvals=sorted_attrs[uniq_mask].astype(np.float32),
+            uval_rep=order[uniq_mask].astype(np.int32),
+            ids_map=np.arange(n_all, dtype=np.int64),
+            m=m,
+            o=o,
+            metric=metric,
+            stamp=stamp,
+        )
+    dead = set(deleted.tolist())
+    live = np.asarray(
+        [i for i in range(n_all) if i not in dead], dtype=np.int64
+    )
+    if len(live) == 0:
+        raise ValueError("cannot snapshot fully-deleted slabs")
+    n = len(live)
+    remap = np.full(n_all, -1, dtype=np.int32)
+    remap[live] = np.arange(n, dtype=np.int32)
+    vec_c = np.asarray(vectors)[live].astype(np.float32)
+    nrm_c = np.asarray(sq_norms)[live].astype(np.float32)
+    att_c = np.asarray(attrs)[live].astype(np.float32)
+    rows = np.asarray(neighbors)[:, live]
+    mapped = np.where(rows >= 0, remap[np.maximum(rows, 0)], -1)
+    order = np.argsort(mapped < 0, axis=2, kind="stable")
+    nbr_c = np.take_along_axis(mapped, order, axis=2).astype(np.int32)
+    order = np.argsort(att_c, kind="stable")
+    sorted_attrs = att_c[order]
+    uniq_mask = np.ones(n, dtype=bool)
+    uniq_mask[1:] = sorted_attrs[1:] != sorted_attrs[:-1]
+    return Snapshot(
+        vectors=vec_c,
+        sq_norms=nrm_c,
+        attrs=att_c,
+        neighbors=nbr_c,
+        uvals=sorted_attrs[uniq_mask].astype(np.float32),
+        uval_rep=order[uniq_mask].astype(np.int32),
+        ids_map=live,
+        m=m,
+        o=o,
+        metric=metric,
+        stamp=stamp,
+    )
+
+
 class NeighborSlab:
     """Persistent top-down host neighbor slab for the batched build loop.
 

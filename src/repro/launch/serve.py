@@ -65,6 +65,16 @@ def main() -> None:
     ap.add_argument("--compact-rows", action="store_true",
                     help="run the tombstone compaction pass "
                          "(WoWIndex.compact_rows) before serving")
+    ap.add_argument("--index-dir", default="",
+                    help="durable lifecycle root: serve-from-checkpoint cold "
+                         "start when the directory holds checkpoints (mmap'd "
+                         "slabs, no rebuild), otherwise build the index "
+                         "durably (WAL-logged ingest) and checkpoint it there")
+    ap.add_argument("--compact-threshold", type=float, default=None,
+                    help="background compaction cadence: run compact_rows "
+                         "automatically once the tombstone fraction reaches "
+                         "this value (checked at insert_batch / checkpoint "
+                         "boundaries; logged via repro.core.index)")
     args = ap.parse_args()
 
     import numpy as np
@@ -74,29 +84,62 @@ def main() -> None:
 
     wl = make_workload(n=args.n, d=args.dim, nq=args.queries, seed=0,
                        k=args.k)
-    idx = WoWIndex(dim=args.dim, m=args.m, ef_construction=args.ef_construction,
-                   o=args.o, seed=0)
     build_kw = {}
     if args.build_shards > 0:
         if args.build_backend != "sharded":
             ap.error("--build-shards requires --build-backend sharded")
         build_kw["shards"] = args.build_shards
-    t0 = time.time()
-    if args.build_batch > 0:
-        idx.insert_batch(wl.vectors, wl.attrs, batch_size=args.build_batch,
-                         backend=args.build_backend, **build_kw)
-        how = f"batched/{args.build_backend} (micro-batch {args.build_batch})"
+
+    idx = None
+    snap = None
+    if args.index_dir:
+        from ..persist import is_durable_dir, load_serving_snapshot, open_durable
+
+        if is_durable_dir(args.index_dir):
+            # serve-from-checkpoint cold start: the serving snapshot comes
+            # straight off the newest checkpoint's mmap'd slabs — no host
+            # index, no graph replay, first query before the slabs page in
+            cold_t0 = time.time()
+            snap, meta = load_serving_snapshot(args.index_dir)
+            print(f"cold start from {args.index_dir}: {snap.n} vectors "
+                  f"(checkpoint lsn {meta['lsn']}) mapped in "
+                  f"{(time.time()-cold_t0)*1e3:.0f} ms")
+        else:
+            idx = open_durable(
+                args.index_dir,
+                create=dict(dim=args.dim, m=args.m,
+                            ef_construction=args.ef_construction, o=args.o,
+                            seed=0),
+                compact_threshold=args.compact_threshold,
+            )
     else:
-        for v, a in zip(wl.vectors, wl.attrs):
-            idx.insert(v, a)
-        how = "sequential"
-    print(f"indexed {len(idx)} vectors in {time.time()-t0:.1f}s [{how}] "
-          f"({idx.graph.num_layers} layers, {idx.memory_bytes()/2**20:.1f} MiB)")
-    if args.compact_rows:
+        idx = WoWIndex(dim=args.dim, m=args.m,
+                       ef_construction=args.ef_construction,
+                       o=args.o, seed=0,
+                       compact_threshold=args.compact_threshold)
+    if idx is not None:
         t0 = time.time()
-        nrows = idx.compact_rows()
-        print(f"compact_rows: {nrows} rows rebuilt in {time.time()-t0:.2f}s")
-    snap = take_snapshot(idx)
+        if args.build_batch > 0:
+            idx.insert_batch(wl.vectors, wl.attrs, batch_size=args.build_batch,
+                             backend=args.build_backend, **build_kw)
+            how = f"batched/{args.build_backend} (micro-batch {args.build_batch})"
+        else:
+            for v, a in zip(wl.vectors, wl.attrs):
+                idx.insert(v, a)
+            how = "sequential"
+        if args.index_dir:
+            how += ", WAL-logged"
+        print(f"indexed {len(idx)} vectors in {time.time()-t0:.1f}s [{how}] "
+              f"({idx.graph.num_layers} layers, {idx.memory_bytes()/2**20:.1f} MiB)")
+        if args.compact_rows:
+            t0 = time.time()
+            nrows = idx.compact_rows()
+            print(f"compact_rows: {nrows} rows rebuilt in {time.time()-t0:.2f}s")
+        if args.index_dir:
+            t0 = time.time()
+            path = idx.checkpoint(args.index_dir)
+            print(f"checkpointed to {path} in {(time.time()-t0)*1e3:.0f} ms")
+        snap = take_snapshot(idx)
 
     compact = None
     if args.compact:
@@ -130,6 +173,9 @@ def main() -> None:
     import numpy as np
 
     ids = np.asarray(res.ids)
+    if idx is None and snap is not None:
+        print(f"cold-start-to-first-query: "
+              f"{(time.time()-cold_t0)*1e3:.0f} ms (load + serve wave)")
     t0 = time.time()
     recs = []
     for i in range(args.queries):
@@ -153,6 +199,18 @@ def main() -> None:
         extra_v = make_vectors(args.ingest, args.dim, seed=99)
         extra_a = make_attrs(extra_v, seed=99) + float(np.max(wl.attrs)) + 1.0
         bs = args.build_batch or 128
+        if idx is None:
+            # cold-started off the checkpoint: ingest needs the live index —
+            # run full crash recovery (checkpoint + WAL replay) now and ride
+            # the WAL from here on
+            from ..persist import open_durable
+
+            t0 = time.time()
+            idx = open_durable(args.index_dir,
+                               compact_threshold=args.compact_threshold)
+            print(f"recovered live index for ingest in {time.time()-t0:.2f}s "
+                  f"({len(idx)} vectors, lsn {idx._applied_lsn})")
+            snap = None  # checkpoint snapshot may be mmap'd; rebuild below
         t0 = time.time()
         idx.insert_batch(extra_v, extra_a, batch_size=bs,
                          backend=args.build_backend, **build_kw)
@@ -182,6 +240,13 @@ def main() -> None:
             recs2.append(recall(got, wl.gt[i]))
         print(f"re-served {args.queries} queries post-ingest: "
               f"recall@{args.k} = {np.mean(recs2):.4f}")
+        if args.index_dir:
+            # the WAL already made the ingest durable; the incremental
+            # checkpoint (O(changed rows)) just shortens the next replay
+            t0 = time.time()
+            path = idx.checkpoint(args.index_dir)
+            print(f"incremental checkpoint to {path} in "
+                  f"{(time.time()-t0)*1e3:.0f} ms")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""Durable index lifecycle: versioned checkpoints, append-only WAL, crash
+recovery, serve-from-checkpoint cold start, and a fault-injection harness.
+
+See ``PERSISTENCE.md`` for the on-disk format specification, recovery
+semantics and the durability guarantees table.
+"""
+from .checkpoint import (  # noqa: F401
+    assert_index_equal,
+    list_checkpoints,
+    load,
+    save,
+    state_digest,
+)
+from .faultfs import CrashError, FaultIO, OsIO, flip_bit, truncate_at  # noqa: F401
+from .format import CorruptError  # noqa: F401
+from .recovery import (  # noqa: F401
+    is_durable_dir,
+    load_serving_snapshot,
+    open_durable,
+    recover,
+    wal_dir,
+)
+from .wal import WalCorruptError, WalWriter  # noqa: F401

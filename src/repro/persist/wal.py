@@ -1,0 +1,426 @@
+"""Append-only write-ahead log for `WoWIndex` mutations.
+
+Every durable mutation — an ``insert_batch`` micro-batch, a sequential
+``insert``, ``delete``/``undelete``, a (manual or auto-triggered)
+``compact_rows`` pass — appends one self-checksummed record *before* the
+in-memory apply, and the record is fsynced before the mutating call
+returns.  Recovery (`repro.persist.recovery`) = newest valid checkpoint +
+replay of the WAL suffix; replaying a record re-executes the original
+index operation, and because every registered build backend commits a
+bitwise-identical graph (the cross-backend equivalence gate) and the
+index's RNG state rides in the checkpoint, replay reproduces the live
+index bit for bit.
+
+On-disk layout (all integers little-endian):
+
+segment file ``wal-<seq:08d>.seg``::
+
+    header (36 bytes):
+      magic      8s   b"WOWWAL01"
+      version    u32  1
+      reserved   u32  0
+      seq        u64  segment sequence number
+      start_lsn  u64  LSN of the segment's first record
+      crc32      u32  over the preceding 32 bytes
+    records, back to back::
+      length     u32  len(body)
+      crc32      u32  over body
+      body:
+        type     u8   record type (below)
+        lsn      u64  log sequence number (monotone, gap-free)
+        payload  type-specific (below)
+
+Record types::
+
+    1 INSERT      one insert_batch micro-batch:
+                  u32 json_len + canonical JSON {backend, device_width,
+                  shards} + .npy vectors (f32[B,d]) + .npy attrs (f64[B])
+    2 DELETE      canonical JSON {vid}
+    3 UNDELETE    canonical JSON {vid}
+    4 COMPACT     empty (compact_rows is deterministic given index state)
+    5 SEQ_INSERT  .npy vector (f32[d]) + .npy attr (f64[1])
+
+Torn tails vs corruption: a crash can only tear the *tail* of the *last*
+segment (records are appended then fsynced, and a new segment is created
+only after its predecessor's records were all acked).  So an invalid
+record is (a) a torn tail — iff it is in the last segment and no valid
+record exists at any later byte offset — which recovery truncates away
+cleanly, or (b) corruption (bit rot, manual tampering), which raises
+``WalCorruptError``: a clean refusal, never a silently shortened log.
+"""
+from __future__ import annotations
+
+import io as _io
+import json
+import os
+import struct
+
+import numpy as np
+
+from .faultfs import OsIO
+from .format import CorruptError, canonical_json, crc32, encode_npy
+
+SEG_MAGIC = b"WOWWAL01"
+SEG_VERSION = 1
+SEG_HEADER_LEN = 36
+REC_OVERHEAD = 8  # u32 length + u32 crc
+MIN_BODY = 9  # u8 type + u64 lsn
+
+T_INSERT = 1
+T_DELETE = 2
+T_UNDELETE = 3
+T_COMPACT = 4
+T_SEQ_INSERT = 5
+
+
+class WalCorruptError(CorruptError):
+    """Mid-log corruption (not a torn tail): recovery refuses to proceed."""
+
+
+def segment_name(seq: int) -> str:
+    return f"wal-{seq:08d}.seg"
+
+
+def list_segments(dirpath: str) -> list[tuple[int, str]]:
+    """(seq, path) pairs of the directory's WAL segments, seq-ascending."""
+    out = []
+    if os.path.isdir(dirpath):
+        for name in os.listdir(dirpath):
+            if name.startswith("wal-") and name.endswith(".seg"):
+                try:
+                    seq = int(name[4:-4])
+                except ValueError:
+                    continue
+                out.append((seq, os.path.join(dirpath, name)))
+    out.sort()
+    return out
+
+
+# ------------------------------------------------------------------ payloads
+def pack_insert(vectors: np.ndarray, attrs: np.ndarray, backend: str,
+                device_width: int | None, shards: int | None) -> bytes:
+    head = canonical_json(
+        {"backend": backend, "device_width": device_width, "shards": shards}
+    )
+    return (
+        struct.pack("<I", len(head)) + head
+        + encode_npy(np.asarray(vectors, np.float32))
+        + encode_npy(np.asarray(attrs, np.float64))
+    )
+
+
+def unpack_insert(payload: bytes) -> tuple[np.ndarray, np.ndarray, dict]:
+    (jlen,) = struct.unpack_from("<I", payload)
+    head = json.loads(payload[4 : 4 + jlen])
+    buf = _io.BytesIO(payload[4 + jlen :])
+    vectors = np.load(buf, allow_pickle=False)
+    attrs = np.load(buf, allow_pickle=False)
+    return vectors, attrs, head
+
+
+def pack_seq_insert(vec: np.ndarray, attr: float) -> bytes:
+    return encode_npy(np.asarray(vec, np.float32).reshape(-1)) + encode_npy(
+        np.asarray([attr], np.float64)
+    )
+
+
+def unpack_seq_insert(payload: bytes) -> tuple[np.ndarray, float]:
+    buf = _io.BytesIO(payload)
+    vec = np.load(buf, allow_pickle=False)
+    attr = np.load(buf, allow_pickle=False)
+    return vec, float(attr[0])
+
+
+# ------------------------------------------------------------------- records
+def encode_record(rtype: int, lsn: int, payload: bytes) -> bytes:
+    body = struct.pack("<BQ", rtype, lsn) + payload
+    return struct.pack("<II", len(body), crc32(body)) + body
+
+
+def _try_parse_record(data: bytes, off: int):
+    """Parse one record at ``off``; returns (lsn, type, payload, end) or
+    None when the bytes there do not form a valid record."""
+    if off + REC_OVERHEAD > len(data):
+        return None
+    length, stated = struct.unpack_from("<II", data, off)
+    if length < MIN_BODY or off + REC_OVERHEAD + length > len(data):
+        return None
+    body = data[off + REC_OVERHEAD : off + REC_OVERHEAD + length]
+    if crc32(body) != stated:
+        return None
+    rtype, lsn = struct.unpack_from("<BQ", body)
+    return lsn, rtype, body[MIN_BODY:], off + REC_OVERHEAD + length
+
+
+def _probe_valid_record(data: bytes, from_off: int) -> bool:
+    """True when ANY byte offset >= ``from_off`` parses as a valid record —
+    the torn-tail/corruption discriminator: a genuine torn tail is a pure
+    garbage suffix, so a valid record beyond the damage proves mid-log
+    corruption."""
+    for off in range(from_off, len(data) - REC_OVERHEAD - MIN_BODY + 1):
+        if _try_parse_record(data, off) is not None:
+            return True
+    return False
+
+
+def encode_segment_header(seq: int, start_lsn: int) -> bytes:
+    head = struct.pack("<8sIIQQ", SEG_MAGIC, SEG_VERSION, 0, seq, start_lsn)
+    return head + struct.pack("<I", crc32(head))
+
+
+def parse_segment_header(data: bytes) -> dict | None:
+    if len(data) < SEG_HEADER_LEN:
+        return None
+    magic, version, _res, seq, start_lsn = struct.unpack_from("<8sIIQQ", data)
+    (stated,) = struct.unpack_from("<I", data, 32)
+    if magic != SEG_MAGIC or version != SEG_VERSION:
+        return None
+    if crc32(data[:32]) != stated:
+        return None
+    return {"seq": seq, "start_lsn": start_lsn}
+
+
+def scan_segment(path: str) -> dict:
+    """Parse a segment file fully.  Returns::
+
+        {"header": dict | None, "records": [(lsn, type, payload, end_off)],
+         "bad_off": int | None,   # offset of the first invalid record
+         "valid_beyond": bool,    # a valid record exists past bad_off
+         "size": int}
+
+    ``header=None`` means the 36-byte header itself failed validation
+    (``bad_off`` is then 0 and ``valid_beyond`` probes from the header end).
+    """
+    with open(path, "rb") as f:
+        data = f.read()
+    header = parse_segment_header(data)
+    if header is None:
+        return {
+            "header": None,
+            "records": [],
+            "bad_off": 0,
+            "valid_beyond": _probe_valid_record(data, SEG_HEADER_LEN),
+            "size": len(data),
+        }
+    records = []
+    off = SEG_HEADER_LEN
+    expect = header["start_lsn"]
+    while off < len(data):
+        rec = _try_parse_record(data, off)
+        if rec is None:
+            return {
+                "header": header,
+                "records": records,
+                "bad_off": off,
+                "valid_beyond": _probe_valid_record(data, off + 1),
+                "size": len(data),
+            }
+        lsn, rtype, payload, end = rec
+        if lsn != expect:
+            # a checksummed record with the wrong LSN is never a torn
+            # tail — flag it as corruption via valid_beyond
+            return {
+                "header": header,
+                "records": records,
+                "bad_off": off,
+                "valid_beyond": True,
+                "size": len(data),
+            }
+        records.append((lsn, rtype, payload, end))
+        expect += 1
+        off = end
+    return {
+        "header": header,
+        "records": records,
+        "bad_off": None,
+        "valid_beyond": False,
+        "size": len(data),
+    }
+
+
+# -------------------------------------------------------------------- writer
+class WalWriter:
+    """Appends self-checksummed records to the newest segment, fsyncing
+    each before returning its LSN (log -> fsync -> apply discipline lives
+    in the `WoWIndex` hooks).  Rotation starts a fresh segment once the
+    current one exceeds ``segment_bytes`` (and on every checkpoint, so
+    pruning works at segment granularity)."""
+
+    def __init__(self, dirpath: str, io: OsIO | None = None,
+                 segment_bytes: int = 4 << 20):
+        self.dir = dirpath
+        self.io = io or OsIO()
+        self.segment_bytes = segment_bytes
+        self.io.mkdir(dirpath)
+        self._f = None
+        self._size = 0
+        segs = list_segments(dirpath)
+        if not segs:
+            self.next_lsn = 1
+            self._seq = -1
+            self.rotate()
+            return
+        seq, path = segs[-1]
+        scan = scan_segment(path)
+        if scan["bad_off"] is not None or scan["header"] is None:
+            raise WalCorruptError(
+                f"cannot append to {path}: invalid tail at offset "
+                f"{scan['bad_off']} (run recovery first)"
+            )
+        self._seq = seq
+        self.next_lsn = (
+            scan["records"][-1][0] + 1 if scan["records"]
+            else scan["header"]["start_lsn"]
+        )
+        self._f = self.io.open_append(path)
+        self._size = scan["size"]
+
+    def rotate(self) -> None:
+        """Close the current segment and start ``seq+1`` at ``next_lsn``."""
+        if self._f is not None:
+            self.io.fsync(self._f)
+            self.io.close(self._f)
+        self._seq += 1
+        path = os.path.join(self.dir, segment_name(self._seq))
+        self._f = self.io.create(path)
+        hdr = encode_segment_header(self._seq, self.next_lsn)
+        self.io.write(self._f, hdr)
+        self.io.fsync(self._f)
+        self.io.fsync_dir(self.dir)
+        self._size = len(hdr)
+
+    def append(self, rtype: int, payload: bytes = b"") -> int:
+        """Append + fsync one record; returns its LSN (now durable)."""
+        if self._size >= self.segment_bytes:
+            self.rotate()
+        lsn = self.next_lsn
+        rec = encode_record(rtype, lsn, payload)
+        self.io.write(self._f, rec)
+        self.io.fsync(self._f)
+        self._size += len(rec)
+        self.next_lsn = lsn + 1
+        return lsn
+
+    # typed appends (the WoWIndex hooks call these)
+    def log_insert(self, vectors, attrs, backend: str,
+                   device_width: int | None, shards: int | None) -> int:
+        return self.append(
+            T_INSERT, pack_insert(vectors, attrs, backend, device_width, shards)
+        )
+
+    def log_seq_insert(self, vec, attr: float) -> int:
+        return self.append(T_SEQ_INSERT, pack_seq_insert(vec, attr))
+
+    def log_delete(self, vid: int) -> int:
+        return self.append(T_DELETE, canonical_json({"vid": int(vid)}))
+
+    def log_undelete(self, vid: int) -> int:
+        return self.append(T_UNDELETE, canonical_json({"vid": int(vid)}))
+
+    def log_compact(self) -> int:
+        return self.append(T_COMPACT)
+
+    def prune(self, keep_from_lsn: int) -> int:
+        """Delete segments whose records are ALL <= ``keep_from_lsn`` (i.e.
+        already covered by every retained checkpoint).  The last segment is
+        never deleted.  Returns the number of segments removed."""
+        segs = list_segments(self.dir)
+        removed = 0
+        for i, (seq, path) in enumerate(segs[:-1]):
+            nxt_scan = scan_segment(segs[i + 1][1])
+            nxt_start = (
+                nxt_scan["header"]["start_lsn"] if nxt_scan["header"] else None
+            )
+            if nxt_start is not None and nxt_start <= keep_from_lsn + 1:
+                self.io.remove(path)
+                removed += 1
+            else:
+                break  # segments are lsn-ordered: nothing older is prunable
+        if removed:
+            self.io.fsync_dir(self.dir)
+        return removed
+
+    def close(self) -> None:
+        if self._f is not None:
+            self.io.fsync(self._f)
+            self.io.close(self._f)
+            self._f = None
+
+
+# -------------------------------------------------------------------- replay
+def read_log(dirpath: str, io: OsIO | None = None,
+             truncate_torn: bool = True) -> list[tuple[int, int, bytes]]:
+    """Validate the whole log and return its records as (lsn, type,
+    payload), lsn-ascending and gap-free.
+
+    Torn tails (invalid suffix of the LAST segment with nothing valid
+    beyond it) are truncated away when ``truncate_torn`` — the recovery
+    path — so a subsequent ``WalWriter`` can append cleanly.  Anything
+    else invalid raises ``WalCorruptError``.
+    """
+    io = io or OsIO()
+    segs = list_segments(dirpath)
+    out: list[tuple[int, int, bytes]] = []
+    expect: int | None = None
+    for i, (seq, path) in enumerate(segs):
+        last = i == len(segs) - 1
+        scan = scan_segment(path)
+        if scan["header"] is None:
+            if not last or scan["valid_beyond"]:
+                raise WalCorruptError(f"{path}: invalid segment header")
+            # torn segment creation: header never fully landed, no records
+            if truncate_torn:
+                io.remove(path)
+            break
+        if scan["bad_off"] is not None:
+            if not last or scan["valid_beyond"]:
+                raise WalCorruptError(
+                    f"{path}: invalid record at offset {scan['bad_off']} "
+                    f"with valid data beyond it (corruption, not a torn tail)"
+                )
+            if truncate_torn:
+                io.truncate(path, scan["bad_off"])
+        if scan["records"]:
+            first = scan["records"][0][0]
+            if expect is not None and first != expect:
+                raise WalCorruptError(
+                    f"{path}: LSN gap (expected {expect}, found {first})"
+                )
+            out.extend((l, t, p) for l, t, p, _ in scan["records"])
+            expect = scan["records"][-1][0] + 1
+        elif expect is not None and scan["header"]["start_lsn"] > expect:
+            raise WalCorruptError(
+                f"{path}: start_lsn {scan['header']['start_lsn']} leaves an "
+                f"LSN gap (expected {expect})"
+            )
+    return out
+
+
+def apply_record(index, rtype: int, payload: bytes) -> None:
+    """Re-execute one logged mutation on ``index`` (replay mode: the index
+    must have ``_wal_replaying`` set so the apply neither re-logs nor
+    re-triggers auto-compaction — compactions replay via their own
+    records)."""
+    if rtype == T_INSERT:
+        vectors, attrs, head = unpack_insert(payload)
+        backend = head["backend"]
+        shards = head["shards"]
+        if backend == "sharded":
+            # the sharded build is bitwise the device build at every shard
+            # count, so replay is device-count independent
+            backend, shards = "device", None
+        index.insert_batch(
+            vectors, attrs, batch_size=max(len(attrs), 1), backend=backend,
+            device_width=head["device_width"], shards=shards,
+        )
+    elif rtype == T_SEQ_INSERT:
+        vec, attr = unpack_seq_insert(payload)
+        index.insert(vec, attr)
+    elif rtype == T_DELETE:
+        index.delete(json.loads(payload)["vid"])
+    elif rtype == T_UNDELETE:
+        index.undelete(json.loads(payload)["vid"])
+    elif rtype == T_COMPACT:
+        index.compact_rows()
+    else:
+        raise WalCorruptError(f"unknown WAL record type {rtype}")

@@ -110,20 +110,71 @@ class RagPipeline:
                  visited: str = "bitmap",
                  compact: tuple[int, int] | None = None,
                  build_backend: str = "numpy",
-                 visited_adaptive: bool = False):
-        from ..core import WoWIndex
-
+                 visited_adaptive: bool = False,
+                 index_dir: str | None = None,
+                 compact_threshold: float | None = None):
+        """``index_dir`` switches the pipeline to the durable lifecycle
+        (``repro.persist``): when the directory already holds checkpoints,
+        the serving snapshot cold-starts straight from the newest one via
+        memory-mapped slabs — the first ``retrieve_batch`` answers without
+        rebuilding or even fully paging the graph in — and the host index
+        is only recovered (checkpoint + WAL replay) lazily, on the first
+        call that mutates or needs it (``add_documents``, ``retrieve``,
+        ``checkpoint``).  Ingest then rides the WAL: each micro-batch is
+        logged-and-fsynced before it is applied, so a mid-ingest crash
+        loses at most the in-flight micro-batch.  ``compact_threshold``
+        is the background compaction cadence (tombstone fraction)."""
         self.server = server
-        self.index = WoWIndex(dim=dim, m=m, ef_construction=ef_construction, o=o)
         self.docs: list = []
         self.backend = backend
         self.visited = visited
         self.compact = compact
         self.build_backend = build_backend
         self.visited_adaptive = visited_adaptive
+        self.index_dir = index_dir
+        self.compact_threshold = compact_threshold
         self._hop_log: list = []  # rolling hop histogram (serve feedback)
         self._snap = None
         self._snap_key = None
+        self._index = None
+        if index_dir is not None:
+            from ..persist import is_durable_dir, load_serving_snapshot
+
+            self._create = dict(dim=dim, m=m, ef_construction=ef_construction,
+                                o=o, compact_threshold=compact_threshold)
+            if is_durable_dir(index_dir):
+                self._snap, meta = load_serving_snapshot(index_dir)
+                if meta["dim"] != dim:
+                    raise ValueError(
+                        f"index at {index_dir} has dim {meta['dim']}, "
+                        f"pipeline expects {dim}"
+                    )
+        else:
+            from ..core import WoWIndex
+
+            self._index = WoWIndex(dim=dim, m=m,
+                                   ef_construction=ef_construction, o=o,
+                                   compact_threshold=compact_threshold)
+
+    @property
+    def index(self):
+        """The live host index; in durable mode the first access runs full
+        crash recovery (checkpoint + WAL replay) and attaches the WAL."""
+        if self._index is None:
+            from ..persist import open_durable
+
+            self._index = open_durable(
+                self.index_dir, create=self._create,
+                compact_threshold=self.compact_threshold,
+            )
+        return self._index
+
+    def checkpoint(self) -> str:
+        """Durable mode: write a (full or incremental) checkpoint of the
+        live index to ``index_dir``; returns the checkpoint path."""
+        if self.index_dir is None:
+            raise RuntimeError("RagPipeline has no index_dir")
+        return self.index.checkpoint(self.index_dir)
 
     def add_document(self, doc_tokens: np.ndarray, attr: float, payload=None) -> int:
         emb = self.server.embed(doc_tokens[None, :])[0]
@@ -173,18 +224,24 @@ class RagPipeline:
         from ..core.snapshot import take_snapshot
 
         # the index's monotone mutation stamp changes on any insert/delete/
-        # undelete (counting sizes alone would miss an undelete+delete pair)
-        key = self.index.mutations
-        if self._snap is None or self._snap_key != key:
-            self._snap = take_snapshot(self.index, prev=self._snap)
-            self._snap_key = key
+        # undelete (counting sizes alone would miss an undelete+delete pair).
+        # In durable cold-start mode the host index may not be recovered yet
+        # (self._index is None) — serve straight off the checkpoint snapshot
+        # and refresh only once a live index exists and has mutated.
+        if self._index is not None:
+            key = self._index.mutations
+            if self._snap is None or self._snap_key != key:
+                self._snap = take_snapshot(self._index, prev=self._snap)
+                self._snap_key = key
+        elif self._snap is None:
+            raise RuntimeError("no serving snapshot: index_dir holds no data")
         qs = self.server.embed(query_tokens)
         visited_bits = None
         if self.visited == "hash" and self.visited_adaptive and self._hop_log:
             from ..core.device_search import visited_filter_bits_measured
 
             visited_bits = visited_filter_bits_measured(
-                np.concatenate(self._hop_log), self.index.params.m
+                np.concatenate(self._hop_log), self._snap.m
             )
         res = search_batch(self._snap, qs, np.asarray(attr_ranges, np.float32),
                            k=k, width=width, backend=self.backend,

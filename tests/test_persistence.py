@@ -1,0 +1,501 @@
+"""Durable index lifecycle conformance (``repro.persist``).
+
+The acceptance bar: a checkpoint/WAL round trip is *bitwise* — same slabs,
+same graph arenas, same WBT shape, same RNG stream — for every registered
+build backend; recovery after a crash at ANY byte offset / io operation
+reaches exactly the last durable prefix state (never a corrupt index, never
+a silent shortening of a log that has valid data beyond the damage); and
+ingest validation rejects bad input before a single byte of index or WAL
+state changes.  Faults are injected with ``repro.persist.faultfs`` (torn
+writes, bit flips, dropped fsyncs, op-sweep crashes) plus a real SIGKILL
+subprocess test.
+"""
+import json
+import os
+import shutil
+import signal
+import struct
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import WoWIndex, make_workload
+from repro.persist import (
+    CrashError,
+    FaultIO,
+    OsIO,
+    WalCorruptError,
+    assert_index_equal,
+    flip_bit,
+    list_checkpoints,
+    load,
+    load_serving_snapshot,
+    open_durable,
+    recover,
+    save,
+    state_digest,
+    truncate_at,
+    wal_dir,
+)
+from repro.persist import wal as walmod
+from repro.persist.checkpoint import load_state, materialize
+from repro.persist.format import read_manifest
+
+from _invariants import build_index
+
+KW = dict(m=8, ef_construction=32, o=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return make_workload(n=400, d=12, nq=1, seed=0, with_gt=False)
+
+
+def _mutate(idx, wl, lo, hi, bs=50, backend="numpy"):
+    idx.insert_batch(wl.vectors[lo:hi], wl.attrs[lo:hi], batch_size=bs,
+                     backend=backend)
+
+
+# ------------------------------------------------------- checkpoint round trip
+@pytest.mark.parametrize(
+    "backend,bs,shards",
+    [("sequential", None, None), ("numpy", 96, None), ("ops", 96, None),
+     ("device", 96, None), ("sharded", 96, 1)],
+)
+def test_roundtrip_all_backends(tmp_path, wl, backend, bs, shards):
+    """save -> load is bitwise for every build backend (slabs, graph
+    arenas, WBT, tombstones, RNG state, mutation stamps)."""
+    if backend == "sequential":
+        idx = build_index(wl, None, **KW)
+    else:
+        idx = build_index(wl, bs, backend=backend, shards=shards, **KW)
+    idx.delete(3)
+    idx.delete(17)
+    idx.undelete(3)
+    save(idx, str(tmp_path))
+    assert_index_equal(idx, load(str(tmp_path)))
+
+
+def test_roundtrip_preserves_rng_stream(tmp_path, wl):
+    """The loaded index continues the exact RNG stream: identical follow-up
+    inserts land bitwise-identically on both."""
+    idx = build_index(wl, 64, backend="numpy", **KW)
+    idx.delete(5)
+    save(idx, str(tmp_path))
+    twin = load(str(tmp_path))
+    extra_v = wl.vectors[:60] + 0.25
+    extra_a = wl.attrs[:60] + 1000.0
+    for target in (idx, twin):
+        target.insert_batch(extra_v, extra_a, batch_size=30, backend="numpy")
+        target.delete(int(target.store.n) - 1)
+    assert state_digest(idx) == state_digest(twin)
+    assert_index_equal(idx, twin)
+
+
+def test_incremental_checkpoint_is_delta_and_bitwise(tmp_path, wl):
+    """Steady-state checkpoints are deltas (O(changed rows)) and compose
+    back to the exact full state."""
+    root = str(tmp_path / "inc")
+    root_full = str(tmp_path / "full")
+    idx = build_index(wl, 64, backend="numpy", **KW)
+    save(idx, root)  # first save: necessarily full
+    seq0, path0 = list_checkpoints(root)[-1]
+    assert read_manifest(path0)["kind"] == "full"
+
+    _mutate(idx, wl, 0, 80)  # duplicate-ish values exercise WBT reuse
+    idx.delete(9)
+    idx.compact_rows()
+    save(idx, root, incremental=True)
+    save(idx, root_full, incremental=False)
+    seq1, path1 = list_checkpoints(root)[-1]
+    man = read_manifest(path1)
+    assert man["kind"] == "delta" and man["base"] == seq0
+    # the delta shipped tails + dirty rows, not the whole graph
+    full_nbytes = sum(e["nbytes"] for e in read_manifest(path0)["sections"].values())
+    delta_nbytes = sum(e["nbytes"] for e in man["sections"].values())
+    assert delta_nbytes < full_nbytes
+    a, b = load(root), load(root_full)
+    assert state_digest(a) == state_digest(b) == state_digest(idx)
+    assert_index_equal(idx, a)
+
+
+def test_checkpoint_retention_keeps_chains_recoverable(tmp_path, wl):
+    """Old full checkpoints are pruned down to the two newest, the WAL is
+    pruned only past every retained checkpoint, and the newest chain
+    always recovers."""
+    root = str(tmp_path)
+    idx = open_durable(root, create=dict(dim=12, **KW))
+    for i in range(5):
+        _mutate(idx, wl, 40 * i, 40 * (i + 1), bs=40)
+        idx.checkpoint(root, incremental=False)
+    idx._wal.close()
+    assert len(list_checkpoints(root)) == 2  # keep=2, not 6 unbounded
+    # every checkpoint rotated the log; only segments not covered by the
+    # second-newest retained checkpoint survive pruning
+    assert len(walmod.list_segments(wal_dir(root))) == 2
+    assert_index_equal(idx, recover(root))
+
+
+# ------------------------------------------------------------------ WAL replay
+def test_wal_replay_parity_mixed_trace(tmp_path, wl):
+    """checkpoint + WAL-suffix recovery reproduces a mixed mutation trace
+    (batched + sequential inserts, delete/undelete, compaction) bitwise."""
+    root = str(tmp_path)
+    idx = open_durable(root, create=dict(dim=12, **KW))
+    _mutate(idx, wl, 0, 100)
+    idx.checkpoint(root)  # recovery = this checkpoint + the records below
+    _mutate(idx, wl, 100, 200, bs=64, backend="ops")
+    idx.insert(wl.vectors[200], float(wl.attrs[200]))
+    idx.delete(7)
+    idx.delete(31)
+    idx.undelete(7)
+    idx.compact_rows()
+    _mutate(idx, wl, 201, 260, bs=30)
+    idx._wal.close()
+    idx._wal = None  # detach: idx keeps mutating below, un-logged
+    rec = WoWIndex.recover(root)
+    assert rec._applied_lsn == idx._applied_lsn
+    assert_index_equal(idx, rec)
+    # reopening attaches a writer whose LSN lines up, and durable appends
+    # continue bitwise vs the live twin
+    re2 = open_durable(root)
+    assert re2._wal.next_lsn == idx._applied_lsn + 1
+    for target in (idx, re2):
+        target.insert_batch(wl.vectors[260:300], wl.attrs[260:300],
+                            batch_size=40, backend="numpy")
+    assert state_digest(idx) == state_digest(re2)
+    re2._wal.close()
+
+
+def test_sharded_record_replays_without_mesh(tmp_path, run_subprocess):
+    """A WAL record logged by the sharded backend on an 8-device mesh
+    replays on a single-device process (sharded == device bitwise, so
+    replay is device-count independent)."""
+    root = str(tmp_path)
+    code = f"""
+from repro.core import make_workload
+from repro.persist import open_durable, state_digest
+wl = make_workload(n=200, d=10, nq=1, seed=4, with_gt=False)
+idx = open_durable({root!r}, create=dict(dim=10, m=8, ef_construction=32,
+                                         o=4, seed=0))
+idx.insert_batch(wl.vectors, wl.attrs, batch_size=64, backend="sharded",
+                 shards=8)
+idx._wal.close()
+print("DIGEST", state_digest(idx))
+"""
+    out = run_subprocess(code, devices=8)
+    want = out.split("DIGEST")[1].strip()
+    assert state_digest(recover(root)) == want
+
+
+# ----------------------------------------------------- torn tails & bit flips
+def _trace_dir(tmp_path, wl):
+    """A durable dir with an empty initial checkpoint + a short mixed WAL;
+    returns (root, prefix_digests) where prefix_digests[k] is the exact
+    state after the first k records."""
+    root = str(tmp_path / "trace")
+    idx = open_durable(root, create=dict(dim=12, **KW))
+    for i in range(3):
+        _mutate(idx, wl, 30 * i, 30 * (i + 1), bs=30)
+    idx.delete(2)
+    idx.insert(wl.vectors[90], float(wl.attrs[90]))
+    idx.undelete(2)
+    idx.compact_rows()
+    _mutate(idx, wl, 91, 121, bs=30)
+    idx._wal.close()
+
+    records = walmod.read_log(wal_dir(root))
+    base = materialize(load_state(root))
+    digests = [state_digest(base)]
+    base._wal_replaying = True
+    for lsn, rtype, payload in records:
+        walmod.apply_record(base, rtype, payload)
+        base._applied_lsn = lsn
+        digests.append(state_digest(base))
+    assert digests[-1] == state_digest(idx)
+    return root, digests
+
+
+def test_torn_tail_sweep_recovers_exact_prefix(tmp_path, wl):
+    """Kill the writer at any byte offset of the WAL: recovery truncates
+    the torn tail and lands on exactly the longest durable prefix."""
+    root, digests = _trace_dir(tmp_path, wl)
+    (_, seg_path), = walmod.list_segments(wal_dir(root))
+    scan = walmod.scan_segment(seg_path)
+    rec_ends = [end for _, _, _, end in scan["records"]]
+    points = {0, 5, walmod.SEG_HEADER_LEN}
+    for e in rec_ends:
+        points.update((e - 3, e))  # mid-record and clean boundary
+    for t in sorted(points):
+        work = str(tmp_path / f"torn-{t}")
+        shutil.copytree(root, work)
+        truncate_at(
+            os.path.join(wal_dir(work), os.path.basename(seg_path)), t)
+        k = sum(1 for e in rec_ends if e <= t)
+        rec = recover(work)
+        assert state_digest(rec) == digests[k], f"truncation at byte {t}"
+        # and the truncated log accepts appends again
+        re2 = open_durable(work)
+        assert re2._wal.next_lsn == rec._applied_lsn + 1
+        re2._wal.close()
+
+
+def test_bitflip_midlog_is_refused_not_shortened(tmp_path, wl):
+    """A flipped bit in a record with valid records AFTER it is corruption,
+    not a torn tail: recovery refuses instead of silently dropping durable
+    acked data."""
+    root, _ = _trace_dir(tmp_path, wl)
+    (_, seg_path), = walmod.list_segments(wal_dir(root))
+    scan = walmod.scan_segment(seg_path)
+    first_end = scan["records"][0][3]
+    for byte in (walmod.SEG_HEADER_LEN + 9, first_end - 2):
+        work = str(tmp_path / f"flip-{byte}")
+        shutil.copytree(root, work)
+        flip_bit(os.path.join(wal_dir(work), os.path.basename(seg_path)),
+                 byte, bit=3)
+        with pytest.raises(WalCorruptError):
+            recover(work)
+
+
+def test_bitflip_in_final_record_truncates_to_prefix(tmp_path, wl):
+    """A flip inside the LAST record is indistinguishable from a torn tail
+    (nothing valid beyond it) — recovery truncates to the previous record."""
+    root, digests = _trace_dir(tmp_path, wl)
+    (_, seg_path), = walmod.list_segments(wal_dir(root))
+    scan = walmod.scan_segment(seg_path)
+    prev_end = scan["records"][-2][3]
+    work = str(tmp_path / "flip-final")
+    shutil.copytree(root, work)
+    flip_bit(os.path.join(wal_dir(work), os.path.basename(seg_path)),
+             prev_end + 9, bit=1)
+    assert state_digest(recover(work)) == digests[-2]
+
+
+# ----------------------------------------------- checkpoint-save crash sweeps
+@pytest.mark.parametrize("model", ["flushed", "lost"])
+def test_checkpoint_save_crash_sweep(tmp_path, wl, model):
+    """Kill the checkpoint writer at every io operation, under both crash
+    models: load() always yields either the previous checkpoint state or
+    the new one — the atomic-rename + fsync discipline admits nothing in
+    between."""
+    root = str(tmp_path / model)
+    idx = build_index(wl, 64, backend="numpy", **KW)
+    save(idx, root)
+    d_old = state_digest(idx)
+    _mutate(idx, wl, 0, 60, bs=30)
+    idx.delete(4)
+    d_new = state_digest(idx)
+
+    k = 0
+    while True:
+        k += 1
+        io = FaultIO(crash_after_ops=k, model=model)
+        try:
+            save(idx, root, io=io, incremental=True)
+            crashed = False
+        except CrashError:
+            crashed = True
+        got = state_digest(load(root))
+        assert got in (d_old, d_new), f"crash at op {k} [{model}]"
+        if not crashed:
+            assert got == d_new
+            break
+        assert k < 500, "sweep failed to terminate"
+
+
+def test_dropped_fsyncs_lose_only_unsynced_records(tmp_path, wl):
+    """drop_fsync + model="lost": WAL appends whose fsync was silently
+    dropped vanish at the crash, and recovery lands on the last genuinely
+    durable state instead of trusting the page cache."""
+    root = str(tmp_path)
+    idx = open_durable(root, create=dict(dim=12, **KW))
+    _mutate(idx, wl, 0, 60, bs=30)
+    idx.checkpoint(root)
+    idx._wal.close()
+    d_durable = state_digest(idx)
+
+    crashed = False
+    for k in range(1, 200):
+        work = str(tmp_path / f"drop-{k}")
+        shutil.copytree(root, work)
+        io = FaultIO(crash_after_ops=k, drop_fsync=True, model="lost")
+        try:
+            idx2 = open_durable(work, io=io)
+            _mutate(idx2, wl, 60, 120, bs=30)
+            idx2._wal.close()
+        except CrashError:
+            crashed = True
+            assert state_digest(recover(work)) == d_durable, f"op {k}"
+            continue
+        break
+    assert crashed, "the sweep never hit an io operation"
+
+
+def test_kill9_mid_ingest_recovers_acked_batches(tmp_path):
+    """Real SIGKILL mid-ingest: every micro-batch acked before the kill is
+    recovered (log -> fsync -> apply), reproducing the exact index a clean
+    run of those batches builds; at most the in-flight batch is lost."""
+    root = str(tmp_path)
+    child = f"""
+import os, signal
+from repro.core import make_workload
+from repro.persist import open_durable
+wl = make_workload(n=300, d=12, nq=1, seed=7, with_gt=False)
+idx = open_durable({root!r}, create=dict(dim=12, m=8, ef_construction=32,
+                                         o=4, seed=0))
+for i in range(6):
+    idx.insert_batch(wl.vectors[50*i:50*(i+1)], wl.attrs[50*i:50*(i+1)],
+                     batch_size=50, backend="numpy")
+    print("ACK", i, flush=True)
+    if i == 3:
+        os.kill(os.getpid(), signal.SIGKILL)
+"""
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([os.path.join(here, "..", "src"), here])
+    res = subprocess.run([sys.executable, "-c", child], capture_output=True,
+                         text=True, timeout=300, env=env)
+    assert res.returncode == -signal.SIGKILL, res.stderr
+    acked = res.stdout.count("ACK")
+    assert acked == 4
+
+    rec = recover(root)
+    wl = make_workload(n=300, d=12, nq=1, seed=7, with_gt=False)
+    want = WoWIndex(dim=12, **KW)
+    for i in range(acked):
+        want.insert_batch(wl.vectors[50 * i:50 * (i + 1)],
+                          wl.attrs[50 * i:50 * (i + 1)],
+                          batch_size=50, backend="numpy")
+    assert state_digest(rec) == state_digest(want)
+    assert_index_equal(rec, want)
+
+
+# -------------------------------------------------- ingest validation gates
+def test_ingest_validation_rejects_before_any_mutation(tmp_path, wl):
+    """NaN/inf attrs, wrong-dim and non-finite vectors raise ValueError
+    BEFORE any mutation: index digest AND WAL bytes are byte-identical
+    afterwards (a rejected batch leaves no trace to replay)."""
+    root = str(tmp_path)
+    idx = open_durable(root, create=dict(dim=12, **KW))
+    _mutate(idx, wl, 0, 60, bs=30)
+    (_, seg_path), = walmod.list_segments(wal_dir(root))
+    d0 = state_digest(idx)
+    with open(seg_path, "rb") as f:
+        wal_bytes = f.read()
+
+    bad_attr = wl.attrs[:4].copy()
+    bad_attr[2] = np.nan
+    with pytest.raises(ValueError, match="attr"):
+        idx.insert_batch(wl.vectors[:4], bad_attr, batch_size=4)
+    with pytest.raises(ValueError, match="dim"):
+        idx.insert_batch(wl.vectors[:4, :7], wl.attrs[:4], batch_size=4)
+    bad_vec = wl.vectors[:4].copy()
+    bad_vec[1, 3] = np.inf
+    with pytest.raises(ValueError, match="finite"):
+        idx.insert_batch(bad_vec, wl.attrs[:4], batch_size=4)
+    with pytest.raises(ValueError):
+        idx.insert(wl.vectors[0], float("inf"))
+
+    assert state_digest(idx) == d0
+    with open(seg_path, "rb") as f:
+        assert f.read() == wal_bytes
+    idx._wal.close()
+
+
+# ------------------------------------------------------- background compaction
+def test_auto_compaction_triggers_logs_and_recovers(tmp_path, wl):
+    """The tombstone-fraction cadence fires at an insert_batch boundary,
+    appends a COMPACT record, does not re-fire until new deletes accrue,
+    and the whole thing replays bitwise."""
+    root = str(tmp_path)
+    idx = open_durable(root, create=dict(dim=12, compact_threshold=0.25, **KW))
+    _mutate(idx, wl, 0, 100)
+    for vid in range(30):
+        idx.delete(vid)
+    assert idx.compactions == 0  # cadence is checked at batch boundaries
+    _mutate(idx, wl, 100, 140, bs=40)
+    assert idx.compactions == 1
+    _mutate(idx, wl, 140, 180, bs=40)
+    assert idx.compactions == 1  # latched: same tombstones don't re-fire
+    types = [t for _, t, _ in walmod.read_log(wal_dir(root))]
+    assert types.count(walmod.T_COMPACT) == 1
+    idx._wal.close()
+    assert_index_equal(idx, recover(root))
+
+
+# --------------------------------------------------- serve-from-checkpoint
+def test_cold_start_snapshot_matches_take_snapshot(tmp_path, wl):
+    """The mmap'd cold-start snapshot is bitwise the snapshot a live index
+    produces — with and without tombstones outstanding."""
+    from repro.core.snapshot import take_snapshot
+
+    for name, dels in (("clean", ()), ("holes", (3, 11, 40))):
+        root = str(tmp_path / name)
+        idx = build_index(wl, 64, backend="numpy", **KW)
+        for vid in dels:
+            idx.delete(vid)
+        save(idx, root)
+        snap, meta = load_serving_snapshot(root)
+        want = take_snapshot(idx)
+        assert meta["n"] == idx.store.n and meta["m"] == KW["m"]
+        for field in ("vectors", "sq_norms", "attrs", "neighbors",
+                      "uvals", "uval_rep", "ids_map"):
+            assert np.array_equal(getattr(snap, field), getattr(want, field)), \
+                f"{name}: snapshot field {field}"
+        assert (snap.m, snap.o, snap.metric) == (want.m, want.o, want.metric)
+
+
+def test_cold_start_snapshot_serves_queries(tmp_path):
+    """End to end: checkpoint -> load_serving_snapshot -> search_batch
+    answers match the live device path."""
+    from repro.core.device_search import search_batch
+
+    wlq = make_workload(n=300, d=12, nq=8, seed=3, k=5)
+    root = str(tmp_path)
+    idx = build_index(wlq, 64, backend="numpy", **KW)
+    save(idx, root)
+    snap, _ = load_serving_snapshot(root)
+    res = search_batch(snap, wlq.queries, wlq.ranges, k=5, width=32,
+                       backend="ref")
+    from repro.core.snapshot import take_snapshot
+
+    want = search_batch(take_snapshot(idx), wlq.queries, wlq.ranges, k=5,
+                        width=32, backend="ref")
+    assert np.array_equal(np.asarray(res.ids), np.asarray(want.ids))
+    assert np.allclose(np.asarray(res.dists), np.asarray(want.dists),
+                       equal_nan=True)
+
+
+# --------------------------------------------------------- refusal hygiene
+def test_recover_refuses_empty_and_garbage_dirs(tmp_path):
+    from repro.persist import CorruptError
+
+    with pytest.raises(CorruptError):
+        recover(str(tmp_path / "nothing"))
+    root = str(tmp_path / "garbage")
+    os.makedirs(os.path.join(root, "checkpoints", "ckpt-00000001"))
+    with open(os.path.join(root, "checkpoints", "ckpt-00000001",
+                           "MANIFEST.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(CorruptError):
+        recover(root)
+
+
+def test_corrupt_newest_checkpoint_falls_back_to_older(tmp_path, wl):
+    """load_state falls back seq-descending past a checkpoint whose section
+    bytes were flipped, and the WAL suffix then re-applies the difference."""
+    root = str(tmp_path)
+    idx = open_durable(root, create=dict(dim=12, **KW))
+    _mutate(idx, wl, 0, 60, bs=30)
+    idx.checkpoint(root)
+    _mutate(idx, wl, 60, 120, bs=30)
+    idx.checkpoint(root)
+    idx._wal.close()
+    newest_seq, newest_path = list_checkpoints(root)[-1]
+    man = read_manifest(newest_path)
+    # the newest is a delta — corrupt its largest section
+    name, sec = max(man["sections"].items(), key=lambda kv: kv[1]["nbytes"])
+    flip_bit(os.path.join(newest_path, sec["file"]), sec["nbytes"] // 2)
+    assert_index_equal(idx, recover(root))
