@@ -313,6 +313,26 @@ def visited_filter_bits_measured(
     return _measured_bits_from_p99(p99, m, fp, hashes, slack, floor_hops)
 
 
+def hist_percentile(hist, q: float) -> float:
+    """Percentile of a hop *histogram* (bin i = number of searches that
+    took i hops) — reproduces ``np.percentile``'s linear interpolation
+    exactly via the cumulative counts, without materialising the per-query
+    sample.  The form the sharded serving path reduces across shards and
+    the serve engine accumulates per wave.  Returns 0.0 for an empty
+    histogram."""
+    hist = np.asarray(hist, np.int64)
+    total = int(hist.sum())
+    if total == 0:
+        return 0.0
+    rank = (total - 1) * (q / 100.0)
+    lo_k = int(math.floor(rank))
+    hi_k = int(math.ceil(rank))
+    cum = np.cumsum(hist)
+    v_lo = int(np.searchsorted(cum, lo_k + 1))  # 0-indexed order stats
+    v_hi = int(np.searchsorted(cum, hi_k + 1))
+    return v_lo + (rank - lo_k) * (v_hi - v_lo)
+
+
 def visited_filter_bits_from_hist(
     hist,
     m: int,
@@ -322,24 +342,34 @@ def visited_filter_bits_from_hist(
     floor_hops: int = 16,
 ) -> int:
     """``visited_filter_bits_measured`` computed directly from a hop
-    *histogram* (bin i = number of searches that took i hops) — the form
-    the sharded serving path reduces across shards — without materialising
-    the per-query sample.  The p99 reproduces ``np.percentile``'s linear
-    interpolation exactly via the cumulative counts, so both entry points
-    size identically for the same data."""
-    hist = np.asarray(hist, np.int64)
-    total = int(hist.sum())
-    if total == 0:
-        p99 = 0.0
-    else:
-        rank = (total - 1) * 0.99
-        lo_k = int(math.floor(rank))
-        hi_k = int(math.ceil(rank))
-        cum = np.cumsum(hist)
-        v_lo = int(np.searchsorted(cum, lo_k + 1))  # 0-indexed order stats
-        v_hi = int(np.searchsorted(cum, hi_k + 1))
-        p99 = v_lo + (rank - lo_k) * (v_hi - v_lo)
+    histogram — both entry points size identically for the same data
+    (see ``hist_percentile``)."""
+    p99 = hist_percentile(hist, 99.0)
     return _measured_bits_from_p99(p99, m, fp, hashes, slack, floor_hops)
+
+
+def chunk_schedule_from_hist(
+    hist, lo: int = 4, hi: int = 64
+) -> tuple[int, int]:
+    """Adaptive ragged-batch compaction schedule ``(h0, h)`` from a live
+    hop histogram (the serve engine's per-wave feedback loop; the static
+    twin is the hand-tuned ``compact=(h0, h)`` knob).
+
+    ``h0`` — the first chunk length — targets the median: a boundary just
+    past p50 retires the fast half of a wave at the first compaction
+    point.  ``h`` — the long-phase chunk — tracks the straggler tail at a
+    quarter of the p50..p99 spread, so stragglers are re-bucketed a
+    handful of times rather than once (too coarse: the fast majority
+    waits) or every hop (too fine: boundary sync cost dominates).  Both
+    are pow2-quantised into ``[lo, hi]`` so repeated re-estimates land on
+    a handful of cached compilations, exactly like the measured
+    visited-filter sizing."""
+    p50 = hist_percentile(hist, 50.0)
+    p99 = hist_percentile(hist, 99.0)
+    h0 = _pow2ceil(max(int(math.ceil(p50)) + 1, 1))
+    h1 = _pow2ceil(max(int(math.ceil((p99 - p50) / 4.0)), 1))
+    clamp = lambda x: max(lo, min(hi, x))
+    return clamp(h0), clamp(h1)
 
 
 def _hash_probe(ids: jax.Array):
@@ -1158,6 +1188,51 @@ def _search_chunked(di, queries, ranges, cfg: HopCfg,
     return SearchResult(*_drive_chunked(di, st, cfg, compact, B, 0))
 
 
+def hop_cfg(
+    *,
+    k: int = 10,
+    width: int = 64,
+    m: int = 16,
+    o: int = 4,
+    metric: str = "l2",
+    max_hops: int | None = None,
+    backend: str = "auto",
+    pipeline: str = "fused",
+    visited: str = "bitmap",
+    visited_bits: int | None = None,
+    visited_fp: float = 0.02,
+    visited_hashes: int = 2,
+    merge: str = "auto",
+) -> HopCfg:
+    """Resolve user-facing serving knobs into the static ``HopCfg`` jit
+    key: beam width floored at k, the default global hop budget, hash
+    filter sizing (budget-derived when ``visited_bits`` is None, pow2
+    floor otherwise).  Shared by ``device_search`` and the serve engine
+    (``repro.serve.lifecycle``), which drives the chunked hop loop itself
+    and must produce bit-identical trajectories for equal knobs."""
+    if pipeline not in ("fused", "reference"):
+        raise ValueError(f"unknown pipeline {pipeline!r}")
+    if visited not in ("bitmap", "hash"):
+        raise ValueError(f"unknown visited filter {visited!r}")
+    W = max(width, k)
+    if max_hops is None:
+        max_hops = _default_max_hops(W)
+    v_words = 0
+    if visited == "hash":
+        if visited_bits is None:
+            visited_bits = visited_filter_bits(
+                W, m, max_hops, fp=visited_fp, hashes=visited_hashes
+            )
+        else:
+            visited_bits = _pow2ceil(max(int(visited_bits), 1024))
+        v_words = visited_bits // 32
+    return HopCfg(
+        k=k, width=W, m=m, o=o, metric=metric, max_hops=int(max_hops),
+        backend=backend, pipeline=pipeline, visited=visited,
+        v_words=v_words, v_hashes=int(visited_hashes), merge=merge,
+    )
+
+
 def device_search(
     di: DeviceIndex,
     queries: jax.Array,  # f32[B, d]
@@ -1181,26 +1256,11 @@ def device_search(
     """Batched device search.  All keyword knobs are static (jit keys);
     see the module docstring for the ``visited``/``compact``/``merge``
     semantics.  With ``compact=None`` this is a pure jittable function."""
-    if pipeline not in ("fused", "reference"):
-        raise ValueError(f"unknown pipeline {pipeline!r}")
-    if visited not in ("bitmap", "hash"):
-        raise ValueError(f"unknown visited filter {visited!r}")
-    W = max(width, k)
-    if max_hops is None:
-        max_hops = _default_max_hops(W)
-    v_words = 0
-    if visited == "hash":
-        if visited_bits is None:
-            visited_bits = visited_filter_bits(
-                W, m, max_hops, fp=visited_fp, hashes=visited_hashes
-            )
-        else:
-            visited_bits = _pow2ceil(max(int(visited_bits), 1024))
-        v_words = visited_bits // 32
-    cfg = HopCfg(
-        k=k, width=W, m=m, o=o, metric=metric, max_hops=int(max_hops),
+    cfg = hop_cfg(
+        k=k, width=width, m=m, o=o, metric=metric, max_hops=max_hops,
         backend=backend, pipeline=pipeline, visited=visited,
-        v_words=v_words, v_hashes=int(visited_hashes), merge=merge,
+        visited_bits=visited_bits, visited_fp=visited_fp,
+        visited_hashes=visited_hashes, merge=merge,
     )
     if compact is None:
         return _search_whole(di, queries, ranges, cfg)
@@ -1220,6 +1280,7 @@ def search_batch(
     visited_bits: int | None = None,
     compact: tuple[int, int] | None = None,
     pad_batch: bool = True,
+    max_hops: int | None = None,
 ) -> SearchResult:
     """Convenience host wrapper: snapshot -> device arrays -> search.
 
@@ -1227,6 +1288,9 @@ def search_batch(
     carry an empty range, so they are inactive from init and cost no hops)
     — a stream of distinct batch sizes then reuses one compilation per
     bucket instead of recompiling ``device_search`` for every new B.
+    ``max_hops`` caps the global hop budget below the width-derived
+    default — the deadline-aware degraded-search knob: a truncated search
+    returns the best-so-far beam instead of running to convergence.
     """
     di = to_device_index(snap)
     queries = np.asarray(queries, np.float32)
@@ -1248,6 +1312,7 @@ def search_batch(
         m=snap.m,
         o=snap.o,
         metric="l2" if snap.metric == "l2" else "cosine",
+        max_hops=max_hops,
         backend=backend,
         pipeline=pipeline,
         visited=visited,

@@ -159,8 +159,15 @@ def make_serving_fn(
     visited_bits: int | None = None,
     pad_batch: bool = True,
     visited_adaptive: bool = False,
+    max_hops: int | None = None,
 ):
     """jit-compiled query-sharded serving function.
+
+    ``max_hops`` caps the global hop budget below the width-derived
+    default — the sharded twin of the serve engine's deadline-aware
+    degraded budget: a capped serving function returns best-so-far beams
+    instead of running stragglers to convergence, bounding the per-wave
+    wall clock on every shard.
 
     Returns ``fn(queries, ranges) -> SearchResult`` with queries/ranges/
     results sharded over ``data_axis`` and the index replicated.  With
@@ -187,7 +194,8 @@ def make_serving_fn(
     sh1 = NamedSharding(mesh, P(data_axis))
     nd = int(mesh.shape[data_axis])
     W = max(width, k)
-    H = _default_max_hops(W)  # hops <= max_hops: the histogram's last bin
+    # hops <= max_hops: the histogram's last bin
+    H = int(max_hops) if max_hops is not None else _default_max_hops(W)
     # scalars extracted eagerly: the serve closure must not keep the whole
     # host-side snapshot (O(n*d) arrays) alive next to the device copy
     m, o = snap.m, snap.o
@@ -217,6 +225,7 @@ def make_serving_fn(
             m=m,
             o=o,
             metric=metric,
+            max_hops=max_hops,
             backend=backend,
             pipeline=pipeline,
             visited=visited,

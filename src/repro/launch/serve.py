@@ -75,6 +75,25 @@ def main() -> None:
                          "automatically once the tombstone fraction reaches "
                          "this value (checked at insert_batch / checkpoint "
                          "boundaries; logged via repro.core.index)")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the request-lifecycle engine "
+                         "(repro.serve.lifecycle): admission queue + "
+                         "deadlines + backpressure + degraded-mode search; "
+                         "--ingest rides the same scheduler via the "
+                         "WAL-backed ingest queue")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="with --engine: open-loop arrival rate in "
+                         "queries/s (0 = submit everything immediately, "
+                         "i.e. a closed burst)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="with --engine: per-request deadline; requests "
+                         "that cannot finish in time complete degraded "
+                         "(reduced hop budget), never time out")
+    ap.add_argument("--max-wave", type=int, default=64,
+                    help="with --engine: widest scheduled wave")
+    ap.add_argument("--queue-cap", type=int, default=512,
+                    help="with --engine: admission-queue bound; submits "
+                         "past it are rejected with a retry-after hint")
     args = ap.parse_args()
 
     import numpy as np
@@ -145,6 +164,14 @@ def main() -> None:
     if args.compact:
         h0, h1 = (int(x) for x in args.compact.split(","))
         compact = (h0, h1)
+
+    if args.engine:
+        if args.mesh:
+            ap.error("--engine and --mesh are mutually exclusive (the "
+                     "engine schedules waves itself)")
+        _serve_engine(args, wl, idx, snap, recall)
+        return
+
     if args.mesh:
         import jax
 
@@ -247,6 +274,103 @@ def main() -> None:
             path = idx.checkpoint(args.index_dir)
             print(f"incremental checkpoint to {path} in "
                   f"{(time.time()-t0)*1e3:.0f} ms")
+
+
+def _serve_engine(args, wl, idx, snap, recall) -> None:
+    """Engine-driven serving: admit the workload through the request
+    lifecycle (open-loop at ``--rate`` or as a closed burst), drive the
+    scheduler to drain, then print per-request latency percentiles +
+    QPS (admission->reply) and the shutdown summary."""
+    import numpy as np
+
+    from ..serve.lifecycle import EngineConfig, Rejected, ServeEngine
+
+    cfg = EngineConfig(
+        k=args.k, width=args.width, backend=args.backend,
+        visited=args.visited, visited_bits=args.visited_bits,
+        adaptive=args.adaptive_filter, max_wave=args.max_wave,
+        queue_cap=args.queue_cap,
+        default_timeout_s=(args.deadline_ms / 1e3
+                           if args.deadline_ms > 0 else None),
+        build_backend=args.build_backend,
+    )
+    eng = ServeEngine(index=idx, snapshot=snap, config=cfg)
+    if args.ingest > 0:
+        if idx is None:
+            from ..persist import open_durable
+
+            idx = open_durable(args.index_dir,
+                               compact_threshold=args.compact_threshold)
+            eng = ServeEngine(index=idx, config=cfg)
+        from ..core.datasets import make_attrs, make_vectors
+
+        extra_v = make_vectors(args.ingest, args.dim, seed=99)
+        extra_a = (make_attrs(extra_v, seed=99)
+                   + float(np.max(wl.attrs)) + 1.0)
+        ir = eng.submit_ingest(extra_v, extra_a)
+        print(f"ingest admitted (durable ack, applies interleave with "
+              f"queries): {ir!r}")
+
+    # precompile every wave/compaction bucket before traffic: lazy shape
+    # discovery would block a live request behind an XLA compile
+    print(f"engine warmup (all wave shapes) in {eng.warmup():.2f} s")
+
+    replies: list = []
+    rid_to_qi: dict = {}
+    rejected = 0
+    period = 1.0 / args.rate if args.rate > 0 else 0.0
+    next_t = time.monotonic()
+    for i in range(args.queries):
+        if period:
+            # open-loop arrivals: hold the offered load fixed and keep the
+            # scheduler busy between arrivals instead of sleeping idle
+            while True:
+                now = time.monotonic()
+                if now >= next_t:
+                    break
+                if not eng.idle:
+                    replies.extend(eng.step())
+                else:
+                    time.sleep(min(1e-3, next_t - now))
+            next_t += period
+        out = eng.submit(wl.queries[i], wl.ranges[i])
+        if isinstance(out, Rejected):
+            rejected += 1
+        else:
+            rid_to_qi[out.rid] = i
+        if period:
+            replies.extend(eng.step())
+        # closed burst: no step between submits, so the scheduler sees the
+        # whole backlog and assembles full-width waves
+    replies.extend(eng.drain())
+
+    recs = []
+    for r in replies:
+        qi = rid_to_qi.get(r.rid)
+        if qi is None:
+            continue
+        got = np.asarray([j for j in r.ids if j >= 0])
+        recs.append(recall(got, wl.gt[qi]))
+    s = eng.engine_stats()
+    print(f"engine served {s['served']} queries "
+          f"(admitted {s['admitted']}, rejected {rejected}, "
+          f"degraded {s['degraded']}, expired-in-queue {s['expired']}): "
+          f"recall@{args.k} = {float(np.mean(recs)):.4f}")
+    print(f"latency admission->reply: p50={s['p50_ms']:.1f} ms "
+          f"p95={s['p95_ms']:.1f} ms p99={s['p99_ms']:.1f} ms, "
+          f"throughput {s['qps']:.0f} QPS"
+          + (f" (offered {args.rate:.0f} QPS open-loop)"
+             if period else " (closed burst)"))
+    print(f"shutdown summary: waves={s['waves']} chunks={s['chunks']} "
+          f"shed_waves={s['shed_waves']} queue_peak={s['queue_peak']} "
+          f"ingest_batches={s['ingest']['batches']} "
+          f"ingest_rows={s['ingest']['rows']} "
+          f"applied_lsn={s['applied_lsn']}")
+    if args.ingest > 0 and args.index_dir and idx is not None:
+        t0 = time.time()
+        path = idx.checkpoint(args.index_dir)
+        print(f"incremental checkpoint to {path} in "
+              f"{(time.time()-t0)*1e3:.0f} ms")
 
 
 if __name__ == "__main__":

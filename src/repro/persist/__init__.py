@@ -11,7 +11,14 @@ from .checkpoint import (  # noqa: F401
     save,
     state_digest,
 )
-from .faultfs import CrashError, FaultIO, OsIO, flip_bit, truncate_at  # noqa: F401
+from .faultfs import (  # noqa: F401
+    CrashError,
+    EngineFaultPlan,
+    FaultIO,
+    OsIO,
+    flip_bit,
+    truncate_at,
+)
 from .format import CorruptError  # noqa: F401
 from .recovery import (  # noqa: F401
     is_durable_dir,

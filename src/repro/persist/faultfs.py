@@ -254,6 +254,81 @@ class FaultIO(OsIO):
             self._synced_len[path] = length
 
 
+# ----------------------------------------------------- engine-level fault plan
+class EngineFaultPlan:
+    """Fault plan for the serve engine's request lifecycle
+    (``repro.serve.lifecycle.ServeEngine(fault_plan=...)``) — the
+    scheduler-level complement of ``FaultIO``'s byte/op-level injection.
+
+    The engine calls ``on_chunk`` before every executed hop chunk and
+    ``on_ingest_apply`` before every ingest micro-batch apply; the plan
+    either delays (injected slow waves — via ``sleep``, which a
+    deterministic test points at its virtual clock's ``advance``) or
+    raises ``CrashError`` at a configured point (simulated process death
+    between the WAL ack and the apply — the window the WAL-backed ingest
+    queue must survive).  Byte-level faults (torn WAL appends, dropped
+    fsyncs) compose by also handing the engine's index a ``FaultIO``;
+    SIGKILL-grade crashes are exercised by the subprocess tests, which
+    this plan cannot (and should not) emulate in-process.
+
+    Parameters
+    ----------
+    slow_chunk_every:
+        Delay every Nth executed chunk (0 = never) by ``slow_chunk_s``.
+    slow_chunk_s:
+        The injected delay in seconds, applied through ``sleep``.
+    crash_after_chunks:
+        Raise ``CrashError`` once this many chunks have executed.
+    crash_after_ingest_applies:
+        Raise ``CrashError`` once this many ingest micro-batches have
+        been applied — the mid-ingest-queue crash point: earlier batches
+        are applied, later ones are logged-and-acked but pending.
+    sleep:
+        Delay implementation (default ``time.sleep``); tests substitute a
+        virtual clock's ``advance`` for deterministic deadline storms.
+    """
+
+    def __init__(
+        self,
+        slow_chunk_every: int = 0,
+        slow_chunk_s: float = 0.0,
+        crash_after_chunks: int | None = None,
+        crash_after_ingest_applies: int | None = None,
+        sleep=None,
+    ):
+        import time
+
+        self.slow_chunk_every = int(slow_chunk_every)
+        self.slow_chunk_s = float(slow_chunk_s)
+        self.crash_after_chunks = crash_after_chunks
+        self.crash_after_ingest_applies = crash_after_ingest_applies
+        self.sleep = sleep if sleep is not None else time.sleep
+        self.chunks = 0
+        self.ingest_applies = 0
+
+    def on_chunk(self) -> None:
+        self.chunks += 1
+        if (
+            self.crash_after_chunks is not None
+            and self.chunks > self.crash_after_chunks
+        ):
+            raise CrashError(
+                f"injected engine crash (chunk {self.chunks})"
+            )
+        if self.slow_chunk_every and self.chunks % self.slow_chunk_every == 0:
+            self.sleep(self.slow_chunk_s)
+
+    def on_ingest_apply(self) -> None:
+        self.ingest_applies += 1
+        if (
+            self.crash_after_ingest_applies is not None
+            and self.ingest_applies > self.crash_after_ingest_applies
+        ):
+            raise CrashError(
+                f"injected engine crash (ingest apply {self.ingest_applies})"
+            )
+
+
 # --------------------------------------------------------------- test helpers
 def flip_bit(path: str, byte_index: int, bit: int = 0) -> None:
     """Flip one bit of a file in place (corruption injection)."""

@@ -5,14 +5,25 @@ greedy/temperature sampling.  ``RagPipeline`` composes it with a WoW index:
 the LM backbone embeds the query (mean-pooled final hidden states — the
 standard decoder-as-encoder trick), WoW retrieves the nearest in-range
 documents, and the ids are returned for context assembly.
+
+The pipeline is the *synchronous* serving surface: each ``retrieve_batch``
+call is one wave, start to finish.  The request-lifecycle engine
+(``repro.serve.lifecycle.ServeEngine`` — admission queue, deadlines,
+backpressure, degraded-mode search, WAL-backed ingest replay) wraps the
+same index; ``RagPipeline.engine()`` builds one that shares the pipeline's
+index, search knobs and ``ServeStats``, so ``stats()`` stays the single
+source of truth whichever surface served the request.
 """
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .lifecycle import IngestResult, ServeStats, validate_rows
 
 from ..configs.base import ArchConfig
 from ..models.model import forward, init_cache
@@ -134,6 +145,7 @@ class RagPipeline:
         self.index_dir = index_dir
         self.compact_threshold = compact_threshold
         self._hop_log: list = []  # rolling hop histogram (serve feedback)
+        self._stats = ServeStats()
         self._snap = None
         self._snap_key = None
         self._index = None
@@ -183,12 +195,20 @@ class RagPipeline:
         return vid
 
     def add_documents(self, doc_tokens: np.ndarray, attrs, payloads=None,
-                      batch_size: int = 128) -> np.ndarray:
+                      batch_size: int = 128) -> IngestResult:
         """Ingest-while-serve: one batched embed pass + ``insert_batch``
         micro-batches (vectorized Algorithm 1).  The serving snapshot is NOT
         rebuilt here — ``retrieve_batch`` refreshes it lazily on the next
         call (``take_snapshot`` row compaction is vectorized, so the refresh
-        stays off the request path's critical budget).  Returns vertex ids.
+        stays off the request path's critical budget).
+
+        Rows are validated *individually*: a half-bad batch commits its
+        good rows and reports the bad ones in ``IngestResult.rejected``
+        instead of raising mid-stream and leaving the caller guessing
+        which prefix landed.  The result is array-like over the committed
+        vertex ids, so existing callers that indexed the return keep
+        working.  Structural errors (payload/attr length mismatch, wrong
+        embedding dimension) still raise.
         """
         doc_tokens = np.asarray(doc_tokens)
         attrs = np.asarray(attrs, dtype=np.float64).reshape(-1)
@@ -197,12 +217,55 @@ class RagPipeline:
                 f"{len(payloads)} payloads for {len(attrs)} documents"
             )
         embs = self.server.embed(doc_tokens)
-        vids = self.index.insert_batch(embs, attrs, batch_size=batch_size,
-                                       backend=self.build_backend)
+        keep, rejected = validate_rows(embs, attrs, self.index.dim)
+        vids = np.empty(0, np.int64)
+        if keep.any():
+            vids = self.index.insert_batch(
+                embs[keep], attrs[keep], batch_size=batch_size,
+                backend=self.build_backend,
+            )
         if payloads is None:
-            payloads = [None] * len(vids)
-        self.docs.extend(payloads)
-        return vids
+            payloads = [None] * len(attrs)
+        self.docs.extend(p for p, ok in zip(payloads, keep) if ok)
+        self._stats.ingest_batches += 1
+        self._stats.ingest_rows += int(keep.sum())
+        self._stats.ingest_rejected_rows += len(rejected)
+        return IngestResult(
+            vids=vids, accepted=int(keep.sum()), rejected=rejected,
+            lsn=getattr(self.index, "_applied_lsn", 0), pending=False,
+        )
+
+    def stats(self) -> dict:
+        """Serving statistics — the single source of truth for both
+        surfaces: per-request p50/p95/p99 latency + QPS
+        (admission->reply), degraded/shed fractions, ingest accounting.
+        A ``ServeEngine`` built via ``engine()`` feeds the same
+        ``ServeStats``, so its waves show up here too."""
+        out = self._stats.summary()
+        out["docs"] = len(self.docs)
+        out["index_size"] = len(self._index) if self._index is not None else 0
+        return out
+
+    def engine(self, config=None, now=None, fault_plan=None, **knobs):
+        """Build a request-lifecycle ``ServeEngine`` over this pipeline's
+        index, inheriting its search/build knobs (override per-knob via
+        ``knobs`` — any ``EngineConfig`` field) and sharing its
+        ``ServeStats``.  In durable mode this recovers the host index
+        first (ingest needs it); the already-loaded serving snapshot is
+        handed over so the engine's first wave does not re-snapshot."""
+        from .lifecycle import EngineConfig, ServeEngine
+
+        if config is None:
+            base = dict(backend=self.backend, visited=self.visited,
+                        adaptive=self.visited_adaptive,
+                        build_backend=self.build_backend)
+            base.update(knobs)
+            config = EngineConfig(**base)
+        elif knobs:
+            raise ValueError("pass either config= or **knobs, not both")
+        return ServeEngine(index=self.index, snapshot=self._snap,
+                           config=config, now=now, fault_plan=fault_plan,
+                           stats=self._stats)
 
     def retrieve(self, query_tokens: np.ndarray, attr_range: tuple[float, float],
                  k: int = 5, ef: int = 48):
@@ -223,6 +286,7 @@ class RagPipeline:
         from ..core.device_search import search_batch
         from ..core.snapshot import take_snapshot
 
+        t_arrival = time.monotonic()
         # the index's monotone mutation stamp changes on any insert/delete/
         # undelete (counting sizes alone would miss an undelete+delete pair).
         # In durable cold-start mode the host index may not be recovered yet
@@ -252,4 +316,10 @@ class RagPipeline:
             self._hop_log = self._hop_log[-16:]  # bounded rolling window
         ids = np.asarray(res.ids)
         mapped = np.where(ids >= 0, self._snap.ids_map[np.clip(ids, 0, None)], -1)
+        t_done = time.monotonic()
+        B = len(ids)
+        self._stats.submitted += B
+        self._stats.admitted += B
+        for _ in range(B):  # one synchronous wave = B identical latencies
+            self._stats.note_reply(t_done, t_done - t_arrival, False)
         return mapped, np.asarray(res.dists)
