@@ -1,0 +1,32 @@
+"""wowlint — repo-specific static analysis + runtime invariants.
+
+The contracts this repo's performance rests on (pow2-only compile shapes
+in the serve path, no host round-trips inside jitted hop chunks,
+f32-everywhere distance math, buffer-donation discipline, log->fsync->ack
+durability ordering) are invisible to generic linters: they are properties
+of *how jax traces the code*, not of the Python surface.  This package
+enforces them:
+
+- ``repro.analysis.passes`` — AST passes over the lint surface
+  (jit-purity, shape-discipline, dtype-drift, donation-safety,
+  durability-ordering), built on the call-graph / taint machinery in
+  ``repro.analysis.callgraph``.
+- ``repro.analysis.compile_guard`` — ``CompileCounter``, the runtime
+  compile-cache guard tests use to assert "zero new compiles after
+  ``warmup()``".
+- ``python -m repro.analysis --fail-on-findings`` — the CI entry point
+  (clean-or-fail; see ``ANALYSIS.md`` for the pass catalog and the
+  ``# wowlint: disable=<pass>`` suppression syntax).
+"""
+from .compile_guard import CompileCounter, trace_compiles
+from .engine import LintEngine, lint_paths, lint_repo
+from .findings import Finding
+
+__all__ = [
+    "CompileCounter",
+    "Finding",
+    "LintEngine",
+    "lint_paths",
+    "lint_repo",
+    "trace_compiles",
+]

@@ -1,0 +1,109 @@
+"""CLI: ``python -m repro.analysis`` (also ``tools/wowlint``).
+
+Modes:
+  (default)            lint the surface, print findings, exit 0
+  --fail-on-findings   exit 1 if any finding survives suppressions +
+                       baseline (the CI gate)
+  --pass NAME          run a single pass (repeatable)
+  PATH [PATH...]       lint explicit files, scope filters bypassed
+  --write-baseline     accept current findings into wowlint_baseline.json
+  --list-passes        pass catalog
+  --report-dead        surface modules unreachable from any entry point
+  --compile-smoke      runtime compile-guard self-check: a tiny jit must
+                       compile exactly once, then hit the cache
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .engine import (
+    BASELINE_PATH,
+    LintEngine,
+    lint_paths,
+    report_dead,
+    surface_files,
+)
+from .findings import load_baseline, save_baseline
+from .passes import ALL_PASSES
+
+
+def _compile_smoke() -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from .compile_guard import CompileCounter
+
+    @jax.jit
+    def f(x):
+        return jnp.sum(x * x)
+
+    x = jnp.arange(8, dtype=jnp.float32)
+    with CompileCounter() as cold:
+        f(x).block_until_ready()
+    with CompileCounter() as warm:
+        f(x).block_until_ready()
+    ok = cold.count >= 1 and warm.count == 0
+    print(f"compile-guard smoke: cold={cold.count} warm={warm.count} "
+          f"{'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="wowlint", description=__doc__)
+    ap.add_argument("paths", nargs="*", type=Path)
+    ap.add_argument("--fail-on-findings", action="store_true")
+    ap.add_argument("--pass", dest="passes", action="append", default=None,
+                    metavar="NAME")
+    ap.add_argument("--baseline", type=Path, default=BASELINE_PATH)
+    ap.add_argument("--no-baseline", action="store_true")
+    ap.add_argument("--write-baseline", action="store_true")
+    ap.add_argument("--list-passes", action="store_true")
+    ap.add_argument("--report-dead", action="store_true")
+    ap.add_argument("--compile-smoke", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for p in ALL_PASSES:
+            scope = p.SCOPE or "(whole surface)"
+            print(f"{p.NAME:20s} {p.DESCRIPTION}  [scope: {scope}]")
+        return 0
+    if args.compile_smoke:
+        return _compile_smoke()
+    if args.report_dead:
+        dead = report_dead()
+        if dead:
+            print("unreachable from any entry point:")
+            for m in dead:
+                print(f"  {m}")
+        else:
+            print("no dead modules in the lint surface")
+        return 0
+
+    if args.paths:
+        findings = lint_paths(args.paths, passes=args.passes)
+    else:
+        findings = LintEngine(surface_files(), passes=args.passes).run()
+        if not args.no_baseline:
+            accepted = load_baseline(args.baseline)
+            findings = [f for f in findings if f.key() not in accepted]
+
+    if args.write_baseline:
+        save_baseline(args.baseline, findings)
+        print(f"baseline: {len(findings)} finding(s) -> {args.baseline}")
+        return 0
+
+    for f in findings:
+        print(f.render())
+    n = len(findings)
+    nfiles = len({f.path for f in findings})
+    if n:
+        print(f"\n{n} finding(s) in {nfiles} file(s)")
+    else:
+        print("wowlint: clean")
+    return 1 if (n and args.fail_on_findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

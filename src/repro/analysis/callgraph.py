@@ -1,0 +1,386 @@
+"""AST module index, jit-root detection, call graph, module reachability.
+
+This is the shared machinery under the wowlint passes.  It answers three
+questions about the lint surface without importing any of it:
+
+1. *Which functions are jit roots?*  A root is a function decorated with
+   ``@jax.jit`` / ``@functools.partial(jax.jit, ...)``, wrapped at a call
+   site (``jax.jit(f)``, ``jax.jit(self._impl)``), or handed to
+   ``pl.pallas_call`` as the kernel.  Static argnames/argnums and
+   ``donate_argnums`` are extracted alongside.
+2. *Which functions are traced?*  The transitive callees of the roots,
+   resolved through local defs, ``from x import y`` aliases, module
+   aliases, and ``self.`` method calls — the set the jit-purity pass
+   walks.  Resolution never crosses into quarantined modules.
+3. *Which modules are dead?*  An import graph over ``repro.*`` (including
+   module names referenced from string literals — subprocess test
+   scripts build import statements in strings, and a pure-AST walk would
+   report their targets as false corpses) BFS'd from the entry points:
+   tests, benchmarks, tools, launchers, ``__main__`` modules.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_STR_MODULE_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+
+
+def dotted(node: ast.AST) -> str | None:
+    """Render a Name/Attribute chain as 'a.b.c' (None for anything else)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclass
+class ModuleFile:
+    path: Path
+    module: str  # dotted module name ("repro.core.device_search")
+    source: str
+    tree: ast.Module
+    rel: str  # repo-relative posix path for findings
+    is_pkg: bool = False  # __init__.py (relative imports resolve deeper)
+
+
+@dataclass
+class FuncInfo:
+    mod: ModuleFile
+    qualname: str  # "module:Class.name" or "module:name"
+    name: str
+    cls: str | None
+    node: ast.FunctionDef
+    params: list[str] = field(default_factory=list)
+    jit_root: bool = False
+    root_kind: str | None = None  # "jit" | "pallas"
+    static_params: set[str] = field(default_factory=set)
+    donated: set[int] = field(default_factory=set)  # positional indices
+
+    @property
+    def line(self) -> int:
+        return self.node.lineno
+
+
+def load_module_file(path: Path, module: str, repo_root: Path) -> ModuleFile:
+    source = path.read_text()
+    tree = ast.parse(source, filename=str(path))
+    try:
+        rel = path.resolve().relative_to(repo_root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    return ModuleFile(path=path, module=module, source=source, tree=tree,
+                      rel=rel, is_pkg=path.name == "__init__.py")
+
+
+def _const_strs(node: ast.AST) -> list[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+        return out
+    return []
+
+
+def _const_ints(node: ast.AST) -> list[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)]
+    return []
+
+
+def _jit_call_info(call: ast.Call) -> dict | None:
+    """If ``call`` is jax.jit(...) / partial(jax.jit, ...), extract the
+    static/donate config; None otherwise."""
+    fn = dotted(call.func)
+    keywords = call.keywords
+    if fn in _JIT_NAMES:
+        pass
+    elif fn in _PARTIAL_NAMES and call.args:
+        inner = dotted(call.args[0])
+        if inner not in _JIT_NAMES:
+            return None
+    else:
+        return None
+    info = {"static_names": set(), "static_nums": set(), "donate": set()}
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            info["static_names"].update(_const_strs(kw.value))
+        elif kw.arg == "static_argnums":
+            info["static_nums"].update(_const_ints(kw.value))
+        elif kw.arg == "donate_argnums":
+            info["donate"].update(_const_ints(kw.value))
+    return info
+
+
+def _apply_root(fi: FuncInfo, info: dict, kind: str = "jit") -> None:
+    fi.jit_root = True
+    fi.root_kind = fi.root_kind or kind
+    fi.static_params.update(info.get("static_names", ()))
+    params = fi.params
+    for i in info.get("static_nums", ()):
+        if 0 <= i < len(params):
+            fi.static_params.add(params[i])
+    fi.donated.update(info.get("donate", ()))
+
+
+class RepoIndex:
+    """Parsed lint surface: functions, imports, call resolution."""
+
+    def __init__(self, files: list[ModuleFile]):
+        self.files = files
+        self.by_module: dict[str, ModuleFile] = {f.module: f for f in files}
+        self.functions: dict[str, FuncInfo] = {}
+        # per-module name tables
+        self._locals: dict[str, dict[str, str]] = {}  # mod -> name -> qual
+        self._methods: dict[str, dict[str, dict[str, str]]] = {}
+        self._imports: dict[str, dict[str, tuple[str, str | None]]] = {}
+        for f in files:
+            self._index_module(f)
+        for f in files:
+            self._detect_roots(f)
+
+    # ------------------------------------------------------------ indexing
+    def _index_module(self, mf: ModuleFile) -> None:
+        locs: dict[str, str] = {}
+        meths: dict[str, dict[str, str]] = {}
+        imps: dict[str, tuple[str, str | None]] = {}
+        self._locals[mf.module] = locs
+        self._methods[mf.module] = meths
+        self._imports[mf.module] = imps
+
+        def add_func(node: ast.FunctionDef, cls: str | None) -> FuncInfo:
+            qual = (f"{mf.module}:{cls}.{node.name}" if cls
+                    else f"{mf.module}:{node.name}")
+            params = [a.arg for a in node.args.posonlyargs + node.args.args]
+            fi = FuncInfo(mod=mf, qualname=qual, name=node.name, cls=cls,
+                          node=node, params=params)
+            self.functions[qual] = fi
+            return fi
+
+        for node in mf.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi = add_func(node, None)
+                locs[node.name] = fi.qualname
+                # nested defs (factory-made kernels) are indexed too, so a
+                # pallas_call on a closure-local kernel still resolves
+                for sub in ast.walk(node):
+                    if sub is not node and isinstance(sub, ast.FunctionDef):
+                        add_func(sub, None)
+            elif isinstance(node, ast.ClassDef):
+                table: dict[str, str] = {}
+                meths[node.name] = table
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef):
+                        fi = add_func(item, node.name)
+                        table[item.name] = fi.qualname
+                        for sub in ast.walk(item):
+                            if sub is not item and isinstance(
+                                    sub, ast.FunctionDef):
+                                add_func(sub, node.name)
+            elif isinstance(node, ast.ImportFrom):
+                target = self._resolve_from(mf.module, node, mf.is_pkg)
+                if target:
+                    for alias in node.names:
+                        imps[alias.asname or alias.name] = (
+                            target, alias.name)
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    imps[alias.asname or alias.name] = (alias.name, None)
+
+    @staticmethod
+    def _resolve_from(module: str, node: ast.ImportFrom,
+                      is_pkg: bool = False) -> str | None:
+        if node.level == 0:
+            return node.module
+        parts = module.split(".")
+        # level 1 = current package: the module's parent — except for a
+        # package __init__, whose "current package" is itself
+        level = node.level - 1 if is_pkg else node.level
+        base = parts[: len(parts) - level]
+        if not base:
+            return None
+        if node.module:
+            base = base + node.module.split(".")
+        return ".".join(base)
+
+    # ------------------------------------------------------- root detection
+    def _detect_roots(self, mf: ModuleFile) -> None:
+        # decorator roots
+        for fi in [f for f in self.functions.values() if f.mod is mf]:
+            for dec in fi.node.decorator_list:
+                if dotted(dec) in _JIT_NAMES:
+                    _apply_root(fi, {})
+                elif isinstance(dec, ast.Call):
+                    info = _jit_call_info(dec)
+                    if info is not None:
+                        _apply_root(fi, info)
+        # call-site roots: jax.jit(f), jax.jit(self._impl), pl.pallas_call(k)
+        for node in ast.walk(mf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = dotted(node.func)
+            info = _jit_call_info(node)
+            target: ast.AST | None = None
+            kind = "jit"
+            if info is not None and node.args:
+                target = node.args[0]
+                if dotted(target) in _JIT_NAMES and len(node.args) > 1:
+                    target = node.args[1]  # partial(jax.jit, ...) has no fn
+            elif fn and fn.split(".")[-1] == "pallas_call" and node.args:
+                target = node.args[0]
+                info = {}
+                kind = "pallas"
+            if target is None or info is None:
+                continue
+            tfi = self._resolve_target(mf, target)
+            if tfi is not None:
+                _apply_root(tfi, info, kind)
+
+    def _resolve_target(self, mf: ModuleFile, node: ast.AST) -> FuncInfo | None:
+        d = dotted(node)
+        if d is None:
+            return None
+        if d.startswith("self."):
+            name = d.split(".", 1)[1]
+            for table in self._methods[mf.module].values():
+                if name in table:
+                    return self.functions[table[name]]
+            return None
+        return self.resolve_call(mf, node, cls=None)
+
+    # ------------------------------------------------------ call resolution
+    def resolve_call(self, mf: ModuleFile, func: ast.AST,
+                     cls: str | None) -> FuncInfo | None:
+        """Resolve a call's callee to a surface FuncInfo, or None."""
+        d = dotted(func)
+        if d is None:
+            return None
+        parts = d.split(".")
+        locs = self._locals[mf.module]
+        imps = self._imports[mf.module]
+        if len(parts) == 1:
+            name = parts[0]
+            if name in locs:
+                return self.functions[locs[name]]
+            if name in imps:
+                src_mod, src_name = imps[name]
+                return self._lookup(src_mod, src_name or name)
+            # nested def in an enclosing function of this module
+            qual = f"{mf.module}:{name}"
+            return self.functions.get(qual)
+        if parts[0] == "self" and len(parts) == 2 and cls is not None:
+            table = self._methods[mf.module].get(cls, {})
+            if parts[1] in table:
+                return self.functions[table[parts[1]]]
+            return None
+        # module-alias call: alias.name(...)
+        head = parts[0]
+        if head in imps:
+            src_mod, src_name = imps[head]
+            base = src_mod if src_name is None else f"{src_mod}.{src_name}"
+            return self._lookup(base, parts[-1]) if len(parts) == 2 else None
+        return None
+
+    def _lookup(self, module: str, name: str) -> FuncInfo | None:
+        if module not in self.by_module:
+            return None
+        qual = self._locals[module].get(name)
+        if qual:
+            return self.functions[qual]
+        return None
+
+    # ---------------------------------------------------------- traced set
+    def traced_functions(self) -> dict[str, FuncInfo]:
+        """Roots plus their transitive surface callees."""
+        seen: dict[str, FuncInfo] = {}
+        stack = [f for f in self.functions.values() if f.jit_root]
+        for f in stack:
+            seen[f.qualname] = f
+        while stack:
+            fi = stack.pop()
+            for call in (n for n in ast.walk(fi.node)
+                         if isinstance(n, ast.Call)):
+                callee = self.resolve_call(fi.mod, call.func, fi.cls)
+                if callee is not None and callee.qualname not in seen:
+                    seen[callee.qualname] = callee
+                    stack.append(callee)
+        return seen
+
+    def call_sites(self, callee: FuncInfo,
+                   within: dict[str, FuncInfo]) -> list[tuple[FuncInfo,
+                                                              ast.Call]]:
+        out = []
+        for fi in within.values():
+            for call in (n for n in ast.walk(fi.node)
+                         if isinstance(n, ast.Call)):
+                if self.resolve_call(fi.mod, call.func, fi.cls) is callee:
+                    out.append((fi, call))
+        return out
+
+
+# ----------------------------------------------------------- dead modules
+def module_imports(mf: ModuleFile) -> set[str]:
+    """repro.* modules referenced by ``mf`` — AST imports plus module
+    names spelled inside string literals (subprocess test scripts)."""
+    out: set[str] = set()
+    for node in ast.walk(mf.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.startswith("repro"):
+                    out.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            base = RepoIndex._resolve_from(mf.module, node, mf.is_pkg)
+            if base and base.startswith("repro"):
+                out.add(base)
+                for alias in node.names:
+                    out.add(f"{base}.{alias.name}")
+    out.update(_STR_MODULE_RE.findall(mf.source))
+    return out
+
+
+def dead_modules(surface: list[ModuleFile],
+                 entry_files: list[ModuleFile]) -> list[str]:
+    """Surface modules unreachable from any entry file's import closure."""
+    known = {f.module for f in surface}
+    # package __init__ reachability: importing repro.core.x imports
+    # repro.core and repro first
+    def expand(mod: str) -> set[str]:
+        parts = mod.split(".")
+        return {".".join(parts[:i]) for i in range(1, len(parts) + 1)}
+
+    reached: set[str] = set()
+    frontier: list[str] = []
+    for ef in entry_files:
+        # an entry file that is itself a surface module (launchers,
+        # __main__) is alive by definition
+        if ef.module in known and ef.module not in reached:
+            reached.add(ef.module)
+            frontier.append(ef.module)
+        for mod in module_imports(ef):
+            for m in expand(mod):
+                if m in known and m not in reached:
+                    reached.add(m)
+                    frontier.append(m)
+    by_mod = {f.module: f for f in surface}
+    while frontier:
+        mod = frontier.pop()
+        for dep in module_imports(by_mod[mod]):
+            for m in expand(dep):
+                if m in known and m not in reached:
+                    reached.add(m)
+                    frontier.append(m)
+    return sorted(known - reached)

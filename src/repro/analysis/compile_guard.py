@@ -1,0 +1,92 @@
+"""Runtime compile-cache guard.
+
+``CompileCounter`` counts *real* backend compiles (jax's
+``/jax/core/compile/backend_compile_duration`` monitoring event, which
+fires once per XLA compilation and stays silent on executable-cache
+hits), so tests can assert shape-stability invariants directly:
+
+    with CompileCounter() as warm:
+        eng.warmup()
+    with CompileCounter() as serving:
+        ... serve traffic, grow the index, serve again ...
+    assert serving.count == 0   # zero new compiles after warmup
+
+jax.monitoring has no per-listener unregister (only a global
+``clear_event_listeners`` that would clobber other users), so one
+permanent module-level listener is installed lazily and dispatches to
+whichever counters are currently active — entering/exiting the context
+manager only mutates the active set.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+_COMPILE_EVENT_SUFFIX = "backend_compile_duration"
+
+_lock = threading.Lock()
+_active: list["CompileCounter"] = []
+_installed = False
+
+
+def _dispatch(event: str, duration: float, **kwargs) -> None:
+    if not event.endswith(_COMPILE_EVENT_SUFFIX):
+        return
+    with _lock:
+        counters = list(_active)
+    for c in counters:
+        c._record(duration)
+
+
+def _ensure_listener() -> None:
+    global _installed
+    with _lock:
+        if _installed:
+            return
+        from jax import monitoring
+
+        monitoring.register_event_duration_secs_listener(_dispatch)
+        _installed = True
+
+
+class CompileCounter:
+    """Context manager counting backend compiles while active."""
+
+    def __init__(self, label: str = "", verbose: bool = False):
+        self.label = label
+        self.verbose = verbose
+        self.count = 0
+        self.total_secs = 0.0
+
+    def _record(self, duration: float) -> None:
+        self.count += 1
+        self.total_secs += duration
+        if self.verbose:
+            tag = f" [{self.label}]" if self.label else ""
+            print(
+                f"[wowlint]{tag} compile #{self.count}"
+                f" (+{duration:.3f}s backend)",
+                file=sys.stderr,
+                flush=True,
+            )
+
+    def __enter__(self) -> "CompileCounter":
+        _ensure_listener()
+        with _lock:
+            _active.append(self)
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        with _lock:
+            if self in _active:
+                _active.remove(self)
+        self.wall_secs = time.perf_counter() - self._t0
+
+
+def trace_compiles(label: str = "serve") -> CompileCounter:
+    """Verbose counter for launcher-level tracing (``--trace-compiles``):
+    every backend compile prints to stderr as it happens, so a warmup gap
+    shows up as a timestamped line instead of a silent p99 spike."""
+    return CompileCounter(label=label, verbose=True)

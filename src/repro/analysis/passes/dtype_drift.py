@@ -1,0 +1,134 @@
+"""dtype-drift: the distance path is float32, everywhere, on purpose.
+
+PR 3 unified distance math on f32 after a silent f64 widening made
+host/device parity flap; the upcoming quantized arenas (ROADMAP item 2)
+make drift worse — an accidental f16/bf16 cast in the distance lane is
+a recall loss with no crash.  Until the quantization PR extends it,
+``ALLOWED_DTYPES`` is exactly ``{"float32"}`` for arrays whose names
+mark them as distance-lane values (vectors, queries, distances, norms,
+dot products).  Attribute/order-key arrays are deliberately f64 and are
+out of scope (they match no distance name).
+
+Flagged, in distance-path modules: ``.astype(<non-f32 float>)`` on a
+distance-named value, and ``zeros/full/empty/asarray/array`` creations
+of distance-named targets with a non-f32 float dtype.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from ..callgraph import ModuleFile, RepoIndex, dotted
+from ..findings import Finding
+
+NAME = "dtype-drift"
+DESCRIPTION = "non-f32 dtypes on distance-path arrays"
+SCOPE = (r"core\.(device_search|hop_reference|search|snapshot|store|"
+         r"distributed)$|kernels\.(distance|gather_distance|ops|ref)$|"
+         r"serve\.lifecycle$")
+
+# extension point for the quantized-arena PR: int8/bf16 slabs will be
+# admitted here together with their dequant scales
+ALLOWED_DTYPES = {"float32"}
+
+_DIST_RE = re.compile(
+    r"(?:^|_)(?:vec|vectors?|dist|dists|query|queries|target|norm|norms|"
+    r"dot|dots|res_d|sq_norms?|q2)(?:$|_|s$)",
+    re.IGNORECASE,
+)
+_BAD_DTYPES = {"float64", "float16", "bfloat16", "double", "half"}
+_CREATE_CALLS = {"zeros", "ones", "full", "empty", "asarray", "array",
+                 "ascontiguousarray", "full_like", "zeros_like",
+                 "ones_like", "empty_like"}
+
+
+def _dtype_name(node: ast.AST) -> str | None:
+    """'float64' for np.float64 / jnp.float64 / 'float64' / float."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.Name):
+        return {"float": "float64"}.get(node.id, node.id)
+    return None
+
+
+def _names_in(node: ast.AST) -> list[str]:
+    out = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            out.append(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            out.append(sub.attr)
+    return out
+
+
+def _is_distance_named(names: list[str]) -> bool:
+    return any(_DIST_RE.search(n) for n in names)
+
+
+def run(index: RepoIndex, files: list[ModuleFile]) -> list[Finding]:
+    out: list[Finding] = []
+
+    def flag(mf: ModuleFile, node: ast.AST, what: str, dt: str) -> None:
+        out.append(Finding(
+            pass_name=NAME, path=mf.rel, line=node.lineno,
+            message=f"distance-path {what} cast/created as {dt} "
+                    f"(allowed: {sorted(ALLOWED_DTYPES)})"))
+
+    for mf in files:
+        for node in ast.walk(mf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            # x.astype(np.float64) where x is distance-named
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                dt = _dtype_name(node.args[0])
+                if (dt in _BAD_DTYPES
+                        and _is_distance_named(_names_in(node.func.value))):
+                    flag(mf, node, "value", dt)
+                continue
+            if d is None or d.split(".")[-1] not in _CREATE_CALLS:
+                continue
+            dt = None
+            for kw in node.keywords:
+                if kw.arg == "dtype":
+                    dt = _dtype_name(kw.value)
+            if dt is None and len(node.args) >= 2:
+                cand = _dtype_name(node.args[-1])
+                if cand in _BAD_DTYPES or cand in ALLOWED_DTYPES:
+                    dt = cand
+            if dt not in _BAD_DTYPES:
+                continue
+            # creation is distance-lane if the source argument is
+            # distance-named; assigned-target names are covered below
+            names = _names_in(node.args[0]) if node.args else []
+            if _is_distance_named(names):
+                flag(mf, node, "array", dt)
+    # assignment targets need the Assign context: re-walk for
+    # `dist_x = zeros(..., dtype=f64)` style creations
+    for mf in files:
+        for node in ast.walk(mf.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            call = node.value
+            if not isinstance(call, ast.Call):
+                continue
+            d = dotted(call.func)
+            if d is None or d.split(".")[-1] not in _CREATE_CALLS:
+                continue
+            dt = None
+            for kw in call.keywords:
+                if kw.arg == "dtype":
+                    dt = _dtype_name(kw.value)
+            if dt is None and len(call.args) >= 2:
+                dt = _dtype_name(call.args[-1])
+            if dt not in _BAD_DTYPES:
+                continue
+            tnames: list[str] = []
+            for t in node.targets:
+                tnames.extend(_names_in(t))
+            if _is_distance_named(tnames):
+                flag(mf, call, "array", dt)
+    return sorted(set(out))

@@ -1,0 +1,275 @@
+"""jit-purity: no host round-trips or Python control flow on tracers.
+
+A host sync inside a jitted hop chunk (``.item()``, ``np.asarray``,
+``float()``) either fails at trace time or — worse — silently forces a
+device round-trip per call when the function also runs eagerly.  Python
+``if``/``while``/``for`` over traced values concretize the tracer and
+make the compile shape data-dependent.  This pass walks every function
+reachable from a ``@jax.jit`` / ``pl.pallas_call`` boundary (the traced
+set from the call graph) with a value-taint analysis:
+
+- jit-root parameters are tainted unless named in ``static_argnames`` /
+  ``static_argnums``; callee parameter taint is propagated from actual
+  call-site argument taint to a fixpoint (so ``_landing_and_entry``'s
+  ``o`` stays static because every caller passes ``cfg.o``);
+- ``jnp.* / lax.* / jax.* / pl.*`` results are tainted; ``.shape`` /
+  ``.ndim`` / ``.dtype`` / ``.size`` and ``is None`` comparisons are
+  static; everything else propagates.
+
+Findings: tainted args to ``float/int/bool/np.asarray/np.array``,
+``.item()``/``.tolist()`` on tainted values, and ``if``/``while``/
+``for``/ternary driven by a tainted expression.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..callgraph import FuncInfo, ModuleFile, RepoIndex, dotted
+from ..findings import Finding
+
+NAME = "jit-purity"
+DESCRIPTION = ("host round-trips / Python control flow on traced values "
+               "inside jit or pallas boundaries")
+SCOPE = None  # whole surface; findings only fire inside traced functions
+
+_TAINT_NAMESPACES = {"jnp", "lax", "jax", "jsp", "pl"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_BANNED_CALLS = {
+    "float": "float() on a traced value forces a host sync",
+    "int": "int() on a traced value forces a host sync",
+    "bool": "bool() on a traced value concretizes the tracer",
+    "np.asarray": "np.asarray on a traced value forces a host transfer",
+    "np.array": "np.array on a traced value forces a host transfer",
+    "np.ascontiguousarray":
+        "np.ascontiguousarray on a traced value forces a host transfer",
+}
+_BANNED_METHODS = {
+    "item": ".item() on a traced value forces a host sync",
+    "tolist": ".tolist() on a traced value forces a host transfer",
+}
+
+
+class _Walker:
+    """One local taint walk over a traced function body."""
+
+    def __init__(self, index: RepoIndex, fi: FuncInfo,
+                 tainted_params: set[str], traced: dict[str, FuncInfo]):
+        self.index = index
+        self.fi = fi
+        self.traced = traced
+        self.env: dict[str, bool] = {p: (p in tainted_params)
+                                     for p in fi.params}
+        self.callee_taint: dict[str, set[str]] = {}
+        self.findings: list[Finding] = []
+        self.collect = False
+
+    # ----------------------------------------------------------- taint
+    def tt(self, node: ast.AST) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, False)
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.tt(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_taint(node)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(c, (ast.Is, ast.IsNot)) for c in node.ops):
+                return False
+            return self.tt(node.left) or any(self.tt(c)
+                                             for c in node.comparators)
+        if isinstance(node, (ast.BinOp,)):
+            return self.tt(node.left) or self.tt(node.right)
+        if isinstance(node, ast.BoolOp):
+            return any(self.tt(v) for v in node.values)
+        if isinstance(node, ast.UnaryOp):
+            return self.tt(node.operand)
+        if isinstance(node, ast.IfExp):
+            if self.collect and self.tt(node.test):
+                self._flag(node, "ternary on a traced value "
+                                 "(use jnp.where)")
+            return self.tt(node.body) or self.tt(node.orelse)
+        if isinstance(node, ast.Subscript):
+            return self.tt(node.value) or self.tt(node.slice)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.tt(e) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return any(self.tt(v) for v in node.values if v is not None)
+        if isinstance(node, ast.Starred):
+            return self.tt(node.value)
+        if isinstance(node, ast.Slice):
+            return any(self.tt(p) for p in
+                       (node.lower, node.upper, node.step))
+        return False
+
+    def _call_taint(self, node: ast.Call) -> bool:
+        d = dotted(node.func)
+        args_tainted = (any(self.tt(a) for a in node.args)
+                        or any(self.tt(k.value) for k in node.keywords))
+        if d is not None:
+            head = d.split(".")[0]
+            if head in _TAINT_NAMESPACES:
+                if self.collect:
+                    self._check_banned(node, d, args_tainted)
+                return True
+            if self.collect:
+                self._check_banned(node, d, args_tainted)
+        # method call on a value: x.astype(...), st._replace(...)
+        if isinstance(node.func, ast.Attribute):
+            base_t = self.tt(node.func.value)
+            if self.collect and base_t and node.func.attr in _BANNED_METHODS:
+                self._flag(node, _BANNED_METHODS[node.func.attr])
+            callee = self.index.resolve_call(self.fi.mod, node.func,
+                                             self.fi.cls)
+            if callee is not None:
+                self._record_callsite(node, callee)
+                return args_tainted or base_t
+            return base_t or args_tainted
+        callee = self.index.resolve_call(self.fi.mod, node.func, self.fi.cls)
+        if callee is not None:
+            self._record_callsite(node, callee)
+            return args_tainted
+        if d in ("len", "range", "isinstance", "getattr", "hasattr", "min",
+                 "max", "abs", "sum", "tuple", "list", "enumerate", "zip"):
+            return args_tainted and d in ("min", "max", "abs", "sum",
+                                          "tuple", "list")
+        return args_tainted
+
+    def _check_banned(self, node: ast.Call, d: str, args_tainted: bool):
+        if d in _BANNED_CALLS and args_tainted:
+            self._flag(node, _BANNED_CALLS[d])
+
+    def _record_callsite(self, node: ast.Call, callee: FuncInfo) -> None:
+        if callee.qualname not in self.traced:
+            return
+        params = callee.params
+        offset = (1 if params and params[0] == "self"
+                  and isinstance(node.func, ast.Attribute) else 0)
+        tset = self.callee_taint.setdefault(callee.qualname, set())
+        for i, a in enumerate(node.args):
+            pi = i + offset
+            if pi < len(params) and self.tt(a):
+                tset.add(params[pi])
+        for kw in node.keywords:
+            if kw.arg is not None and kw.arg in params and self.tt(kw.value):
+                tset.add(kw.arg)
+
+    # ------------------------------------------------------- statements
+    def _flag(self, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            pass_name=NAME, path=self.fi.mod.rel, line=node.lineno,
+            message=f"{msg} (in traced `{self.fi.name}`)"))
+
+    def _assign(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            self.env[target.id] = tainted
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._assign(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self._assign(target.value, tainted)
+        # attribute/subscript stores: no local binding to update
+
+    def run_body(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self.visit_stmt(stmt)
+
+    def visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.Assign,)):
+            t = self.tt(stmt.value)
+            for tgt in stmt.targets:
+                self._assign(tgt, t)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._assign(stmt.target, self.tt(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            t = self.tt(stmt.value) or self.tt(stmt.target)
+            self._assign(stmt.target, t)
+        elif isinstance(stmt, ast.Expr):
+            self.tt(stmt.value)
+        elif isinstance(stmt, ast.Return):
+            self.tt(stmt.value)
+        elif isinstance(stmt, ast.If):
+            if self.collect and self.tt(stmt.test):
+                self._flag(stmt, "`if` on a traced value "
+                                 "(use lax.cond/jnp.where)")
+            self.run_body(stmt.body)
+            self.run_body(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            if self.collect and self.tt(stmt.test):
+                self._flag(stmt, "`while` on a traced value "
+                                 "(use lax.while_loop)")
+            self.run_body(stmt.body)
+            self.run_body(stmt.orelse)
+        elif isinstance(stmt, ast.For):
+            if self.collect and self.tt(stmt.iter):
+                self._flag(stmt, "Python loop over a traced value "
+                                 "(use lax.fori_loop/lax.scan)")
+            self._assign(stmt.target, self.tt(stmt.iter))
+            self.run_body(stmt.body)
+            self.run_body(stmt.orelse)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                t = self.tt(item.context_expr)
+                if item.optional_vars is not None:
+                    self._assign(item.optional_vars, t)
+            self.run_body(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.run_body(stmt.body)
+            for h in stmt.handlers:
+                self.run_body(h.body)
+            self.run_body(stmt.orelse)
+            self.run_body(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            pass  # nested defs are walked via the traced set, not inline
+        elif isinstance(stmt, ast.Assert):
+            self.tt(stmt.test)
+        # raise/pass/import/global: no taint flow
+
+
+def _walk(index: RepoIndex, fi: FuncInfo, tainted: set[str],
+          traced: dict[str, FuncInfo], collect: bool) -> _Walker:
+    w = _Walker(index, fi, tainted, traced)
+    # pass 1 stabilizes the local env (handles use-before-def in loops),
+    # pass 2 optionally collects findings
+    w.run_body(fi.node.body)
+    w.collect = collect
+    w.findings.clear()
+    w.callee_taint.clear()
+    w.run_body(fi.node.body)
+    return w
+
+
+def run(index: RepoIndex, files: list[ModuleFile]) -> list[Finding]:
+    traced = index.traced_functions()
+    taint: dict[str, set[str]] = {}
+    for q, fi in traced.items():
+        if fi.jit_root:
+            taint[q] = {p for p in fi.params
+                        if p not in fi.static_params and p != "self"}
+        else:
+            taint[q] = set()
+    # interprocedural fixpoint: call-site arg taint -> callee param taint
+    for _ in range(24):
+        changed = False
+        for q, fi in traced.items():
+            w = _walk(index, fi, taint[q], traced, collect=False)
+            for callee_q, params in w.callee_taint.items():
+                if not params <= taint[callee_q]:
+                    taint[callee_q] |= params
+                    changed = True
+        if not changed:
+            break
+    wanted = {f.module for f in files}
+    out: list[Finding] = []
+    for q, fi in traced.items():
+        if fi.mod.module not in wanted:
+            continue
+        w = _walk(index, fi, taint[q], traced, collect=True)
+        out.extend(w.findings)
+    return sorted(set(out))

@@ -170,13 +170,55 @@ class DeviceIndex(NamedTuple):
 
 
 def to_device_index(snap: Snapshot) -> DeviceIndex:
+    """Device-resident snapshot with **pow2-padded row capacity**.
+
+    Every jitted serve function is shape-keyed on the snapshot row count,
+    so an ingest-grown snapshot with raw shapes recompiles its first wave
+    even though ``ServeEngine.warmup()`` precompiled the whole bucket set.
+    Padding rows (and the unique-value table) to the next power of two
+    makes refreshed snapshots reuse the warmed executables until the
+    corpus actually doubles.
+
+    The padding is made unreachable, so results are bitwise those of the
+    unpadded index for finite filter ranges: pad neighbor rows are ``-1``
+    (never gathered), pad attrs are ``+inf`` (outside any finite range),
+    and pad uvals are ``+inf`` with representative 0 — ``searchsorted``
+    positions for finite query bounds are unchanged by an all-``+inf``
+    tail, so landing-layer selectivity and entry selection are identical.
+    """
+    n = int(snap.vectors.shape[0])
+    u = int(snap.uvals.shape[0])
+    n_cap = _pow2ceil(max(n, 1))
+    u_cap = _pow2ceil(max(u, 1))
+    pad_n = n_cap - n
+    pad_u = u_cap - u
+
+    def _pad(arr, pad, value):
+        width = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+        return np.pad(arr, width, constant_values=value)
+
+    vectors = np.asarray(snap.vectors, np.float32)
+    sq_norms = np.asarray(snap.sq_norms, np.float32)
+    attrs = np.asarray(snap.attrs, np.float32)
+    neighbors = np.asarray(snap.neighbors, np.int32)
+    uvals = np.asarray(snap.uvals, np.float32)
+    uval_rep = np.asarray(snap.uval_rep, np.int32)
+    if pad_n:
+        vectors = _pad(vectors, pad_n, 0.0)
+        sq_norms = _pad(sq_norms, pad_n, 0.0)
+        attrs = _pad(attrs, pad_n, np.inf)
+        neighbors = np.pad(neighbors, ((0, 0), (0, pad_n), (0, 0)),
+                           constant_values=-1)
+    if pad_u:
+        uvals = _pad(uvals, pad_u, np.inf)
+        uval_rep = _pad(uval_rep, pad_u, 0)
     return DeviceIndex(
-        vectors=jnp.asarray(snap.vectors, jnp.float32),
-        sq_norms=jnp.asarray(snap.sq_norms, jnp.float32),
-        attrs=jnp.asarray(snap.attrs, jnp.float32),
-        neighbors=jnp.asarray(snap.neighbors, jnp.int32),
-        uvals=jnp.asarray(snap.uvals, jnp.float32),
-        uval_rep=jnp.asarray(snap.uval_rep, jnp.int32),
+        vectors=jnp.asarray(vectors, jnp.float32),
+        sq_norms=jnp.asarray(sq_norms, jnp.float32),
+        attrs=jnp.asarray(attrs, jnp.float32),
+        neighbors=jnp.asarray(neighbors, jnp.int32),
+        uvals=jnp.asarray(uvals, jnp.float32),
+        uval_rep=jnp.asarray(uval_rep, jnp.int32),
     )
 
 

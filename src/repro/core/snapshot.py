@@ -55,6 +55,12 @@ from dataclasses import dataclass
 import numpy as np
 
 
+def _pow2ceil(x: int) -> int:
+    """Next power of two >= x (local twin of the device_search helper —
+    importing it here would cycle snapshot <-> device_search)."""
+    return 1 << max(0, (int(x) - 1)).bit_length()
+
+
 @dataclass(frozen=True)
 class Snapshot:
     vectors: np.ndarray
@@ -430,18 +436,26 @@ class DeviceBuildArena:
             self.o = index.params.o
             self.metric = index.params.metric
             self.num_layers = graph.num_layers
-            vec = np.zeros((self.cap, self.dim), np.float32)
+            # allocate at pow2 row capacity (graph capacity doubles from
+            # 1024 so this is usually a no-op, but a custom non-pow2
+            # capacity would otherwise key every build jit on an
+            # arbitrary row count): pad rows carry -1 neighbors and +inf
+            # attrs, so they are unreachable in phase-1 searches
+            rows = _pow2ceil(max(self.cap, 1))
+            vec = np.zeros((rows, self.dim), np.float32)
             vec[:n] = store.vectors[:n]
-            nrm = np.zeros(self.cap, np.float32)
+            nrm = np.zeros(rows, np.float32)
             nrm[:n] = store.sq_norms[:n]
-            att = np.zeros(self.cap, np.float32)
+            att = np.full(rows, np.inf, np.float32)
             att[:n] = store.attrs[:n]
+            nb = np.full((graph.num_layers, rows, graph.m), -1, np.int32)
+            nb[:, : self.cap] = np.stack(
+                [lay for lay in graph.layers], axis=0
+            )
             self.vectors = jnp.asarray(vec)
             self.sq_norms = jnp.asarray(nrm)
             self.attrs = jnp.asarray(att)
-            self.neighbors = jnp.asarray(
-                np.stack([lay for lay in graph.layers], axis=0)
-            )
+            self.neighbors = jnp.asarray(nb)
             self._dummy_u = jnp.zeros(1, jnp.float32)
             self._dummy_r = jnp.zeros(1, jnp.int32)
             self.version = graph.version

@@ -94,7 +94,18 @@ def main() -> None:
     ap.add_argument("--queue-cap", type=int, default=512,
                     help="with --engine: admission-queue bound; submits "
                          "past it are rejected with a retry-after hint")
+    ap.add_argument("--trace-compiles", action="store_true",
+                    help="print every XLA backend compile to stderr as it "
+                         "happens (wowlint compile guard): a compile after "
+                         "warmup is a shape-stability bug, visible here as "
+                         "a timestamped line instead of a silent p99 spike")
     args = ap.parse_args()
+
+    if args.trace_compiles:
+        from ..analysis.compile_guard import trace_compiles
+
+        _tracer = trace_compiles("launch.serve")
+        _tracer.__enter__()  # left active for the whole process
 
     import numpy as np
 
