@@ -23,6 +23,17 @@ so a slow CI box does not trip it), and the job fails if that ratio
 regresses more than 10% over the recorded baseline
 (``benchmarks/baselines/serve_smoke.json``; refresh deliberately with
 ``--update-baseline``).
+
+``--failover`` benches the replicated cluster instead: a 3-member
+cluster under live read traffic has its primary killed mid-run and the
+bench measures (a) time-to-first-successful-query after the kill —
+reads re-route to the admitted replicas, so this should be ~one step —
+and (b) time until the write path is restored (the first quorum-durable
+ingest ack under the new epoch), which is bounded below by the
+heartbeat timeout.  Results land under a ``"failover"`` key in
+``BENCH_device.json``; with ``--smoke`` the write-restore time is
+normalized by the configured heartbeat timeout (machine-relative) and
+gated against ``benchmarks/baselines/failover_smoke.json``.
 """
 from __future__ import annotations
 
@@ -39,6 +50,12 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          "baselines", "serve_smoke.json")
 _GATE_SLACK = 1.10  # fail --smoke beyond +10% p99 ratio regression
+_FAILOVER_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "baselines", "failover_smoke.json")
+# failover time = heartbeat timeout + detection/promotion overhead; the
+# timeout part is fixed, so the ratio is stable — but the overhead part
+# rides on scheduler noise, so the gate is looser than the latency one
+_FAILOVER_SLACK = 1.50
 
 
 def _build(n, d, nq, m, ef):
@@ -140,6 +157,122 @@ def _raw_wave_ms(idx, wl, reps=3):
     return best * 1e3
 
 
+def run_failover(smoke: bool = False, update_baseline: bool = False) -> int:
+    """Kill the primary of a live 3-member cluster and measure recovery:
+    read gap (first successful query after the kill) and write restore
+    (first quorum-durable ingest ack under the new epoch)."""
+    import shutil
+    import tempfile
+
+    from repro.core import make_workload
+    from repro.serve.cluster import Cluster
+    from repro.serve.lifecycle import EngineConfig
+
+    if smoke:
+        n, d, nq = 600, 12, 48
+    else:
+        n, d, nq = min(BENCH_N, 4000), BENCH_D, max(BENCH_Q, 48)
+    hb_timeout = 0.2
+    wl = make_workload(n=n, d=d, nq=nq, seed=0, k=10)
+    tmp = tempfile.mkdtemp(prefix="bench-failover-")
+    try:
+        cfg = EngineConfig(k=10, width=48, visited="bitmap", adaptive=False,
+                           chunk=(16, 8), max_wave=32, queue_cap=512)
+        c = Cluster([os.path.join(tmp, f"m{i}") for i in range(3)],
+                    create=dict(dim=d, m=8, ef_construction=32, o=4, seed=0),
+                    config=cfg, heartbeat_s=0.02,
+                    heartbeat_timeout_s=hb_timeout)
+        for lo in range(0, n, 256):
+            c.submit_ingest(wl.vectors[lo:lo + 256], wl.attrs[lo:lo + 256])
+            c.drain()
+        c.warmup()
+        for i in range(8):  # steady state: reads flowing on every member
+            c.submit(wl.queries[i % nq], wl.ranges[i % nq])
+        c.drain()
+
+        victim = c.primary_id
+        t_kill = time.perf_counter()
+        c.kill(victim)
+        first_read = None
+        write_restore = None
+        qi = 0
+        while (time.perf_counter() - t_kill) < 60.0:
+            if len(c._outstanding) < 8:
+                c.submit(wl.queries[qi % nq], wl.ranges[qi % nq])
+                qi += 1
+            got = c.step()
+            now = time.perf_counter()
+            if got and first_read is None:
+                first_read = now - t_kill
+            if write_restore is None:
+                try:
+                    c.submit_ingest(wl.vectors[:1], wl.attrs[:1])
+                    write_restore = now - t_kill
+                except RuntimeError:
+                    pass  # no live primary yet: the failover window
+            if first_read is not None and write_restore is not None:
+                break
+        c.drain()
+        if first_read is None or write_restore is None:
+            print("FAIL: cluster did not recover within 60s after the "
+                  "primary kill", flush=True)
+            return 1
+        assert c.failovers and not c.failovers[0]["planned"]
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    ratio = write_restore / hb_timeout
+    emit("failover_first_read", first_read * 1e6,
+         f"read gap after primary kill; n={n};members=3")
+    emit("failover_write_restore", write_restore * 1e6,
+         f"heartbeat_timeout={hb_timeout};ratio={ratio:.2f}")
+    record = {
+        "workload": {"n": n, "d": d, "nq": nq, "members": 3,
+                     "heartbeat_timeout_s": hb_timeout},
+        "first_read_ms": round(first_read * 1e3, 3),
+        "write_restore_ms": round(write_restore * 1e3, 3),
+        "restore_over_timeout": round(ratio, 3),
+    }
+    write_csv("bench_failover.csv",
+              ["members", "first_read_ms", "write_restore_ms",
+               "restore_over_timeout"],
+              [[3, record["first_read_ms"], record["write_restore_ms"],
+                record["restore_over_timeout"]]])
+
+    if not smoke:
+        path = os.path.join(_REPO_ROOT, "BENCH_device.json")
+        blob = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                blob = json.load(f)
+        blob["failover"] = record
+        with open(path, "w") as f:
+            json.dump(blob, f, indent=1)
+        return 0
+
+    # --smoke: gate restore/timeout ratio against the recorded baseline
+    if update_baseline or not os.path.exists(_FAILOVER_BASELINE):
+        os.makedirs(os.path.dirname(_FAILOVER_BASELINE), exist_ok=True)
+        with open(_FAILOVER_BASELINE, "w") as f:
+            json.dump({"restore_over_timeout": round(ratio, 3),
+                       "workload": record["workload"]}, f, indent=1)
+        emit("failover_smoke_baseline_recorded", 0.0, f"ratio={ratio:.3f}")
+        return 0
+    with open(_FAILOVER_BASELINE) as f:
+        base = json.load(f)["restore_over_timeout"]
+    limit = base * _FAILOVER_SLACK
+    status = "ok" if ratio <= limit else "REGRESSION"
+    emit("failover_smoke_gate", 0.0,
+         f"ratio={ratio:.3f};baseline={base:.3f};limit={limit:.3f};{status}")
+    if ratio > limit:
+        print(f"FAIL: write-restore/heartbeat-timeout ratio {ratio:.3f} "
+              f"exceeds baseline {base:.3f} by more than "
+              f"{_FAILOVER_SLACK - 1:.0%} (limit {limit:.3f}) — failover "
+              f"regression", flush=True)
+        return 1
+    return 0
+
+
 def run(smoke: bool = False, rate: float = 0.0, deadline_ms: float = 0.0,
         update_baseline: bool = False) -> int:
     if smoke:
@@ -238,7 +371,13 @@ def main() -> None:
                     help="per-request deadline for the open-loop runs")
     ap.add_argument("--update-baseline", action="store_true",
                     help="re-record the smoke gate baseline")
+    ap.add_argument("--failover", action="store_true",
+                    help="bench primary-kill recovery of a 3-member "
+                         "replicated cluster instead of the single engine")
     args = ap.parse_args()
+    if args.failover:
+        raise SystemExit(run_failover(
+            smoke=args.smoke, update_baseline=args.update_baseline))
     raise SystemExit(run(smoke=args.smoke, rate=args.rate,
                          deadline_ms=args.deadline_ms,
                          update_baseline=args.update_baseline))

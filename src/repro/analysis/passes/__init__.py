@@ -10,6 +10,7 @@ from . import (
     dtype_drift,
     durability,
     jit_purity,
+    replication_ordering,
     shape_discipline,
 )
 
@@ -19,6 +20,7 @@ ALL_PASSES = (
     dtype_drift,
     donation_safety,
     durability,
+    replication_ordering,
 )
 
 BY_NAME = {p.NAME: p for p in ALL_PASSES}

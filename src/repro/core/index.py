@@ -135,6 +135,10 @@ class WoWIndex:
         self._wal = None
         self._wal_replaying = False
         self._applied_lsn = 0
+        # replication fencing epoch/term: bumped on failover promotion,
+        # stamped into WAL segment headers + checkpoint manifests so a
+        # deposed primary's stale-epoch appends are refused
+        self._epoch = 0
         # background compaction cadence policy: auto-trigger compact_rows()
         # when len(deleted)/n crosses the threshold, checked at
         # insert_batch and checkpoint boundaries.  The latch

@@ -19,7 +19,7 @@ from .faultfs import (  # noqa: F401
     flip_bit,
     truncate_at,
 )
-from .format import CorruptError  # noqa: F401
+from .format import STREAM_CHUNK_BYTES, CorruptError, chunk_crcs  # noqa: F401
 from .recovery import (  # noqa: F401
     is_durable_dir,
     load_serving_snapshot,
@@ -27,4 +27,20 @@ from .recovery import (  # noqa: F401
     recover,
     wal_dir,
 )
-from .wal import WalCorruptError, WalWriter  # noqa: F401
+from .replicate import (  # noqa: F401
+    FaultSchedule,
+    FaultTransport,
+    InProcEndpoint,
+    InProcTransport,
+    PrimaryReplicator,
+    QuorumTimeoutError,
+    ReplicaReplicator,
+    ReplicatedWal,
+    SocketEndpoint,
+)
+from .wal import (  # noqa: F401
+    StaleEpochError,
+    WalCorruptError,
+    WalWriter,
+    log_epoch,
+)

@@ -89,6 +89,7 @@ def _index_meta(index) -> dict:
         "graph_version": int(index.graph.version),
         "mutations": int(index.mutations),
         "lsn": int(getattr(index, "_applied_lsn", 0)),
+        "epoch": int(getattr(index, "_epoch", 0)),
         "compact_dead_done": int(getattr(index, "_compact_dead_done", 0)),
         "build_stats": {
             "dc": int(bs.dc),
@@ -411,6 +412,9 @@ def materialize(state: dict):
     index._rng.bit_generator.state = meta["rng_state"]
     index._compact_dead_done = meta["compact_dead_done"]
     index._applied_lsn = meta["lsn"]
+    # fencing epoch (0 on pre-replication checkpoints); like _applied_lsn
+    # it is positional metadata, deliberately outside the state digest
+    index._epoch = meta.get("epoch", 0)
     # a just-loaded index IS the newest checkpoint's state: the ckpt
     # tracker can vouch for deltas from here on
     index._ckpt_tracker = {"stamp": index.mutations, "all": False,

@@ -58,7 +58,21 @@ def crc32(data: bytes) -> int:
 
 
 # ------------------------------------------------------------ section writer
-def write_section(io: OsIO, dirpath: str, name: str, arr: np.ndarray) -> dict:
+STREAM_CHUNK_BYTES = 256 << 10  # replication bootstrap streaming granularity
+
+
+def chunk_crcs(data: bytes, chunk_bytes: int = STREAM_CHUNK_BYTES) -> list[int]:
+    """Per-chunk CRC32 table over ``data`` split into ``chunk_bytes`` runs.
+    Replica bootstrap streams sections chunk-at-a-time and, after a
+    dropped transport or a crash, resumes by re-requesting only the
+    chunks whose bytes on disk fail this table — never the full copy."""
+    out = [crc32(data[off:off + chunk_bytes])
+           for off in range(0, len(data), chunk_bytes)]
+    return out or [crc32(b"")]
+
+
+def write_section(io: OsIO, dirpath: str, name: str, arr: np.ndarray,
+                  chunk_bytes: int = STREAM_CHUNK_BYTES) -> dict:
     """Write one array section as ``<name>.npy``; return its table entry."""
     data = encode_npy(arr)
     fname = f"{name}.npy"
@@ -74,6 +88,8 @@ def write_section(io: OsIO, dirpath: str, name: str, arr: np.ndarray) -> dict:
         "crc32": crc32(data),
         "dtype": str(arr.dtype),
         "shape": list(arr.shape),
+        "chunk_bytes": chunk_bytes,
+        "chunk_crcs": chunk_crcs(data, chunk_bytes),
     }
 
 

@@ -33,9 +33,16 @@ def is_durable_dir(root: str) -> bool:
     return bool(checkpoint.list_checkpoints(root))
 
 
-def recover(root: str, io: OsIO | None = None):
+def recover(root: str, io: OsIO | None = None, upto_lsn: int | None = None):
     """Restore the newest recoverable index state: newest valid checkpoint
     chain, then replay every WAL record with ``lsn > checkpoint.lsn``.
+
+    ``upto_lsn`` stops replay at that LSN (inclusive) — the replication
+    tests use it to compare a fenced primary's disk state against a
+    promoted replica *at the promotion LSN*, where the two must be
+    bitwise-equal even though the primary's log carries unacked records
+    beyond it.  Requires ``upto_lsn >= checkpoint.lsn`` (a checkpoint
+    cannot be un-applied).
 
     Returns the recovered `WoWIndex` (no WAL attached — use
     ``open_durable`` to continue mutating durably).  Raises
@@ -46,7 +53,13 @@ def recover(root: str, io: OsIO | None = None):
     index = checkpoint.materialize(checkpoint.load_state(root))
     records = wal.read_log(wal_dir(root), io=io)
     base_lsn = index._applied_lsn
-    pending = [(l, t, p) for l, t, p in records if l > base_lsn]
+    if upto_lsn is not None and upto_lsn < base_lsn:
+        raise ValueError(
+            f"upto_lsn {upto_lsn} precedes the newest checkpoint "
+            f"(lsn {base_lsn}); checkpoints cannot be un-applied"
+        )
+    pending = [(l, t, p) for l, t, p in records
+               if l > base_lsn and (upto_lsn is None or l <= upto_lsn)]
     if pending and pending[0][0] != base_lsn + 1:
         raise wal.WalCorruptError(
             f"WAL starts at LSN {pending[0][0]} but checkpoint covers "
@@ -59,6 +72,12 @@ def recover(root: str, io: OsIO | None = None):
             index._applied_lsn = lsn
     finally:
         index._wal_replaying = False
+    # the fencing epoch rides both the checkpoint manifest and the WAL
+    # segment headers (a promotion rotates the log without checkpointing,
+    # so the log can be ahead of the manifest — never behind)
+    seg_epoch = wal.log_epoch(wal_dir(root))
+    if seg_epoch > index._epoch:
+        index._epoch = seg_epoch
     if pending:
         log.info("recovered %s: checkpoint lsn %d + %d WAL records",
                  root, base_lsn, len(pending))
@@ -91,7 +110,8 @@ def open_durable(root: str, io: OsIO | None = None, create: dict | None = None,
     if compact_threshold is not None:
         index.compact_threshold = compact_threshold
     index._wal = wal.WalWriter(wal_dir(root), io=io,
-                               segment_bytes=segment_bytes)
+                               segment_bytes=segment_bytes,
+                               epoch=index._epoch)
     # a torn tail was truncated by recover(); the writer continues from
     # the last valid record, which must line up with what we replayed
     if index._wal.next_lsn != index._applied_lsn + 1:

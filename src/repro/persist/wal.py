@@ -18,7 +18,9 @@ segment file ``wal-<seq:08d>.seg``::
     header (36 bytes):
       magic      8s   b"WOWWAL01"
       version    u32  1
-      reserved   u32  0
+      epoch      u32  fencing epoch/term (0 before replication existed;
+                      the field was reserved-zero in v1 logs, so old
+                      segments parse as epoch 0)
       seq        u64  segment sequence number
       start_lsn  u64  LSN of the segment's first record
       crc32      u32  over the preceding 32 bytes
@@ -75,6 +77,12 @@ T_SEQ_INSERT = 5
 
 class WalCorruptError(CorruptError):
     """Mid-log corruption (not a torn tail): recovery refuses to proceed."""
+
+
+class StaleEpochError(WalCorruptError):
+    """A fenced (stale-epoch) writer tried to touch a log that a higher
+    epoch already owns — the old primary after a failover.  Refusing here
+    is what makes split-brain unable to corrupt the record stream."""
 
 
 def segment_name(seq: int) -> str:
@@ -163,21 +171,39 @@ def _probe_valid_record(data: bytes, from_off: int) -> bool:
     return False
 
 
-def encode_segment_header(seq: int, start_lsn: int) -> bytes:
-    head = struct.pack("<8sIIQQ", SEG_MAGIC, SEG_VERSION, 0, seq, start_lsn)
+def encode_segment_header(seq: int, start_lsn: int, epoch: int = 0) -> bytes:
+    head = struct.pack("<8sIIQQ", SEG_MAGIC, SEG_VERSION, epoch, seq,
+                       start_lsn)
     return head + struct.pack("<I", crc32(head))
 
 
 def parse_segment_header(data: bytes) -> dict | None:
     if len(data) < SEG_HEADER_LEN:
         return None
-    magic, version, _res, seq, start_lsn = struct.unpack_from("<8sIIQQ", data)
+    magic, version, epoch, seq, start_lsn = struct.unpack_from("<8sIIQQ", data)
     (stated,) = struct.unpack_from("<I", data, 32)
     if magic != SEG_MAGIC or version != SEG_VERSION:
         return None
     if crc32(data[:32]) != stated:
         return None
-    return {"seq": seq, "start_lsn": start_lsn}
+    return {"seq": seq, "start_lsn": start_lsn, "epoch": epoch}
+
+
+def log_epoch(dirpath: str) -> int:
+    """Highest segment-header epoch in ``dirpath`` (0 if empty/unreadable).
+    Epochs are non-decreasing across segments, so this is the epoch the
+    log's most recent writer held — recovery folds it into the index
+    because a promotion rotates the WAL without writing a checkpoint."""
+    best = 0
+    for _seq, path in list_segments(dirpath):
+        try:
+            with open(path, "rb") as f:
+                hdr = parse_segment_header(f.read(SEG_HEADER_LEN))
+        except OSError:
+            continue
+        if hdr is not None and hdr["epoch"] > best:
+            best = hdr["epoch"]
+    return best
 
 
 def scan_segment(path: str) -> dict:
@@ -247,7 +273,16 @@ class WalWriter:
     pruning works at segment granularity)."""
 
     def __init__(self, dirpath: str, io: OsIO | None = None,
-                 segment_bytes: int = 4 << 20):
+                 segment_bytes: int = 4 << 20, epoch: int | None = None,
+                 start_lsn: int = 1):
+        """``epoch=None`` adopts the newest segment's epoch (0 for a fresh
+        log).  An explicit epoch below the log's is refused with
+        ``StaleEpochError`` — a fenced ex-primary reopening a log its
+        successor already wrote; an explicit epoch above it rotates
+        immediately so the promotion is stamped on disk before any append.
+        ``start_lsn`` seeds the first segment of an *empty* directory — a
+        bootstrapped replica's WAL starts at its checkpoint LSN + 1, not
+        at 1 — and is ignored when segments exist."""
         self.dir = dirpath
         self.io = io or OsIO()
         self.segment_bytes = segment_bytes
@@ -255,9 +290,12 @@ class WalWriter:
         self._f = None
         self._size = 0
         segs = list_segments(dirpath)
+        if segs:
+            segs = self._verify_chain(segs)
         if not segs:
-            self.next_lsn = 1
+            self.next_lsn = start_lsn
             self._seq = -1
+            self.epoch = 0 if epoch is None else epoch
             self.rotate()
             return
         seq, path = segs[-1]
@@ -267,27 +305,93 @@ class WalWriter:
                 f"cannot append to {path}: invalid tail at offset "
                 f"{scan['bad_off']} (run recovery first)"
             )
+        tail_epoch = scan["header"]["epoch"]
+        if epoch is not None and epoch < tail_epoch:
+            raise StaleEpochError(
+                f"cannot append to {path}: writer epoch {epoch} is behind "
+                f"log epoch {tail_epoch} (fenced by a newer primary)"
+            )
+        self.epoch = tail_epoch if epoch is None else epoch
         self._seq = seq
         self.next_lsn = (
             scan["records"][-1][0] + 1 if scan["records"]
             else scan["header"]["start_lsn"]
         )
+        if self.epoch > tail_epoch:
+            # stamp the promotion before any append lands in the log
+            self.rotate()
+            return
         self._f = self.io.open_append(path)
         self._size = scan["size"]
 
+    def _verify_chain(self, segs: list[tuple[int, str]]):
+        """Cross-segment epoch + LSN continuity for the WHOLE chain on
+        reopen (``read_log`` checks this on the recovery path; a writer
+        reopening after a ``prune()``/``rotate()`` crash must not trust the
+        tail segment alone).  A torn *final* header — the crash landed
+        mid-``rotate``, before the new segment's header was fully written
+        and with no records in it — is removed so the previous segment
+        becomes the tail again; anything else invalid raises."""
+        prev_end: int | None = None
+        prev_epoch: int | None = None
+        for i, (seq, path) in enumerate(segs):
+            last = i == len(segs) - 1
+            scan = scan_segment(path)
+            hdr = scan["header"]
+            if hdr is None:
+                if last and not scan["valid_beyond"]:
+                    self.io.remove(path)
+                    self.io.fsync_dir(self.dir)
+                    return segs[:-1]
+                raise WalCorruptError(f"{path}: invalid segment header")
+            if scan["bad_off"] is not None and not last:
+                raise WalCorruptError(
+                    f"{path}: invalid record at offset {scan['bad_off']} in "
+                    f"a non-final segment (run recovery first)"
+                )
+            if prev_epoch is not None and hdr["epoch"] < prev_epoch:
+                raise WalCorruptError(
+                    f"{path}: epoch went backwards ({prev_epoch} -> "
+                    f"{hdr['epoch']})"
+                )
+            if prev_end is not None and hdr["start_lsn"] != prev_end:
+                raise WalCorruptError(
+                    f"{path}: start_lsn {hdr['start_lsn']} breaks LSN "
+                    f"continuity (previous segment ended at {prev_end})"
+                )
+            prev_end = (
+                scan["records"][-1][0] + 1 if scan["records"]
+                else hdr["start_lsn"]
+            )
+            prev_epoch = hdr["epoch"]
+        return segs
+
     def rotate(self) -> None:
-        """Close the current segment and start ``seq+1`` at ``next_lsn``."""
+        """Close the current segment and start ``seq+1`` at ``next_lsn``,
+        stamped with the writer's current epoch."""
         if self._f is not None:
             self.io.fsync(self._f)
             self.io.close(self._f)
         self._seq += 1
         path = os.path.join(self.dir, segment_name(self._seq))
         self._f = self.io.create(path)
-        hdr = encode_segment_header(self._seq, self.next_lsn)
+        hdr = encode_segment_header(self._seq, self.next_lsn, self.epoch)
         self.io.write(self._f, hdr)
         self.io.fsync(self._f)
         self.io.fsync_dir(self.dir)
         self._size = len(hdr)
+
+    def set_epoch(self, epoch: int) -> None:
+        """Adopt a higher epoch, rotating so the fence is on disk before
+        any record of the new term.  Moving backwards is refused; equal is
+        a no-op (epoch comparisons are strict by contract)."""
+        if epoch < self.epoch:
+            raise StaleEpochError(
+                f"epoch may not move backwards ({self.epoch} -> {epoch})"
+            )
+        if epoch > self.epoch:
+            self.epoch = epoch
+            self.rotate()
 
     def append(self, rtype: int, payload: bytes = b"",
                fsync: bool = True) -> int:

@@ -132,12 +132,30 @@ DURABILITY_BAD = """
             return len(recs)
 """
 
+REPLICATION_BAD = """
+    class Primary:
+        def append(self, rec):
+            self.replicator.ship(rec)
+            self.peer.send_ack(rec.lsn)   # ack while the ship is in flight
+
+        def append_ok(self, rec):
+            self.replicator.ship(rec)
+            self.replicator.await_quorum(rec.lsn)
+            self.peer.send_ack(rec.lsn)   # quorum-durable: clean
+
+        def fence(self, msg):
+            if msg.epoch <= self.epoch:   # non-strict: equal epoch passes
+                return False
+            return True
+"""
+
 _FIXTURES = {
     "jit-purity": JIT_PURITY_BAD,
     "shape-discipline": SHAPE_BAD,
     "dtype-drift": DTYPE_BAD,
     "donation-safety": DONATION_BAD,
     "durability-ordering": DURABILITY_BAD,
+    "replication-ordering": REPLICATION_BAD,
 }
 
 
@@ -174,6 +192,15 @@ def test_donation_safe_rebind_not_flagged(tmp_path):
     findings = lint_paths([p], passes=["donation-safety"])
     assert len(findings) == 1
     assert "update" in DONATION_BAD  # the unsafe one is the only finding
+
+
+def test_replication_ack_and_epoch_rules_fire_separately(tmp_path):
+    p = _fixture(tmp_path, "rep.py", REPLICATION_BAD)
+    findings = lint_paths([p], passes=["replication-ordering"])
+    msgs = [f.message for f in findings]
+    # exactly one of each: append_ok's barriered ack is clean
+    assert sum("quorum barrier" in m for m in msgs) == 1
+    assert sum("non-strict epoch" in m for m in msgs) == 1
 
 
 def test_durability_barrier_clears_pending(tmp_path):

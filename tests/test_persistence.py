@@ -499,3 +499,79 @@ def test_corrupt_newest_checkpoint_falls_back_to_older(tmp_path, wl):
     name, sec = max(man["sections"].items(), key=lambda kv: kv[1]["nbytes"])
     flip_bit(os.path.join(newest_path, sec["file"]), sec["nbytes"] // 2)
     assert_index_equal(idx, recover(root))
+
+
+# ------------------------------------------------------ WAL reopen hardening
+def test_wal_reopen_after_prune_verifies_epoch_and_lsn_continuity(tmp_path):
+    """A writer reopening a log that was pruned and epoch-rotated (and then
+    crashed) must re-verify the WHOLE chain: the adopted epoch is the
+    newest segment's, the next LSN continues the tail, an explicitly
+    *lower* epoch is refused, and a higher one rotates the fence onto disk
+    before any append."""
+    d = str(tmp_path / "wal")
+    w = walmod.WalWriter(d, segment_bytes=128)  # rotate every few records
+    for i in range(6):
+        w.append(walmod.T_COMPACT, b"x" * 40)
+    w.set_epoch(2)
+    for i in range(4):
+        w.append(walmod.T_COMPACT, b"y" * 40)
+    assert len(walmod.list_segments(d)) > 2
+    removed = w.prune(keep_from_lsn=6)
+    assert removed >= 1
+    w.close()
+
+    # crash here; reopen adopting the on-disk epoch
+    w2 = walmod.WalWriter(d, segment_bytes=128)
+    assert w2.epoch == 2
+    assert w2.next_lsn == 11
+    lsn = w2.append(walmod.T_COMPACT, b"z")
+    assert lsn == 11
+    w2.close()
+    recs = walmod.read_log(d)
+    assert [r[0] for r in recs] == list(range(recs[0][0], 12))
+
+    # a fenced ex-primary (stale explicit epoch) must be refused
+    with pytest.raises(walmod.StaleEpochError):
+        walmod.WalWriter(d, segment_bytes=128, epoch=1)
+    # a promotion (higher epoch) stamps the fence before any append
+    w3 = walmod.WalWriter(d, segment_bytes=128, epoch=5)
+    assert walmod.log_epoch(d) == 5
+    assert w3.next_lsn == 12
+    w3.close()
+
+
+def test_wal_reopen_with_torn_final_segment_header_selfheals(tmp_path):
+    """Crash mid-``rotate``: the new tail segment's 36-byte header was
+    torn and no record follows it.  Reopen removes the torn segment,
+    makes the previous one the tail again, and appends continue at the
+    right LSN with the right epoch — instead of refusing the whole log."""
+    d = str(tmp_path / "wal")
+    w = walmod.WalWriter(d)
+    for i in range(5):
+        w.append(walmod.T_COMPACT, b"p" * 8)
+    w.set_epoch(1)  # rotates: tail segment is now header-only
+    w.close()
+    segs = walmod.list_segments(d)
+    assert len(segs) == 2
+    truncate_at(segs[-1][1], walmod.SEG_HEADER_LEN // 3)
+
+    w2 = walmod.WalWriter(d)
+    assert walmod.list_segments(d) == segs[:-1]  # torn tail removed
+    assert w2.next_lsn == 6
+    # the epoch bump lived only in the torn header: the surviving chain
+    # is epoch 0, and that is what the writer must adopt
+    assert w2.epoch == 0
+    assert w2.append(walmod.T_COMPACT, b"q") == 6
+    w2.close()
+    assert [r[0] for r in walmod.read_log(d)] == [1, 2, 3, 4, 5, 6]
+
+    # same tear but with a valid record BEYOND the damage in a non-final
+    # segment is refused, not healed (that is data loss, not a torn tail)
+    w3 = walmod.WalWriter(d)
+    w3.rotate()
+    w3.append(walmod.T_COMPACT, b"r")
+    w3.close()
+    segs = walmod.list_segments(d)
+    truncate_at(segs[0][1], walmod.SEG_HEADER_LEN // 3)
+    with pytest.raises(WalCorruptError):
+        walmod.WalWriter(d)

@@ -1,0 +1,562 @@
+"""Replicated durable serving conformance (``repro.persist.replicate`` +
+``repro.serve.cluster``).
+
+The acceptance bar, mirroring ``test_persistence.py`` one level up: no
+acked write is ever lost and no query ever returns an error (degraded is
+fine) across the transport fault matrix (drop / duplicate / reorder /
+partition, deterministic schedules), a promoted replica is *bitwise*
+equal (``state_digest``) to the fenced primary's disk state at the
+promotion LSN, epoch fencing refuses every stale-term append, and a
+replica crash mid-bootstrap resumes by re-shipping only the chunks that
+are actually missing.  Plus a real SIGKILL-of-the-primary subprocess
+test over localhost TCP.
+"""
+import os
+import signal
+import subprocess
+import sys
+from collections import Counter
+
+import pytest
+
+from repro.core import WoWIndex, make_workload
+from repro.persist import (
+    FaultSchedule,
+    FaultTransport,
+    InProcEndpoint,
+    InProcTransport,
+    PrimaryReplicator,
+    QuorumTimeoutError,
+    ReplicaReplicator,
+    StaleEpochError,
+    open_durable,
+    recover,
+    state_digest,
+    wal_dir,
+)
+from repro.persist import wal as walmod
+from repro.persist.format import read_manifest
+from repro.persist.checkpoint import list_checkpoints, save as save_ckpt
+from repro.persist.replicate import MSG_CKPT_CHUNK, MSG_CKPT_META, decode_msg
+
+KW = dict(m=8, ef_construction=32, o=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return make_workload(n=400, d=12, nq=1, seed=0, with_gt=False)
+
+
+class KindCountingTransport(InProcTransport):
+    """InProcTransport that tallies sent message kinds (delivered or not
+    further down a fault wrapper — counting happens at the inner hop, so
+    wrap the *counter* with the FaultTransport, not the reverse, to count
+    only what was actually delivered)."""
+
+    def __init__(self):
+        super().__init__()
+        self.kinds = Counter()
+
+    def send(self, src, dst, data):
+        kind, _, _ = decode_msg(data)
+        self.kinds[kind] += 1
+        return super().send(src, dst, data)
+
+
+def make_clock():
+    T = [0.0]
+
+    def now():
+        return T[0]
+
+    return T, now
+
+
+def make_primary(root, transport, now, dim=12, node="P", quorum=1, **kw):
+    ep = InProcEndpoint(transport, node)
+    idx = open_durable(str(root), create=dict(dim=dim, **KW))
+    prim = PrimaryReplicator(idx, str(root), ep, node_id=node, quorum=quorum,
+                             now=now, **kw)
+    prim.attach()
+    return idx, prim
+
+
+def make_replica(root, transport, now, node="R", primary="P", **kw):
+    ep = InProcEndpoint(transport, node)
+    rep = ReplicaReplicator(str(root), ep, node, primary_id=primary, now=now,
+                            **kw)
+    rep.start()
+    return rep
+
+
+def pump_until(T, prim, rep, cond, steps=4000, dt=0.02):
+    for _ in range(steps):
+        # pump BEFORE checking: the condition may read stale (a previous
+        # round's convergence) while new traffic waits in the queues
+        T[0] += dt
+        prim.pump(T[0])
+        rep.pump(T[0])
+        if cond():
+            return
+    raise AssertionError(
+        f"did not converge in {steps} pumps: primary lsn "
+        f"{prim._last_lsn}, replica {rep.status()}")
+
+
+# --------------------------------------------------------- basic shipping
+def test_wal_shipping_replicates_bitwise(tmp_path, wl):
+    T, now = make_clock()
+    t = InProcTransport()
+    idx, prim = make_primary(tmp_path / "p", t, now)
+    rep = make_replica(tmp_path / "r", t, now)
+    for i in range(4):
+        idx.insert_batch(wl.vectors[50 * i:50 * (i + 1)],
+                         wl.attrs[50 * i:50 * (i + 1)],
+                         batch_size=25, backend="numpy")
+        pump_until(T, prim, rep, lambda: rep.caught_up())
+    assert rep.durable_lsn == prim._last_lsn
+    assert rep.index._applied_lsn == idx._applied_lsn
+    assert state_digest(rep.index) == state_digest(idx)
+    # the replica's log is a byte-for-byte mirror of the primary's stream
+    p_recs = walmod.read_log(wal_dir(str(tmp_path / "p")))
+    r_recs = walmod.read_log(wal_dir(str(tmp_path / "r")))
+    assert [r for r in p_recs if r[0] > 0] == [r for r in r_recs if r[0] > 0]
+
+
+def test_quorum_ack_waits_for_replica_fsync(tmp_path, wl):
+    """quorum=2 with no live replica -> the ack must refuse (timeout),
+    never falsely succeed; with a replica attached the same append acks
+    and the replica is durable *at ack time*."""
+    T, now = make_clock()
+    t = InProcTransport()
+    idx, prim = make_primary(tmp_path / "p", t, now, quorum=2, max_pumps=64)
+    with pytest.raises(QuorumTimeoutError):
+        idx.insert_batch(wl.vectors[:10], wl.attrs[:10], batch_size=10,
+                         backend="numpy")
+    rep = make_replica(tmp_path / "r", t, now)
+    prim.max_pumps = 200_000
+    prim.peer_pump = lambda: rep.pump(T[0])
+    idx.insert_batch(wl.vectors[10:20], wl.attrs[10:20], batch_size=10,
+                     backend="numpy")
+    # the ack already happened (insert_batch returned): the replica must
+    # be durable through that LSN with NO further pumping
+    assert rep.durable_lsn == prim._last_lsn
+    on_disk = walmod.read_log(wal_dir(str(tmp_path / "r")))
+    assert on_disk and on_disk[-1][0] == prim._last_lsn
+
+
+# ------------------------------------------------------ fault-matrix sweep
+SCHEDULES = {
+    "drop-appends": FaultSchedule(drop=[("P", "R", s) for s in (6, 7, 9)]),
+    "drop-acks": FaultSchedule(drop=[("R", "P", s) for s in (2, 3, 5)]),
+    "duplicate": FaultSchedule(dup=[("P", "R", s) for s in (5, 8)]
+                               + [("R", "P", 4)]),
+    "reorder": FaultSchedule(delay=[("P", "R", 5, 2), ("P", "R", 8, 3)]),
+    "partition": FaultSchedule(partitions=[("P", "R", 6, 11),
+                                           ("R", "P", 6, 11)]),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCHEDULES))
+def test_fault_schedule_converges_bitwise(tmp_path, wl, name):
+    """Under every deterministic fault schedule the pair converges to the
+    same LSN with bitwise-equal state — NACK/retransmit/catch-up heal
+    drops and partitions, cumulative acks make duplicates idempotent,
+    LSN-ordered buffering absorbs reordering."""
+    T, now = make_clock()
+    ft = FaultTransport(InProcTransport(), SCHEDULES[name])
+    idx, prim = make_primary(tmp_path / "p", ft, now)
+    rep = make_replica(tmp_path / "r", ft, now)
+    for i in range(6):
+        idx.insert_batch(wl.vectors[30 * i:30 * (i + 1)],
+                         wl.attrs[30 * i:30 * (i + 1)],
+                         batch_size=15, backend="numpy")
+        for _ in range(3):  # interleave pumps with traffic mid-schedule
+            T[0] += 0.02
+            prim.pump(T[0])
+            rep.pump(T[0])
+    ft.heal()
+    pump_until(T, prim, rep, lambda: rep.caught_up()
+               and rep.durable_lsn == prim._last_lsn)
+    assert ft.dropped or ft.duplicated or ft.delayed, \
+        "schedule never fired — the sweep tested nothing"
+    assert state_digest(rep.index) == state_digest(idx)
+
+
+# ------------------------------------------------- bootstrap chunk streams
+def _big_primary(tmp_path, transport, now, quorum=1):
+    """A primary whose vectors section spans multiple 256 KiB chunks, so
+    bootstrap streaming is genuinely chunked."""
+    wl = make_workload(n=640, d=128, nq=1, seed=3, with_gt=False)
+    idx, prim = make_primary(tmp_path / "p", transport, now, dim=128,
+                             quorum=quorum)
+    idx.insert_batch(wl.vectors, wl.attrs, batch_size=128, backend="numpy")
+    # a full checkpoint at the tip, so bootstrap genuinely streams the
+    # data as chunks (not the initial empty checkpoint + a WAL suffix)
+    save_ckpt(idx, str(tmp_path / "p"), incremental=False)
+    return idx, prim
+
+
+def _total_chunks(root):
+    man = read_manifest(list_checkpoints(str(root))[-1][1])
+    return sum(len(e["chunk_crcs"]) for e in man["sections"].values())
+
+
+def test_bootstrap_streams_chunked_checkpoint(tmp_path):
+    T, now = make_clock()
+    t = KindCountingTransport()
+    idx, prim = _big_primary(tmp_path, t, now)
+    rep = make_replica(tmp_path / "r", t, now)
+    pump_until(T, prim, rep, lambda: rep.caught_up())
+    assert state_digest(rep.index) == state_digest(idx)
+    total = _total_chunks(tmp_path / "p")
+    assert total > len(read_manifest(
+        list_checkpoints(str(tmp_path / "p"))[-1][1])["sections"]), \
+        "fixture too small: every section fit one chunk"
+    assert t.kinds[MSG_CKPT_CHUNK] == total
+
+
+def test_bootstrap_resumes_after_replica_crash(tmp_path):
+    """Kill the replica mid-bootstrap (after some chunks hit its disk);
+    the restarted replica resumes from ``MANIFEST.part`` + CRC rescan and
+    the primary re-ships ONLY the missing chunks."""
+    T, now = make_clock()
+    # round 1: deliver the meta + the first two chunks, then black-hole
+    # the link (seq 1 is the targeted heartbeat, 2 the meta)
+    ft = FaultTransport(InProcTransport(),
+                        FaultSchedule(partitions=[("P", "R", 5, 10 ** 9)]))
+    idx, prim = _big_primary(tmp_path, ft, now)
+    rep = make_replica(tmp_path / "r", ft, now)
+    for _ in range(8):
+        T[0] += 0.02
+        prim.pump(T[0])
+        rep.pump(T[0])
+    assert rep.index is None and rep._boot is not None
+    got_before = sum(len(v) for v in rep._boot["got"].values())
+    assert got_before == 2
+    # crash: drop the replica object + its queue; its tmp dir survives
+    ft.kill("R")
+
+    total = _total_chunks(tmp_path / "p")
+    t2 = KindCountingTransport()
+    prim.endpoint = InProcEndpoint(t2, "P")
+    rep2 = make_replica(tmp_path / "r", t2, now)
+    assert rep2._boot is not None, "MANIFEST.part was not resumed"
+    pump_until(T, prim, rep2, lambda: rep2.caught_up())
+    assert state_digest(rep2.index) == state_digest(idx)
+    assert t2.kinds[MSG_CKPT_CHUNK] == total - got_before, \
+        "resume re-shipped chunks the replica already had"
+
+
+def test_bootstrap_heals_dropped_chunk(tmp_path):
+    """A chunk lost on the wire is re-requested after DONE — the transfer
+    completes without restarting the full copy."""
+    T, now = make_clock()
+    counter = KindCountingTransport()
+    ft = FaultTransport(counter, FaultSchedule(drop=[("P", "R", 4)]))
+    idx, prim = _big_primary(tmp_path, ft, now)
+    rep = make_replica(tmp_path / "r", ft, now)
+    pump_until(T, prim, rep, lambda: rep.caught_up())
+    assert ft.dropped == 1
+    assert state_digest(rep.index) == state_digest(idx)
+    total = _total_chunks(tmp_path / "p")
+    # delivered chunks: full stream minus the dropped one, plus the
+    # single re-shipped chunk
+    assert counter.kinds[MSG_CKPT_CHUNK] == total
+
+
+# -------------------------------------------------------------- fencing
+def test_epoch_fences_old_primary(tmp_path, wl):
+    T, now = make_clock()
+    t = InProcTransport()
+    idx, prim = make_primary(tmp_path / "p", t, now)
+    rep = make_replica(tmp_path / "r", t, now)
+    idx.insert_batch(wl.vectors[:40], wl.attrs[:40], batch_size=20,
+                     backend="numpy")
+    pump_until(T, prim, rep, lambda: rep.caught_up())
+
+    new_epoch = rep.promote()
+    assert new_epoch == 1
+    # the fence is on disk before any new-term record: the newest segment
+    # header of the promoted replica's log carries the epoch
+    assert walmod.log_epoch(wal_dir(str(tmp_path / "r"))) == 1
+
+    # the deposed primary's next append is refused end to end: the
+    # replica replies FENCED, the primary fences itself and raises
+    with pytest.raises(StaleEpochError):
+        for _ in range(50):
+            idx.insert_batch(wl.vectors[40:50], wl.attrs[40:50],
+                             batch_size=10, backend="numpy")
+            T[0] += 0.02
+            prim.pump(T[0])
+            rep.pump(T[0])
+    assert prim.fenced
+    # the replica's state never took a stale-epoch record
+    assert rep.durable_lsn == 2
+
+
+def test_promoted_replica_bitwise_equals_primary_at_promotion_lsn(
+        tmp_path, wl):
+    """The acceptance criterion: recover the fenced primary's disk state
+    *at the promotion LSN* and it is bitwise-equal to the promoted
+    replica, even though the primary's log carries unacked records
+    beyond it."""
+    T, now = make_clock()
+    t = InProcTransport()
+    idx, prim = make_primary(tmp_path / "p", t, now)
+    rep = make_replica(tmp_path / "r", t, now)
+    idx.insert_batch(wl.vectors[:60], wl.attrs[:60], batch_size=20,
+                     backend="numpy")
+    pump_until(T, prim, rep, lambda: rep.caught_up())
+    promo_lsn = rep.durable_lsn
+
+    # the primary keeps writing but the replica never sees it (dead link
+    # = the primary is about to "die" with an unacked suffix)
+    t.kill("R")
+    idx.insert_batch(wl.vectors[60:100], wl.attrs[60:100], batch_size=20,
+                     backend="numpy")
+    assert prim._last_lsn > promo_lsn
+
+    rep.promote()
+    fenced_at_promo = recover(str(tmp_path / "p"), upto_lsn=promo_lsn)
+    assert state_digest(fenced_at_promo) == state_digest(rep.index)
+    # and the full primary log is genuinely ahead (the suffix exists)
+    full = recover(str(tmp_path / "p"))
+    assert full._applied_lsn == prim._last_lsn
+    assert state_digest(full) != state_digest(rep.index)
+
+
+def test_deposed_primary_rejoin_rebootstraps_diverged_log(tmp_path, wl):
+    """A deposed primary with an unacked suffix past the promotion point
+    rejoins as a replica: the new primary detects the divergence from its
+    HELLO (stale epoch + LSN above the epoch base) and forces a full
+    re-bootstrap; the rejoined node converges bitwise and its diverged
+    records are gone."""
+    T, now = make_clock()
+    t = InProcTransport()
+    idx, prim = make_primary(tmp_path / "p", t, now)
+    rep = make_replica(tmp_path / "r", t, now)
+    idx.insert_batch(wl.vectors[:60], wl.attrs[:60], batch_size=20,
+                     backend="numpy")
+    pump_until(T, prim, rep, lambda: rep.caught_up())
+    t.kill("R")
+    idx.insert_batch(wl.vectors[60:80], wl.attrs[60:80], batch_size=20,
+                     backend="numpy")  # unacked suffix, will diverge
+    idx._wal.close()
+
+    # promote the replica on a fresh transport and write new-term records
+    t2 = KindCountingTransport()
+    rep.promote()
+    new_idx = rep.index
+    new_prim = PrimaryReplicator(new_idx, str(tmp_path / "r"),
+                                 InProcEndpoint(t2, "R"), node_id="R",
+                                 quorum=1, now=now)
+    new_prim.attach()
+    new_idx.insert_batch(wl.vectors[100:140], wl.attrs[100:140],
+                         batch_size=20, backend="numpy")
+
+    # old primary rejoins as a replica of the new one
+    back = make_replica(tmp_path / "p", t2, now, node="P", primary="R")
+    assert back.index is not None  # recovered its own (diverged) history
+    pump_until(T, new_prim, back, lambda: back.caught_up()
+               and back.durable_lsn == new_prim._last_lsn)
+    assert t2.kinds[MSG_CKPT_META] >= 1, "divergence was not re-bootstrapped"
+    assert state_digest(back.index) == state_digest(new_idx)
+    assert back.epoch == new_prim.epoch
+    # the diverged suffix is gone from its disk as well
+    rec = recover(str(tmp_path / "p"))
+    assert state_digest(rec) == state_digest(new_idx)
+
+
+# --------------------------------------------------------------- cluster
+def _mk_cluster(tmp_path, now, n=3, quorum=None, dim=12):
+    from repro.serve.cluster import Cluster
+    from repro.serve.lifecycle import EngineConfig
+
+    roots = [str(tmp_path / f"m{i}") for i in range(n)]
+    cfg = EngineConfig(k=4, width=16, max_wave=8, build_backend="numpy")
+    return Cluster(roots, create=dict(dim=dim, **KW), config=cfg,
+                   quorum=quorum, now=now)
+
+
+def _ingest(c, wl, T, batches, size=20, start=0):
+    lsns = []
+    for b in range(batches):
+        lo = start + size * b
+        r = c.submit_ingest(wl.vectors[lo:lo + size], wl.attrs[lo:lo + size])
+        lsns.append(r.lsn)
+        for _ in range(10):
+            T[0] += 0.01
+            c.step()
+    c.drain()
+    return lsns
+
+
+def _digests(c):
+    return {nid: state_digest(m.replicator.index)
+            for nid, m in c.members.items()
+            if getattr(m.replicator, "index", None) is not None}
+
+
+def test_cluster_failover_preserves_acked_and_serves(tmp_path, wl):
+    """Kill the primary with queries in flight: the heartbeat timeout
+    promotes the most durable replica, every outstanding query is
+    resubmitted and replied (zero errors), every acked write survives,
+    and the cluster accepts new ingest under the new epoch."""
+    T, now = make_clock()
+    c = _mk_cluster(tmp_path, now)
+    lsns = _ingest(c, wl, T, batches=3)
+    acked_lsn = lsns[-1]
+
+    tickets = [c.submit(wl.vectors[i], (-1e9, 1e9), k=4) for i in range(4)]
+    crids = {t.crid for t in tickets}
+    c.kill("n0")
+    replies = []
+    for _ in range(400):
+        T[0] += 0.05
+        replies.extend(c.step())
+        if c.failovers and {r.crid for r in replies} >= crids:
+            break
+    assert {r.crid for r in replies} >= crids, "a query was lost in failover"
+    assert len(c.failovers) == 1 and not c.failovers[0]["planned"]
+    new_p = c.members[c.primary_id]
+    assert new_p.replicator.epoch == 1
+    assert new_p.replicator._last_lsn >= acked_lsn, "acked write lost"
+
+    post = c.submit_ingest(wl.vectors[100:120], wl.attrs[100:120])
+    assert post.lsn == acked_lsn + 1
+    c.drain()
+    d = _digests(c)
+    assert len(set(d.values())) == 1, d
+
+
+def test_cluster_rolling_restart_zero_downtime(tmp_path, wl):
+    """Every member restarts (replicas first, primary behind a planned
+    handover) with queries outstanding: every query gets exactly one
+    reply, no member ends stale, and all digests match bitwise."""
+    T, now = make_clock()
+    c = _mk_cluster(tmp_path, now)
+    _ingest(c, wl, T, batches=3)
+    tickets = [c.submit(wl.vectors[i], (-1e9, 1e9), k=4) for i in range(6)]
+    crids = {t.crid for t in tickets}
+
+    res = c.rolling_restart()
+    replies = list(res["replies"]) + c.drain()
+    got = [r.crid for r in replies]
+    assert sorted(got) == sorted(set(got)), "duplicate replies"
+    assert set(got) >= crids, "a query was dropped during rolling restart"
+    assert [w for w, _ in res["events"]].count("restarted") == 3
+    assert ("handover", c.primary_id) in res["events"]
+    assert all(m.admitted and m.role != "down" for m in c.members.values())
+    d = _digests(c)
+    assert len(d) == 3 and len(set(d.values())) == 1, d
+
+    # the cluster is fully live after the cycle: ingest + query round-trip
+    c.submit_ingest(wl.vectors[200:220], wl.attrs[200:220])
+    tk = c.submit(wl.vectors[0], (-1e9, 1e9), k=4)
+    out = c.drain()
+    assert any(r.crid == tk.crid for r in out)
+
+
+def test_cluster_ingest_ack_is_quorum_durable(tmp_path, wl):
+    """With quorum = all members, the moment submit_ingest returns every
+    replica's log is fsynced through the acked LSN — no further steps."""
+    T, now = make_clock()
+    c = _mk_cluster(tmp_path, now, quorum=3)
+    res = c.submit_ingest(wl.vectors[:30], wl.attrs[:30])
+    for nid, m in c.members.items():
+        if nid == c.primary_id:
+            continue
+        assert m.replicator.durable_lsn >= res.lsn, \
+            f"{nid} acked-but-not-durable"
+        on_disk = walmod.read_log(wal_dir(m.root))
+        assert on_disk and on_disk[-1][0] >= res.lsn
+
+
+# ------------------------------------------------- real SIGKILL failover
+def test_sigkill_primary_failover_promoted_replica_serves(tmp_path):
+    """The primary is a real process, SIGKILLed mid-ingest.  The replica
+    (this process, localhost TCP) bootstrapped from its checkpoint
+    stream, held a quorum-durable copy of every acked batch, promotes
+    itself, and serves queries — with zero acked-write loss and bitwise
+    equality against the dead primary's disk at the promotion LSN."""
+    from repro.persist.replicate import SocketEndpoint
+    import time as wallclock
+
+    proot = str(tmp_path / "primary")
+    rroot = str(tmp_path / "replica")
+    ep = SocketEndpoint("R")
+    host, port = ep.addr
+    rep = ReplicaReplicator(rroot, ep, "R")
+    rep.start()
+
+    child = f"""
+import os, signal
+from repro.core import make_workload
+from repro.persist import open_durable
+from repro.persist.replicate import PrimaryReplicator, SocketEndpoint
+wl = make_workload(n=240, d=12, nq=1, seed=7, with_gt=False)
+idx = open_durable({proot!r}, create=dict(dim=12, m=8, ef_construction=32,
+                                          o=4, seed=0))
+ep = SocketEndpoint("P")
+ep.connect("R", ({host!r}, {port}))
+prim = PrimaryReplicator(idx, {proot!r}, ep, node_id="P", quorum=2,
+                         idle_s=0.0005)
+prim.attach()
+for i in range(6):
+    idx.insert_batch(wl.vectors[40*i:40*(i+1)], wl.attrs[40*i:40*(i+1)],
+                     batch_size=40, backend="numpy")
+    print("ACK", i, flush=True)
+    if i == 3:
+        os.kill(os.getpid(), signal.SIGKILL)
+"""
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), here])
+    proc = subprocess.Popen([sys.executable, "-c", child],
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True, env=env)
+    deadline = wallclock.time() + 240
+    while proc.poll() is None and wallclock.time() < deadline:
+        rep.pump()
+        wallclock.sleep(0.001)
+    out, err = proc.communicate(timeout=30)
+    assert proc.returncode == -signal.SIGKILL, err
+    acked = out.count("ACK")
+    assert acked == 4, out
+    for _ in range(200):  # drain anything still in the socket buffers
+        rep.pump()
+        wallclock.sleep(0.001)
+
+    # every acked batch is already durable here — that is what the acks
+    # meant (quorum=2: primary + this replica)
+    assert rep.index is not None and rep.durable_lsn >= acked
+    wallclock.sleep(rep.heartbeat_timeout_s + 0.1)
+    assert not rep.primary_alive()
+
+    epoch = rep.promote()
+    assert epoch == 1
+    assert walmod.log_epoch(wal_dir(rroot)) == 1
+
+    # zero acked-write loss + bitwise equality at the promotion LSN
+    rec = recover(proot, upto_lsn=rep.index._applied_lsn)
+    assert state_digest(rec) == state_digest(rep.index)
+    want = WoWIndex(dim=12, **KW)
+    wl7 = make_workload(n=240, d=12, nq=1, seed=7, with_gt=False)
+    for i in range(acked):
+        want.insert_batch(wl7.vectors[40 * i:40 * (i + 1)],
+                          wl7.attrs[40 * i:40 * (i + 1)],
+                          batch_size=40, backend="numpy")
+    assert state_digest(rep.index) == state_digest(want)
+
+    # the promoted replica serves
+    from repro.serve.lifecycle import EngineConfig, ServeEngine
+
+    eng = ServeEngine(index=rep.index,
+                      config=EngineConfig(k=4, width=16, max_wave=8,
+                                          build_backend="numpy"))
+    eng.submit(wl7.vectors[0], (-1e9, 1e9), k=4)
+    replies = eng.drain()
+    assert len(replies) == 1 and replies[0].ids[0] >= 0
+    ep.close()
