@@ -15,6 +15,11 @@ repo root so the construction-path perf trajectory is tracked across PRs:
                                    device (insert_batch backend="sharded":
                                    shard_map'd phase-1 searches against the
                                    replicated arena, deterministic commit)
+  builds.<n>.device_int8_ips       device build over the int8 quantized
+                                   arena (per-row f32 scales, dequant fused
+                                   in the gather kernel); _bf16_ips likewise
+  builds.<n>.device_int8_vs_f32    quantized vs f32 device build (median of
+                                   paired-window ratios); _bf16_ likewise
   builds.<n>.speedup               batched vs sequential (median of ratios)
   builds.<n>.device_speedup        device vs sequential (median of ratios)
   builds.<n>.device_vs_host        device vs batched-numpy (median of ratios)
@@ -269,6 +274,48 @@ def run(regime: str = "random") -> list[list]:
             "device_batch": _DEVICE_BATCH,
             "device_width": device_width,
         }
+        # quantized arena columns: paired windows against a fresh f32
+        # device build.  Pair 0 is excluded from the ratio: the f32
+        # pipelines are warm from the main reps loop above, but the first
+        # quantized build pays jit compilation of the quantized gather /
+        # scatter shapes, which would contaminate the paired statistic.
+        # (The ips columns report each mode's best window regardless.)
+        t_q = {"int8": np.inf, "bf16": np.inf}
+        q_ratio = {"int8": [], "bf16": []}
+        idx_q = {}
+        for pair in range(3):
+            idx_f = WoWIndex(dim=BENCH_D, **kw)
+            t0 = time.perf_counter()
+            idx_f.insert_batch(wl.vectors, wl.attrs,
+                               batch_size=_DEVICE_BATCH, backend="device",
+                               device_width=device_width)
+            dt_f = time.perf_counter() - t0
+            for mode in ("int8", "bf16"):
+                iq = WoWIndex(dim=BENCH_D, vec_dtype=mode, **kw)
+                t0 = time.perf_counter()
+                iq.insert_batch(wl.vectors, wl.attrs,
+                                batch_size=_DEVICE_BATCH, backend="device",
+                                device_width=device_width)
+                dt_q = time.perf_counter() - t0
+                idx_q[mode] = iq
+                if pair == 0:
+                    continue  # quantized compile warmup
+                t_q[mode] = min(t_q[mode], dt_q)
+                q_ratio[mode].append(dt_f / dt_q)
+        builds[str(n)].update({
+            f"device_{mode}_ips": round(n / t_q[mode], 1)
+            for mode in t_q
+        })
+        builds[str(n)].update({
+            f"device_{mode}_vs_f32": round(float(np.median(q_ratio[mode])), 2)
+            for mode in q_ratio
+        })
+        for mode in ("int8", "bf16"):
+            rows.append([f"wow_device_{mode}", n, round(t_q[mode], 3),
+                         idx_q[mode].memory_bytes(),
+                         idx_q[mode].graph.num_layers])
+            emit(f"build_wow_device_{mode}_n{n}", t_q[mode] / n * 1e6,
+                 f"vs_f32={np.median(q_ratio[mode]):.2f}x")
         rows.append(["wow", n, round(t_seq, 3), idx.memory_bytes(),
                      idx.graph.num_layers])
         rows.append(["wow_batched", n, round(t_bat, 3), idx_b.memory_bytes(),

@@ -12,10 +12,19 @@ the repo root so the serving-path perf trajectory is tracked across PRs:
       variants: reference (pre-refactor stages), fused (PR 1 pipeline,
       bitmap visited, lock-step), fused_hash (hashed visited filter),
       fused_compact (ragged-batch compaction), fused_hash_compact (both —
-      the production configuration at scale)
+      the production configuration at scale), fused_int8 / fused_bf16
+      (quantized vector slabs, dequant fused into the gather kernel)
+  eval.{int8,bf16}_us                          fused-dequant gather over the
+      quantized slab (vs eval.fused_us on the f32 slab — the HBM-traffic
+      claim, gated in CI via the --smoke quantized-parity check)
   hop_histogram                                hops-to-termination per query
       (counts per bucket + percentiles) — the raggedness that compaction
       reclaims: a lock-step batch pays max, a compacted batch ~p50
+  slab_gather.{f32,int8,bf16}_us               gather_norm_dot over a
+      memory-resident slab >> LLC at B=128, fresh ids per rep (cold rows)
+      — the isolated bandwidth term; ``int8_speedup``/``bf16_speedup``
+      record the quantized win (full runs only; the bench workload's own
+      slab fits in cache and can't see this term)
   host_qps                                     instrumented host reference
 
 The end-to-end numbers are authoritative: stage timings are standalone
@@ -53,7 +62,21 @@ _VARIANTS = {
     "fused_hash": dict(visited="hash"),
     "fused_compact": dict(compact=(16, 8)),
     "fused_hash_compact": dict(visited="hash", compact=(16, 8)),
+    # quantized vector slabs: same fused pipeline over an int8 (per-row f32
+    # scales) / bf16 storage arena, dequant fused into the gather kernel —
+    # the 4x/2x HBM-traffic variants.  ``vec_dtype`` picks the DeviceIndex.
+    "fused_int8": dict(vec_dtype="int8"),
+    "fused_bf16": dict(vec_dtype="bf16"),
 }
+
+#: --smoke CI gate: quantized serving must stay within this much mean
+#: host-overlap of the f32 fused pipeline.  These are OVERLAP bars (exact
+#: result-set agreement with the f32 host oracle), looser than the
+#: build-equivalence RECALL bars: bf16 mantissa truncation reorders
+#: near-tie candidates (~0.013 overlap loss at full bench scale) without
+#: moving recall, and int8's per-row scales bound the relative row error
+#: at ~1/254 so it gets the same 0.03 bar as its recall gate.
+_QUANT_OVERLAP_TOL = {"fused_int8": 0.03, "fused_bf16": 0.02}
 
 
 def _time_us(fn, reps=20):
@@ -114,6 +137,14 @@ def _stage_bench(snap, W=48, B=128, seed=0):
         lambda s, q: hr.eval_materialized(di.vectors, di.sq_norms, s, q, "ref")[0]
     )
     ev_new = jax.jit(lambda s, q: gather_norm_dot(di.vectors, s, q)[0])
+    # fused-dequant gather over the quantized slabs — the tentpole claim:
+    # candidate rows cross HBM at 1/4 (int8) or 1/2 (bf16) the f32 bytes
+    di8 = to_device_index(snap, vec_dtype="int8")
+    dib = to_device_index(snap, vec_dtype="bf16")
+    ev_i8 = jax.jit(
+        lambda s, q: gather_norm_dot(di8.vectors, s, q, scales=di8.scales)[0]
+    )
+    ev_bf = jax.jit(lambda s, q: gather_norm_dot(dib.vectors, s, q)[0])
 
     return {
         "shape": {"B": B, "F": F, "W": W, "K": K, "n": n, "d": d},
@@ -137,8 +168,51 @@ def _stage_bench(snap, W=48, B=128, seed=0):
         "eval": {
             "reference_us": _time_us(lambda: ev_ref(sel, qs).block_until_ready()),
             "fused_us": _time_us(lambda: ev_new(sel, qs).block_until_ready()),
+            "int8_us": _time_us(lambda: ev_i8(sel, qs).block_until_ready()),
+            "bf16_us": _time_us(lambda: ev_bf(sel, qs).block_until_ready()),
         },
     }
+
+
+def _slab_gather_bench(B=128, W=48, n=1 << 21, d=128, reps=8, seed=0):
+    """The tentpole bandwidth claim, isolated: ``gather_norm_dot`` over a
+    memory-resident slab far larger than LLC (f32 = n*d*4 bytes = 1 GiB
+    at the defaults), B=128 queries x W=48 candidate rows.  The bench
+    workload's own slab fits in cache, so the end-to-end qps columns
+    can't see the traffic term; here every rep gathers a FRESH random id
+    set, so each row crosses memory cold — f32 touches 4x the cache
+    lines of int8 (2x of bf16) per row, which is exactly the HBM-DMA
+    ratio the fused-dequant kernel rides on an accelerator."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.store import quantize_rows
+    from repro.kernels.ops import gather_norm_dot
+
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((n, d), dtype=np.float32)
+    qs = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    slabs = {}
+    for mode in ("f32", "int8", "bf16"):
+        slab, scales = quantize_rows(vecs, mode)
+        slabs[mode] = (jnp.asarray(slab),
+                       None if scales is None else jnp.asarray(scales))
+    del vecs
+    ids = [jnp.asarray(rng.integers(0, n, size=(B, W)), jnp.int32)
+           for _ in range(reps + 1)]
+    out = {"shape": {"B": B, "W": W, "n": n, "d": d, "reps": reps},
+           "slab_bytes": {m: int(s.nbytes) for m, (s, _) in slabs.items()}}
+    for mode, (slab, scales) in slabs.items():
+        fn = jax.jit(lambda t, s, q, sc=scales:
+                     gather_norm_dot(t, s, q, scales=sc)[0])
+        fn(slab, ids[0], qs).block_until_ready()  # compile + warm
+        t0 = time.perf_counter()
+        for i in range(1, reps + 1):
+            fn(slab, ids[i], qs).block_until_ready()
+        out[f"{mode}_us"] = round((time.perf_counter() - t0) / reps * 1e6, 2)
+    for mode in ("int8", "bf16"):
+        out[f"{mode}_speedup"] = round(out["f32_us"] / out[f"{mode}_us"], 3)
+    return out
 
 
 def _hop_histogram(hops: np.ndarray) -> dict:
@@ -190,18 +264,25 @@ def run(smoke: bool = False, profile_dir: str | None = None) -> list[list]:
         host_res.append(set(ids.tolist()))
     host_qps = len(wl.queries) / (time.perf_counter() - t0)
 
-    di = to_device_index(snap)
+    # one DeviceIndex per storage mode; the quantized ones carry the
+    # pre-quantized slab (+ scales for int8) and share every other field
+    dis = {vd: to_device_index(snap, vec_dtype=vd)
+           for vd in ("f32", "int8", "bf16")}
+    di = dis["f32"]
     qs = jnp.asarray(wl.queries, jnp.float32)
     rr = jnp.asarray(wl.ranges, jnp.float32)
     e2e = {}
     hop_hist = None
+    overlaps: dict[str, float] = {}
     for B in batches:
         qb, rb = qs[:B], rr[:B]
         e2e[str(B)] = {}
         calls, results = {}, {}
         for name, kw in _VARIANTS.items():
-            calls[name] = (lambda kw=kw: device_search(
-                di, qb, rb, k=10, width=48, m=snap.m, o=snap.o, **kw))
+            kw = dict(kw)
+            dvar = dis[kw.pop("vec_dtype", "f32")]
+            calls[name] = (lambda kw=kw, dvar=dvar: device_search(
+                dvar, qb, rb, k=10, width=48, m=snap.m, o=snap.o, **kw))
             results[name] = _block(calls[name]())  # compile / warm buckets
         # interleave the variants across timing windows and keep each
         # variant's best window: box noise hits all variants alike instead
@@ -224,10 +305,20 @@ def run(smoke: bool = False, profile_dir: str | None = None) -> list[list]:
                 ov.append(len(got & host_res[i]) / max(len(host_res[i]), 1))
             rows.append([name, B, round(dev_qps, 1),
                          round(float(np.mean(ov)), 4)])
+            overlaps[name] = float(np.mean(ov))
             emit(f"device_search_{name}_b{B}", 1e6 / dev_qps,
                  f"overlap={np.mean(ov):.3f};host_qps={host_qps:.0f}")
             if name == "fused":
                 hop_hist = _hop_histogram(np.asarray(res.hops))
+        # quantized-parity CI gate: runs every invocation; --smoke is the
+        # cheap CI entry point that still trips on a real dequant bug
+        for name, tol in _QUANT_OVERLAP_TOL.items():
+            lost = overlaps["fused"] - overlaps[name]
+            if lost > tol:
+                raise SystemExit(
+                    f"quantized-parity gate: {name} host-overlap "
+                    f"{overlaps[name]:.4f} is {lost:.4f} below fused f32 "
+                    f"{overlaps['fused']:.4f} (tol {tol}) at B={B}")
         if profile_dir:  # per-hop attribution: trace one fused run
             with jax.profiler.trace(os.path.join(profile_dir, f"b{B}")):
                 _block(device_search(di, qb, rb, k=10, width=48, m=snap.m,
@@ -239,8 +330,22 @@ def run(smoke: bool = False, profile_dir: str | None = None) -> list[list]:
     for st in ("dedupe", "merge", "eval"):
         emit(f"hop_{st}_reference", stages[st]["reference_us"])
         emit(f"hop_{st}_fused", stages[st]["fused_us"])
+    emit("hop_eval_int8", stages["eval"]["int8_us"])
+    emit("hop_eval_bf16", stages["eval"]["bf16_us"])
     emit("merge_writeback_scatter", stages["writeback"]["scatter_us"])
     emit("merge_writeback_onehot", stages["writeback"]["onehot_us"])
+
+    slab_gather = None
+    if not smoke:  # the 1 GiB slab is a full-run-only artifact
+        slab_gather = _slab_gather_bench(B=max(batches))
+        for mode in ("f32", "int8", "bf16"):
+            emit(f"slab_gather_{mode}", slab_gather[f"{mode}_us"],
+                 f"B={slab_gather['shape']['B']};"
+                 f"bytes={slab_gather['slab_bytes'][mode]}")
+        if slab_gather["int8_speedup"] <= 1.0:
+            print(f"WARNING: int8 slab gather did not beat f32 "
+                  f"({slab_gather['int8_us']}us vs {slab_gather['f32_us']}us)"
+                  f" — bandwidth claim not reproduced on this box")
 
     record = {
         "platform": jax.devices()[0].platform,
@@ -250,6 +355,7 @@ def run(smoke: bool = False, profile_dir: str | None = None) -> list[list]:
         "device_search": e2e,
         "hop_histogram": hop_hist,
         "stages": stages,
+        "slab_gather": slab_gather,
     }
     if not smoke:  # smoke runs must not clobber the tracked numbers
         with open(os.path.join(_REPO_ROOT, "BENCH_device.json"), "w") as f:

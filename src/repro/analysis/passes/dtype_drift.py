@@ -1,13 +1,27 @@
 """dtype-drift: the distance path is float32, everywhere, on purpose.
 
 PR 3 unified distance math on f32 after a silent f64 widening made
-host/device parity flap; the upcoming quantized arenas (ROADMAP item 2)
-make drift worse — an accidental f16/bf16 cast in the distance lane is
-a recall loss with no crash.  Until the quantization PR extends it,
-``ALLOWED_DTYPES`` is exactly ``{"float32"}`` for arrays whose names
-mark them as distance-lane values (vectors, queries, distances, norms,
-dot products).  Attribute/order-key arrays are deliberately f64 and are
-out of scope (they match no distance name).
+host/device parity flap; the quantized arenas sharpen the discipline
+instead of relaxing it — an accidental f16/bf16 cast in the distance
+lane is a recall loss with no crash.  ``ALLOWED_DTYPES`` is exactly
+``{"float32"}`` for arrays whose names mark them as distance-lane
+values (vectors, queries, distances, norms, dot products).
+Attribute/order-key arrays are f32-canonical at ingest and are out of
+scope (they match no distance name).
+
+Quantized-slab rules (the vec_dtype arenas):
+
+- ``q_vectors``/``q_slab``-named arrays are *storage*, not distance
+  math: creating or casting them to int8/bfloat16 is quantization and
+  is allowed everywhere.
+- ``.astype(float32)`` on a quantized slab is *dequantization* and is
+  only legal inside the fused-kernel scope (``kernels.gather_distance``
+  and its parity oracle ``kernels.ref``): a host-side dequant
+  re-materializes the f32 slab in HBM, exactly the traffic the
+  quantized mode exists to avoid.
+- quantization ``scales`` stay f32: any non-f32 float cast/creation of
+  a scale-named array is a finding (a bf16 scale is a silent precision
+  loss in every dequantized row).
 
 Flagged, in distance-path modules: ``.astype(<non-f32 float>)`` on a
 distance-named value, and ``zeros/full/empty/asarray/array`` creations
@@ -27,15 +41,25 @@ SCOPE = (r"core\.(device_search|hop_reference|search|snapshot|store|"
          r"distributed)$|kernels\.(distance|gather_distance|ops|ref)$|"
          r"serve\.lifecycle$")
 
-# extension point for the quantized-arena PR: int8/bf16 slabs will be
-# admitted here together with their dequant scales
 ALLOWED_DTYPES = {"float32"}
+#: legal storage dtypes for quantized-slab-named arrays (the vec_dtype
+#: arenas); casting INTO these is quantization, never drift
+QUANT_STORAGE_DTYPES = {"int8", "bfloat16"}
+#: modules where dequantizing a quantized slab back to f32 is legal —
+#: the fused gather kernel (dequant happens in VMEM, post-DMA) and its
+#: reference parity oracle.  Anywhere else, ``q_slab.astype(float32)``
+#: re-materializes the f32 slab host/HBM-side and defeats the mode.
+DEQUANT_SCOPE = re.compile(r"kernels\.(gather_distance|ref)$")
 
 _DIST_RE = re.compile(
     r"(?:^|_)(?:vec|vectors?|dist|dists|query|queries|target|norm|norms|"
     r"dot|dots|res_d|sq_norms?|q2)(?:$|_|s$)",
     re.IGNORECASE,
 )
+_QSLAB_RE = re.compile(
+    r"(?:^|_)q_?(?:vectors?|slabs?|vecs?)(?:$|_)|quantized", re.IGNORECASE,
+)
+_SCALE_RE = re.compile(r"(?:^|_)scales?(?:$|_)", re.IGNORECASE)
 _BAD_DTYPES = {"float64", "float16", "bfloat16", "double", "half"}
 _CREATE_CALLS = {"zeros", "ones", "full", "empty", "asarray", "array",
                  "ascontiguousarray", "full_like", "zeros_like",
@@ -67,6 +91,14 @@ def _is_distance_named(names: list[str]) -> bool:
     return any(_DIST_RE.search(n) for n in names)
 
 
+def _is_qslab_named(names: list[str]) -> bool:
+    return any(_QSLAB_RE.search(n) for n in names)
+
+
+def _is_scale_named(names: list[str]) -> bool:
+    return any(_SCALE_RE.search(n) for n in names)
+
+
 def run(index: RepoIndex, files: list[ModuleFile]) -> list[Finding]:
     out: list[Finding] = []
 
@@ -75,6 +107,19 @@ def run(index: RepoIndex, files: list[ModuleFile]) -> list[Finding]:
             pass_name=NAME, path=mf.rel, line=node.lineno,
             message=f"distance-path {what} cast/created as {dt} "
                     f"(allowed: {sorted(ALLOWED_DTYPES)})"))
+
+    def flag_dequant(mf: ModuleFile, node: ast.AST) -> None:
+        out.append(Finding(
+            pass_name=NAME, path=mf.rel, line=node.lineno,
+            message="host-side dequant: quantized slab cast to float32 "
+                    "outside the fused-kernel scope (dequant belongs in "
+                    "kernels.gather_distance / kernels.ref only)"))
+
+    def flag_scale(mf: ModuleFile, node: ast.AST, dt: str) -> None:
+        out.append(Finding(
+            pass_name=NAME, path=mf.rel, line=node.lineno,
+            message=f"quantization scales cast/created as {dt} "
+                    f"(scales must stay float32)"))
 
     for mf in files:
         for node in ast.walk(mf.tree):
@@ -85,8 +130,25 @@ def run(index: RepoIndex, files: list[ModuleFile]) -> list[Finding]:
             if (isinstance(node.func, ast.Attribute)
                     and node.func.attr == "astype" and node.args):
                 dt = _dtype_name(node.args[0])
-                if (dt in _BAD_DTYPES
-                        and _is_distance_named(_names_in(node.func.value))):
+                names = _names_in(node.func.value)
+                if _is_qslab_named(names):
+                    # casting a quantized slab INTO int8/bf16 is
+                    # quantization; casting it back to f32 is dequant and
+                    # only the kernel scope may do that
+                    if (dt == "float32"
+                            and not DEQUANT_SCOPE.search(mf.module)):
+                        flag_dequant(mf, node)
+                    continue
+                # scale rule only for a direct `scales.astype(...)` base:
+                # a scale name buried in a larger expression (e.g. the
+                # int8 row cast `rint(v / scales).astype(int8)`) is not a
+                # cast OF the scales
+                if (isinstance(node.func.value, (ast.Name, ast.Attribute))
+                        and _is_scale_named(names)):
+                    if dt in _BAD_DTYPES or dt in QUANT_STORAGE_DTYPES:
+                        flag_scale(mf, node, dt)
+                    continue
+                if dt in _BAD_DTYPES and _is_distance_named(names):
                     flag(mf, node, "value", dt)
                 continue
             if d is None or d.split(".")[-1] not in _CREATE_CALLS:
@@ -99,11 +161,17 @@ def run(index: RepoIndex, files: list[ModuleFile]) -> list[Finding]:
                 cand = _dtype_name(node.args[-1])
                 if cand in _BAD_DTYPES or cand in ALLOWED_DTYPES:
                     dt = cand
-            if dt not in _BAD_DTYPES:
-                continue
             # creation is distance-lane if the source argument is
             # distance-named; assigned-target names are covered below
             names = _names_in(node.args[0]) if node.args else []
+            if _is_qslab_named(names) and dt in QUANT_STORAGE_DTYPES:
+                continue  # quantized storage creation, by design
+            if _is_scale_named(names) and (
+                    dt in _BAD_DTYPES or dt in QUANT_STORAGE_DTYPES):
+                flag_scale(mf, node, dt)
+                continue
+            if dt not in _BAD_DTYPES:
+                continue
             if _is_distance_named(names):
                 flag(mf, node, "array", dt)
     # assignment targets need the Assign context: re-walk for
@@ -124,11 +192,17 @@ def run(index: RepoIndex, files: list[ModuleFile]) -> list[Finding]:
                     dt = _dtype_name(kw.value)
             if dt is None and len(call.args) >= 2:
                 dt = _dtype_name(call.args[-1])
-            if dt not in _BAD_DTYPES:
-                continue
             tnames: list[str] = []
             for t in node.targets:
                 tnames.extend(_names_in(t))
+            if _is_qslab_named(tnames) and dt in QUANT_STORAGE_DTYPES:
+                continue
+            if _is_scale_named(tnames) and (
+                    dt in _BAD_DTYPES or dt in QUANT_STORAGE_DTYPES):
+                flag_scale(mf, call, dt)
+                continue
+            if dt not in _BAD_DTYPES:
+                continue
             if _is_distance_named(tnames):
                 flag(mf, call, "array", dt)
     return sorted(set(out))

@@ -161,15 +161,24 @@ _MIN_BUCKET = 8  # smallest compaction bucket (avoid degenerate compiles)
 class DeviceIndex(NamedTuple):
     """Pytree of snapshot arrays (static config passed separately)."""
 
-    vectors: jax.Array  # f32[n, d]
+    vectors: jax.Array  # {f32|bf16|int8}[n, d] (storage mode = vec_dtype)
     sq_norms: jax.Array  # f32[n]
     attrs: jax.Array  # f32[n]
     neighbors: jax.Array  # i32[L, n, m]
     uvals: jax.Array  # f32[u]
     uval_rep: jax.Array  # i32[u]
+    scales: jax.Array | None = None  # f32[n] per-row int8 dequant scales
+    #   (f32[1] dummy for f32/bf16 slabs — shape-keyed like every other
+    #   field; the None default only suits hand-built f32 indexes)
 
 
-def to_device_index(snap: Snapshot) -> DeviceIndex:
+def _gather_scales(di: DeviceIndex):
+    """Per-row dequant scales iff the slab is int8 (dequant is fused inside
+    the gather kernel dispatch; no other consumer may touch them)."""
+    return di.scales if di.vectors.dtype == jnp.int8 else None
+
+
+def to_device_index(snap: Snapshot, vec_dtype: str | None = None) -> DeviceIndex:
     """Device-resident snapshot with **pow2-padded row capacity**.
 
     Every jitted serve function is shape-keyed on the snapshot row count,
@@ -185,7 +194,18 @@ def to_device_index(snap: Snapshot) -> DeviceIndex:
     and pad uvals are ``+inf`` with representative 0 — ``searchsorted``
     positions for finite query bounds are unchanged by an all-``+inf``
     tail, so landing-layer selectivity and entry selection are identical.
+
+    ``vec_dtype`` selects the device slab storage mode ("f32"/"int8"/
+    "bf16"; default: the snapshot's own ``vec_dtype``).  Quantized slabs
+    already carried by the snapshot (a serve-from-checkpoint cold start)
+    are reused as-is; otherwise the f32 slab is quantized here, per row,
+    so the result is bitwise independent of when the quantization
+    happened.  Pad rows get scale 1.0 (they are unreachable anyway).
     """
+    from .store import quantize_rows
+
+    if vec_dtype is None:
+        vec_dtype = getattr(snap, "vec_dtype", "f32")
     n = int(snap.vectors.shape[0])
     u = int(snap.uvals.shape[0])
     n_cap = _pow2ceil(max(n, 1))
@@ -197,7 +217,19 @@ def to_device_index(snap: Snapshot) -> DeviceIndex:
         width = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
         return np.pad(arr, width, constant_values=value)
 
-    vectors = np.asarray(snap.vectors, np.float32)
+    scales = None
+    if (
+        getattr(snap, "q_vectors", None) is not None
+        and getattr(snap, "vec_dtype", "f32") == vec_dtype
+        and vec_dtype != "f32"
+    ):
+        # checkpointed quantized slab: serve it without requantizing
+        vectors = np.asarray(snap.q_vectors)
+        scales = (None if snap.q_scales is None
+                  else np.asarray(snap.q_scales, np.float32))
+    else:
+        vectors, scales = quantize_rows(np.asarray(snap.vectors, np.float32),
+                                        vec_dtype)
     sq_norms = np.asarray(snap.sq_norms, np.float32)
     attrs = np.asarray(snap.attrs, np.float32)
     neighbors = np.asarray(snap.neighbors, np.int32)
@@ -209,16 +241,21 @@ def to_device_index(snap: Snapshot) -> DeviceIndex:
         attrs = _pad(attrs, pad_n, np.inf)
         neighbors = np.pad(neighbors, ((0, 0), (0, pad_n), (0, 0)),
                            constant_values=-1)
+        if scales is not None:
+            scales = _pad(scales, pad_n, 1.0)
     if pad_u:
         uvals = _pad(uvals, pad_u, np.inf)
         uval_rep = _pad(uval_rep, pad_u, 0)
+    if scales is None:
+        scales = np.ones(1, np.float32)  # dummy (f32/bf16 slab)
     return DeviceIndex(
-        vectors=jnp.asarray(vectors, jnp.float32),
+        vectors=jnp.asarray(vectors),
         sq_norms=jnp.asarray(sq_norms, jnp.float32),
         attrs=jnp.asarray(attrs, jnp.float32),
         neighbors=jnp.asarray(neighbors, jnp.int32),
         uvals=jnp.asarray(uvals, jnp.float32),
         uval_rep=jnp.asarray(uval_rep, jnp.int32),
+        scales=jnp.asarray(scales, jnp.float32),
     )
 
 
@@ -760,10 +797,12 @@ def _hop_body(di: DeviceIndex, cfg: HopCfg, st: HopState) -> HopState:
             di.vectors, di.sq_norms, idc, st.queries, cfg.backend
         )
     else:
-        # fused gather+distance: no [B, K, d] HBM intermediate
+        # fused gather+distance: no [B, K, d] HBM intermediate (and for
+        # quantized slabs the dequant is fused in VMEM behind the row DMAs)
         from repro.kernels.ops import gather_norm_dot
 
         dots, v2 = gather_norm_dot(di.vectors, idc, st.queries,
+                                   scales=_gather_scales(di),
                                    backend=cfg.backend)
     if cfg.metric == "l2":
         dd = jnp.maximum(v2 - 2.0 * dots + st.q2[:, None], 0.0)
@@ -882,6 +921,7 @@ def _init_build_state(di: DeviceIndex, queries, ranges, eps, l_lo, l_hi,
         from repro.kernels.ops import gather_norm_dot
 
         dots, v2 = gather_norm_dot(di.vectors, epc[:, None], queries,
+                                   scales=_gather_scales(di),
                                    backend=cfg.backend)
     if cfg.metric == "l2":
         d_ep = jnp.maximum(v2[:, 0] - 2.0 * dots[:, 0] + q2, 0.0)
@@ -1298,6 +1338,14 @@ def device_search(
     """Batched device search.  All keyword knobs are static (jit keys);
     see the module docstring for the ``visited``/``compact``/``merge``
     semantics.  With ``compact=None`` this is a pure jittable function."""
+    if pipeline == "reference" and di.vectors.dtype != jnp.float32:
+        # the oracle pipeline materializes di.vectors [B, K, d] and reads
+        # di.sq_norms directly — it has no dequant stage by design (f32 is
+        # the parity oracle; quantized modes are gated against it instead)
+        raise ValueError(
+            "pipeline='reference' requires an f32 vector slab; quantized "
+            f"snapshots (dtype {di.vectors.dtype}) serve via pipeline='fused'"
+        )
     cfg = hop_cfg(
         k=k, width=width, m=m, o=o, metric=metric, max_hops=max_hops,
         backend=backend, pipeline=pipeline, visited=visited,
@@ -1323,6 +1371,7 @@ def search_batch(
     compact: tuple[int, int] | None = None,
     pad_batch: bool = True,
     max_hops: int | None = None,
+    vec_dtype: str | None = None,
 ) -> SearchResult:
     """Convenience host wrapper: snapshot -> device arrays -> search.
 
@@ -1333,8 +1382,10 @@ def search_batch(
     ``max_hops`` caps the global hop budget below the width-derived
     default — the deadline-aware degraded-search knob: a truncated search
     returns the best-so-far beam instead of running to convergence.
+    ``vec_dtype`` selects the device slab storage mode (see
+    ``to_device_index``); quantized modes require ``pipeline="fused"``.
     """
-    di = to_device_index(snap)
+    di = to_device_index(snap, vec_dtype=vec_dtype)
     queries = np.asarray(queries, np.float32)
     ranges = np.asarray(ranges, np.float32)
     B = queries.shape[0]

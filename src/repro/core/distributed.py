@@ -160,6 +160,7 @@ def make_serving_fn(
     pad_batch: bool = True,
     visited_adaptive: bool = False,
     max_hops: int | None = None,
+    vec_dtype: str = "f32",
 ):
     """jit-compiled query-sharded serving function.
 
@@ -207,13 +208,22 @@ def make_serving_fn(
     else:
         bits0 = None  # bitmap mode: nothing to adapt
 
+    from .store import quantize_rows
+
+    vec_slab, vec_scales = quantize_rows(
+        np.asarray(snap.vectors, np.float32), vec_dtype
+    )
     di = DeviceIndex(
-        vectors=jnp.asarray(snap.vectors, jnp.float32),
+        vectors=jnp.asarray(vec_slab),
         sq_norms=jnp.asarray(snap.sq_norms, jnp.float32),
         attrs=jnp.asarray(snap.attrs, jnp.float32),
         neighbors=jnp.asarray(snap.neighbors, jnp.int32),
         uvals=jnp.asarray(snap.uvals, jnp.float32),
         uval_rep=jnp.asarray(snap.uval_rep, jnp.int32),
+        scales=jnp.asarray(
+            vec_scales if vec_scales is not None else np.ones(1, np.float32),
+            jnp.float32,
+        ),
     )
     di = jax.device_put(di, rep)
 

@@ -56,7 +56,7 @@ from .search import (
     search_candidates_batch,
 )
 from .snapshot import DeviceBuildArena, NeighborSlab
-from .store import BuildStats, SearchStats, VectorStore
+from .store import VEC_DTYPES, BuildStats, SearchStats, VectorStore
 
 #: registered ``insert_batch`` phase-1 engines; an unknown ``backend=``
 #: raises ``ValueError`` naming these (never a silent numpy fall-through).
@@ -90,8 +90,19 @@ class WoWIndex:
         metric: str = "l2",
         seed: int = 0,
         compact_threshold: float | None = None,
+        vec_dtype: str = "f32",
     ):
         self.params = WoWParams(m, ef_construction, o, metric, seed)
+        if vec_dtype not in VEC_DTYPES:
+            raise ValueError(
+                f"vec_dtype must be one of {VEC_DTYPES}, got {vec_dtype!r}"
+            )
+        # device-slab storage mode for build arenas + serving snapshots:
+        # "f32" (exact; the parity oracle), "bf16", or "int8" (per-row f32
+        # scales).  Host vectors stay f32 — quantization happens at the
+        # device upload boundary and dequant is fused inside the gather
+        # kernel, so the quantized rows never round-trip through host f32.
+        self.vec_dtype = vec_dtype
         self.store = VectorStore(dim, metric=metric)
         self.graph = LayeredGraph(m)
         from .wbt import WBT
@@ -171,7 +182,11 @@ class WoWIndex:
         """Algorithm 1: top-down insertion. Returns the new vertex id."""
         p = self.params
         m, o, omega_c = p.m, p.o, p.ef_construction
-        attr = float(attr)
+        # canonicalize to an exactly-f32-representable order key BEFORE the
+        # WAL append, so a replayed record re-derives the identical value
+        # and f32 consumers (device slabs, checkpoint dead_vals) agree
+        # bitwise with the host (see VectorStore.append)
+        attr = float(np.float32(attr))
         vec = np.asarray(vec, dtype=np.float32)
         self._validate_ingest(vec.reshape(1, -1),
                               np.asarray([attr], dtype=np.float64))
@@ -339,7 +354,15 @@ class WoWIndex:
         vectors = np.asarray(vectors, dtype=np.float32)
         if vectors.ndim == 1:
             vectors = vectors.reshape(1, -1)
-        attrs = np.asarray(attrs, dtype=np.float64).reshape(-1)
+        # f32-canonical attrs BEFORE validation and the WAL append (see
+        # ``insert``): replay re-derives identical order keys, and a value
+        # too large for f32 becomes inf here and is rejected below
+        attrs = (
+            np.asarray(attrs, dtype=np.float64)
+            .reshape(-1)
+            .astype(np.float32)
+            .astype(np.float64)
+        )
         if len(vectors) != len(attrs):
             raise ValueError(f"{len(vectors)} vectors vs {len(attrs)} attrs")
         if batch_size < 1:
@@ -442,14 +465,19 @@ class WoWIndex:
                 if (
                     not isinstance(self._arena, ShardedBuildArena)
                     or self._arena.num_shards != shards
+                    or self._arena.vec_dtype != self.vec_dtype
                 ):
                     from ..parallel.sharding import build_mesh
 
-                    self._arena = ShardedBuildArena(build_mesh(shards))
-            elif self._arena is None or isinstance(
-                self._arena, ShardedBuildArena
+                    self._arena = ShardedBuildArena(
+                        build_mesh(shards), vec_dtype=self.vec_dtype
+                    )
+            elif (
+                self._arena is None
+                or isinstance(self._arena, ShardedBuildArena)
+                or self._arena.vec_dtype != self.vec_dtype
             ):
-                self._arena = DeviceBuildArena()
+                self._arena = DeviceBuildArena(vec_dtype=self.vec_dtype)
         # mirror liveness, judged BEFORE this batch mutates anything: a
         # mirror that was in sync at batch start stays maintainable by this
         # batch's deltas alone (even if the other backend drives phase 1),
@@ -515,6 +543,7 @@ class WoWIndex:
         arena = None
         slab_full = None
         ops_table = None
+        ops_scales = None
         if self.store.n > B:  # the pre-batch graph is non-empty
             # the graph is frozen during phase 1; the persistent arenas are
             # brought up to date with deltas only (allocation/rebuild is
@@ -524,6 +553,7 @@ class WoWIndex:
                 arena.ensure(self)
                 if backend == "ops":
                     ops_table = arena.vectors  # device-resident [cap, d]
+                    ops_scales = arena.q_scales  # f32[cap] (int8) / None
             if backend not in ("device", "sharded"):
                 slab_full = self._slab.ensure(self.graph)
             uw = 0  # used carry width: every [B, C] pass runs on [:, :uw]
@@ -610,6 +640,7 @@ class WoWIndex:
                             backend=backend,
                             slab_cache=slab_full,
                             ops_table=ops_table,
+                            ops_scales=ops_scales,
                             seed_ids=seeds_i,
                             seed_d=seeds_d,
                             visited_arena=self._visited2d,

@@ -305,6 +305,7 @@ def search_candidates_batch(
     backend: str = "numpy",
     slab_cache: np.ndarray | None = None,
     ops_table=None,
+    ops_scales=None,
     seed_ids: np.ndarray | None = None,
     seed_d: np.ndarray | None = None,
     visited_arena: "VisitedArena2D | None" = None,
@@ -384,10 +385,14 @@ def search_candidates_batch(
         table = ops_table if ops_table is not None else jnp.asarray(
             store.vectors[:n]
         )
+        # quantized ops arena: the per-row scales ride along and dequant
+        # stays fused inside the kernel dispatch
+        scales = ops_scales if ops_table is not None else None
 
         def eval_ids(tg_sub, q2_sub, ids_pad):
             dots, norms = gather_norm_dot(
-                table, jnp.asarray(ids_pad, jnp.int32), jnp.asarray(tg_sub)
+                table, jnp.asarray(ids_pad, jnp.int32), jnp.asarray(tg_sub),
+                scales=scales,
             )
             dots, norms = np.asarray(dots), np.asarray(norms)
             if store.metric == "l2":

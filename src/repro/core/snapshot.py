@@ -16,6 +16,16 @@ Arrays (n = live vertices, L = layers, m = max outdegree):
   uval_rep     i32[u]             representative (first live) vertex per value
   ids_map      i64[n]             snapshot id -> original WoWIndex id
 
+Quantized serving (``vec_dtype`` = "int8" | "bf16") adds optional slabs:
+
+  q_vectors    int8[n, d] / bf16[n, d]   storage-dtype vector slab
+  q_scales     f32[n]                     per-row dequant scales (int8 only)
+
+``vectors`` stays the f32 oracle copy; ``to_device_index`` prefers the
+pre-quantized slabs (checkpoint cold start) and re-derives them from
+``vectors`` otherwise.  Quantization is per-row (``core.store.quantize_rows``)
+so both routes are bitwise identical.
+
 Incremental refresh: ``take_snapshot(index, prev=...)`` reuses the previous
 snapshot's arrays when nothing was deleted and the index tracked which
 neighbor rows changed since ``prev`` was taken (``WoWIndex`` keeps a dirty-row
@@ -61,6 +71,21 @@ def _pow2ceil(x: int) -> int:
     return 1 << max(0, (int(x) - 1)).bit_length()
 
 
+def writable(arr: np.ndarray) -> np.ndarray:
+    """Copy-on-first-mutation guard for checkpoint-cold-start slabs.
+
+    ``load_serving_snapshot`` wraps ``np.load(mmap_mode="r")`` arrays into
+    the ``Snapshot`` **as-is** — they are read-only, and ``np.asarray`` on
+    a dtype-matching read-only array aliases it rather than copying.  Any
+    consumer about to write a snapshot-derived array in place must route
+    the base through this helper first: a no-op for ordinary writable
+    arrays, a materializing copy for the read-only mapping (paid once, at
+    first mutation, instead of eagerly at cold start).
+    """
+    a = np.asarray(arr)
+    return a if a.flags.writeable else a.copy()
+
+
 @dataclass(frozen=True)
 class Snapshot:
     vectors: np.ndarray
@@ -74,6 +99,9 @@ class Snapshot:
     o: int
     metric: str
     stamp: int = -1  # index.mutations at creation (incremental-refresh key)
+    q_vectors: np.ndarray | None = None  # storage-dtype slab (int8/bf16)
+    q_scales: np.ndarray | None = None  # f32 per-row scales (int8 only)
+    vec_dtype: str = "f32"  # storage mode of q_vectors ("f32" = none)
 
     @property
     def n(self) -> int:
@@ -252,6 +280,9 @@ def snapshot_from_arrays(
     o: int,
     metric: str,
     stamp: int = -1,
+    q_vectors: np.ndarray | None = None,
+    q_scales: np.ndarray | None = None,
+    vec_dtype: str = "f32",
 ) -> Snapshot:
     """Build a serving ``Snapshot`` straight from checkpoint slabs — the
     serve-from-checkpoint cold start (``repro.persist``), no live index.
@@ -260,9 +291,17 @@ def snapshot_from_arrays(
     (``np.load(mmap_mode="r")``): with no tombstones they are wrapped
     as-is — graph rows are left-compacted by construction, exactly the
     snapshot layout — so serving starts before the slabs are paged in.
+    The wrapped arrays are READ-ONLY; consumers must treat every
+    ``Snapshot`` field as immutable and route any in-place rewrite of a
+    derived array through ``writable()`` (copy-on-first-mutation) —
+    ``np.asarray`` on a dtype-matching field aliases the read-only
+    mapping instead of copying.
     With tombstones outstanding the dead rows are compacted out host-side
     (same ops as ``take_snapshot``, hence bitwise the same snapshot).
     ``attrs`` is the store's f64 slab; only its f32 cast is materialized.
+    ``q_vectors``/``q_scales`` are the checkpoint's pre-quantized slabs
+    (``vec_dtype`` != "f32"); they ride along so the cold start skips
+    re-quantization, and are compacted by the same live-row gather.
     """
     n_all = vectors.shape[0]
     deleted = np.asarray(deleted, dtype=np.int64)
@@ -284,6 +323,9 @@ def snapshot_from_arrays(
             o=o,
             metric=metric,
             stamp=stamp,
+            q_vectors=q_vectors,
+            q_scales=q_scales,
+            vec_dtype=vec_dtype,
         )
     dead = set(deleted.tolist())
     live = np.asarray(
@@ -317,6 +359,9 @@ def snapshot_from_arrays(
         o=o,
         metric=metric,
         stamp=stamp,
+        q_vectors=None if q_vectors is None else np.asarray(q_vectors)[live],
+        q_scales=None if q_scales is None else np.asarray(q_scales)[live],
+        vec_dtype=vec_dtype,
     )
 
 
@@ -385,15 +430,31 @@ class DeviceBuildArena:
     scatters run through donated jits (``repro.kernels.ops.arena_scatter``),
     so backends that support buffer donation update in place.  Scatter
     batch shapes are padded to power-of-two buckets to bound compilations.
+
+    ``vec_dtype`` != "f32" stores the vector slab quantized on device
+    (int8 with a parallel f32 ``q_scales`` arena, or bf16): full uploads
+    quantize host-side, appends quantize just the new rows and scatter
+    both buffers through the same donated jits, and the fused Pallas
+    gather dequantizes in VMEM — f32 candidate rows never exist in HBM.
+    Per-row quantization keeps incremental scatters bitwise identical to
+    a full re-quantization at any batch split or shard count.
     """
 
     __slots__ = (
         "vectors", "sq_norms", "attrs", "neighbors", "cap", "dim", "m", "o",
         "metric", "num_layers", "version", "n_synced", "stats", "_dummy_u",
-        "_dummy_r",
+        "_dummy_r", "vec_dtype", "q_scales",
     )
 
-    def __init__(self):
+    def __init__(self, vec_dtype: str = "f32"):
+        from .store import VEC_DTYPES
+
+        if vec_dtype not in VEC_DTYPES:
+            raise ValueError(
+                f"vec_dtype must be one of {VEC_DTYPES}, got {vec_dtype!r}"
+            )
+        self.vec_dtype = vec_dtype
+        self.q_scales = None  # f32[cap] per-row dequant scales (int8 only)
         self.vectors = None
         self.sq_norms = None
         self.attrs = None
@@ -452,7 +513,13 @@ class DeviceBuildArena:
             nb[:, : self.cap] = np.stack(
                 [lay for lay in graph.layers], axis=0
             )
-            self.vectors = jnp.asarray(vec)
+            # quantized modes upload the slab in storage dtype (pad rows are
+            # all-zero and quantize to 0, unreachable via +inf attrs anyway)
+            from .store import quantize_rows
+
+            slab, scales = quantize_rows(vec, self.vec_dtype)
+            self.vectors = jnp.asarray(slab)
+            self.q_scales = None if scales is None else jnp.asarray(scales)
             self.sq_norms = jnp.asarray(nrm)
             self.attrs = jnp.asarray(att)
             self.neighbors = jnp.asarray(nb)
@@ -465,10 +532,13 @@ class DeviceBuildArena:
         if n > self.n_synced:  # append the new rows into the pre-sized tail
             from repro.kernels.ops import arena_scatter
 
+            from .store import quantize_rows
+
             ids = np.arange(self.n_synced, n, dtype=np.int64)
-            self.vectors = arena_scatter(
-                self.vectors, ids, store.vectors[ids]
-            )
+            slab, scales = quantize_rows(store.vectors[ids], self.vec_dtype)
+            self.vectors = arena_scatter(self.vectors, ids, slab)
+            if scales is not None:
+                self.q_scales = arena_scatter(self.q_scales, ids, scales)
             self.sq_norms = arena_scatter(
                 self.sq_norms, ids, store.sq_norms[ids]
             )
@@ -514,6 +584,7 @@ class DeviceBuildArena:
             neighbors=self.neighbors,
             uvals=self._dummy_u,
             uval_rep=self._dummy_r,
+            scales=self.q_scales if self.q_scales is not None else self._dummy_u,
         )
 
     def search(
@@ -581,8 +652,8 @@ class ShardedBuildArena(DeviceBuildArena):
 
     __slots__ = ("mesh", "axis")
 
-    def __init__(self, mesh, axis: str = "build"):
-        super().__init__()
+    def __init__(self, mesh, axis: str = "build", vec_dtype: str = "f32"):
+        super().__init__(vec_dtype=vec_dtype)
         self.mesh = mesh
         self.axis = axis
 
@@ -599,9 +670,9 @@ class ShardedBuildArena(DeviceBuildArena):
             from repro.kernels.ops import replicate
 
             (self.vectors, self.sq_norms, self.attrs, self.neighbors,
-             self._dummy_u, self._dummy_r) = replicate(
+             self._dummy_u, self._dummy_r, self.q_scales) = replicate(
                 (self.vectors, self.sq_norms, self.attrs, self.neighbors,
-                 self._dummy_u, self._dummy_r),
+                 self._dummy_u, self._dummy_r, self.q_scales),
                 self.mesh,
             )
 

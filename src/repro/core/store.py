@@ -11,9 +11,49 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import ml_dtypes
 import numpy as np
 
 METRICS = ("l2", "cosine", "ip")
+
+# storage modes for the device-resident vector slab: f32 is exact (and the
+# parity oracle), bf16 halves slab bytes, int8 quarters them with per-row
+# f32 scales (train/compress.py discipline: scale = max|row|/127)
+VEC_DTYPES = ("f32", "int8", "bf16")
+
+_QUANT_EPS = 1e-12
+
+
+def vec_np_dtype(vec_dtype: str):
+    """numpy dtype of the stored slab for a ``vec_dtype`` mode."""
+    if vec_dtype == "f32":
+        return np.float32
+    if vec_dtype == "bf16":
+        return ml_dtypes.bfloat16
+    if vec_dtype == "int8":
+        return np.int8
+    raise ValueError(f"vec_dtype must be one of {VEC_DTYPES}, got {vec_dtype!r}")
+
+
+def quantize_rows(vectors: np.ndarray, vec_dtype: str):
+    """Quantize f32 rows for storage mode ``vec_dtype``.
+
+    Returns ``(slab, scales)`` — ``scales`` is f32 per-row for int8 and
+    ``None`` otherwise.  Quantization is strictly per-row, so quantizing a
+    subset of rows (an arena delta scatter) is bitwise identical to slicing
+    a full-slab quantization: device/sharded incremental builds stay exactly
+    reproducible at any batch split or shard count.
+    """
+    dt = vec_np_dtype(vec_dtype)
+    v = np.ascontiguousarray(vectors, dtype=np.float32)
+    if vec_dtype == "f32":
+        return v, None
+    if vec_dtype == "bf16":
+        return v.astype(dt), None
+    amax = np.abs(v).max(axis=1) if v.size else np.zeros(v.shape[0], np.float32)
+    scales = (np.maximum(amax, _QUANT_EPS) / np.float32(127.0)).astype(np.float32)
+    slab = np.clip(np.rint(v / scales[:, None]), -127, 127).astype(np.int8)
+    return slab, scales
 
 
 @dataclass
@@ -45,7 +85,10 @@ class VectorStore:
     All distance state is explicit float32: vectors, cached squared norms and
     every ``dist_*`` result — the same dtype the device snapshot serves — so
     host/device parity comparisons never silently widen to float64.
-    Attributes stay float64 (they are order keys, not distances).
+    Attributes stay float64 (they are order keys, not distances), but are
+    canonicalized to exactly-f32-representable values at the ingest boundary
+    so f32 consumers (device slabs, checkpoint sections, range filters)
+    agree bitwise with the host order keys.
     """
 
     __slots__ = (
@@ -107,8 +150,14 @@ class VectorStore:
         i = self.n
         v = self.prepare(vec)
         self.vectors[i] = v
-        self.attrs[i] = float(attr)
-        self.attrs_list.append(float(attr))
+        # attributes are canonicalized to exactly-f32-representable values at
+        # the ingest boundary: every downstream consumer (device attrs slab,
+        # checkpoint dead_vals section, serving range filters) is f32, and a
+        # value that differs under f64<->f32 round-trip would silently break
+        # dead-value equality after recovery
+        attr = float(np.float32(attr))
+        self.attrs[i] = attr
+        self.attrs_list.append(attr)
         self.sq_norms[i] = np.float32(np.dot(v, v))
         self.n += 1
         return i
@@ -117,7 +166,14 @@ class VectorStore:
         """Vectorised append of a micro-batch: one grow, one normalise pass,
         one sq-norm einsum.  Returns the new contiguous vertex ids."""
         vecs = np.asarray(vecs, dtype=np.float32).reshape(-1, self.dim)
-        attrs = np.asarray(attrs, dtype=np.float64).reshape(-1)
+        # f32-canonical attrs (see ``append``): round-trip through f32 so the
+        # stored f64 order keys are exactly representable in f32
+        attrs = (
+            np.asarray(attrs, dtype=np.float64)
+            .reshape(-1)
+            .astype(np.float32)
+            .astype(np.float64)
+        )
         if len(vecs) != len(attrs):
             raise ValueError(f"{len(vecs)} vectors vs {len(attrs)} attrs")
         b = len(vecs)

@@ -20,11 +20,24 @@ VMEM (cheaper and DMA-free compared to a second scattered gather of a
 precomputed norm table), so the wrapper can form the exact factorised L2
 ``|v|^2 - 2 v.q + |q|^2`` without any extra HBM traffic.
 
-VMEM budget: ``2 * rows * D * 4`` bytes of slab scratch plus the ``[1, D]``
-query block and two ``[1, rows]`` output blocks — for the defaults
+VMEM budget: ``2 * rows * D * itemsize`` bytes of slab scratch plus the
+``[1, D]`` query block and two ``[1, rows]`` output blocks — for the defaults
 (rows=8, D<=4096) well under 1 MiB, leaving headroom for the automatic
 pipelining of the BlockSpec-driven operands.  ``rows`` trades DMA efficiency
 against wasted fetch on ragged K (K is padded up to a multiple of ``rows``).
+
+Quantized tables (the memory-ceiling path): the table may be stored int8
+(per-row f32 ``scales``, ``max|row|/127`` discipline) or bf16.  The row DMAs
+then move *quantized* bytes — 4x / 2x less HBM->VMEM traffic per candidate —
+and the dequant (upcast + scale multiply) happens on the slab already
+sitting in VMEM, immediately before the MXU contraction.  Candidate vectors
+therefore never materialise in f32 anywhere in HBM; f32 exists only inside
+VMEM for the duration of one slab.  For int8 the wrapper pre-gathers the
+per-candidate scales (``scales[ids]`` — a [B, K] f32 sliver, ~D/1 times
+smaller than the vectors) and streams them in as a third input block, so the
+kernel needs no extra scatter DMAs.  Compiled TPU lowering bumps ``rows`` to
+the narrow-dtype sublane floor (int8: 32, bf16: 16) so the slab scratch
+respects the minimum tile.
 """
 from __future__ import annotations
 
@@ -46,10 +59,18 @@ def _resolve_interpret(interpret: bool | None) -> bool:
     return interpret
 
 
-def _slab_kernel(ids_ref, table_ref, q_ref, dots_ref, v2_ref, slab, sems, *, rows):
-    # ids_ref: scalar-prefetch i32[B, Kp]; table_ref: ANY (HBM) f32[n, D];
-    # q_ref: VMEM f32[1, D]; dots_ref/v2_ref: VMEM f32[1, rows];
-    # slab: VMEM f32[2, rows, D] double buffer; sems: DMA sem [2, rows].
+def _slab_kernel(ids_ref, table_ref, q_ref, *refs, rows):
+    # ids_ref: scalar-prefetch i32[B, Kp]; table_ref: ANY (HBM)
+    # {f32|bf16|int8}[n, D]; q_ref: VMEM f32[1, D].  For int8 tables a
+    # per-candidate scale block sc_ref (VMEM f32[1, rows]) is threaded in
+    # between the query block and the outputs; dots_ref/v2_ref: VMEM
+    # f32[1, rows]; slab: VMEM table.dtype[2, rows, D] double buffer;
+    # sems: DMA sem [2, rows].
+    if len(refs) == 5:
+        sc_ref, dots_ref, v2_ref, slab, sems = refs
+    else:
+        sc_ref = None
+        dots_ref, v2_ref, slab, sems = refs
     b = pl.program_id(0)
     kt = pl.program_id(1)
     nk = pl.num_programs(1)
@@ -80,7 +101,11 @@ def _slab_kernel(ids_ref, table_ref, q_ref, dots_ref, v2_ref, slab, sems, *, row
     for r in range(rows):
         row_dma(step, slot, r).wait()
 
-    v = slab[slot]  # [rows, D]
+    # dequant on the slab already in VMEM: upcast (bf16/int8) and, for int8,
+    # the per-row scale multiply — f32 candidate rows exist only here.
+    v = slab[slot].astype(jnp.float32)  # [rows, D]
+    if sc_ref is not None:
+        v = v * sc_ref[0][:, None]
     q = q_ref[0]  # [D]
     dots_ref[0, :] = lax.dot_general(
         v, q, dimension_numbers=(((1,), (0,)), ((), ())),
@@ -89,38 +114,63 @@ def _slab_kernel(ids_ref, table_ref, q_ref, dots_ref, v2_ref, slab, sems, *, row
     v2_ref[0, :] = jnp.sum(v * v, axis=1)
 
 
+# minimum second-to-last-dim tile (sublane count) per slab dtype on real
+# TPU lowering — interpret mode (CPU tests) has no such floor
+_SUBLANE_FLOOR = {"int8": 32, "bfloat16": 16}
+
+
 @functools.partial(jax.jit, static_argnames=("rows", "interpret"))
 def gather_norm_dot(
-    table: jax.Array,  # f32[n, D] vector table (stays in HBM)
+    table: jax.Array,  # {f32|bf16|int8}[n, D] vector table (stays in HBM)
     ids: jax.Array,  # i32[B, K] candidate row ids
     queries: jax.Array,  # f32[B, D]
+    scales: jax.Array | None = None,  # f32[n] per-row scales (int8 tables)
     rows: int = 8,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """-> (dots, v2) with dots[b,k] = <table[ids[b,k]], queries[b]> and
-    v2[b,k] = |table[ids[b,k]]|^2, both f32[B, K]."""
+    """-> (dots, v2) with dots[b,k] = <deq(table[ids[b,k]]), queries[b]> and
+    v2[b,k] = |deq(table[ids[b,k]])|^2, both f32[B, K].
+
+    ``deq`` is identity for f32, an upcast for bf16, and
+    ``row.astype(f32) * scales[id]`` for int8 — fused in VMEM after the row
+    DMA, so only quantized bytes cross HBM."""
     interpret = _resolve_interpret(interpret)
+    if table.dtype not in (jnp.float32, jnp.bfloat16, jnp.int8):
+        table = table.astype(jnp.float32)
+    quantized = table.dtype == jnp.int8
+    if quantized and scales is None:
+        raise ValueError("int8 table requires per-row scales")
     B, K = ids.shape
     n, D = table.shape
     rows = max(1, min(rows, K))
+    if not interpret:
+        rows = max(rows, _SUBLANE_FLOOR.get(str(table.dtype), 1))
     Kp = -(-K // rows) * rows
     idc = jnp.clip(ids.astype(jnp.int32), 0, n - 1)
     if Kp != K:
         idc = jnp.pad(idc, ((0, 0), (0, Kp - K)))
 
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),  # table: gathered by DMA
+        pl.BlockSpec((1, D), lambda b, k, ids_ref: (b, 0)),
+    ]
+    operands = [table, queries.astype(jnp.float32)]
+    if quantized:
+        # pre-gathered per-candidate scales: a [B, Kp] f32 sliver streamed
+        # in as ordinary blocks — no per-element scale DMAs in the kernel
+        in_specs.append(pl.BlockSpec((1, rows), lambda b, k, ids_ref: (b, k)))
+        operands.append(jnp.take(scales.astype(jnp.float32), idc, axis=0))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Kp // rows),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),  # table: gathered by DMA
-            pl.BlockSpec((1, D), lambda b, k, ids_ref: (b, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, rows), lambda b, k, ids_ref: (b, k)),
             pl.BlockSpec((1, rows), lambda b, k, ids_ref: (b, k)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((2, rows, D), jnp.float32),
+            pltpu.VMEM((2, rows, D), table.dtype),
             pltpu.SemaphoreType.DMA((2, rows)),
         ],
     )
@@ -132,7 +182,7 @@ def gather_norm_dot(
             jax.ShapeDtypeStruct((B, Kp), jnp.float32),
         ],
         interpret=interpret,
-    )(idc, table.astype(jnp.float32), queries.astype(jnp.float32))
+    )(idc, *operands)
     return dots[:, :K], v2[:, :K]
 
 
@@ -142,7 +192,9 @@ def gather_dot(
     queries: jax.Array,
     interpret: bool | None = None,
     rows: int = 8,
+    scales: jax.Array | None = None,
 ) -> jax.Array:
-    """out[b, k] = <table[ids[b, k]], queries[b]> (slab kernel, dots only)."""
-    dots, _ = gather_norm_dot(table, ids, queries, rows=rows, interpret=interpret)
+    """out[b, k] = <deq(table[ids[b, k]]), queries[b]> (slab kernel, dots only)."""
+    dots, _ = gather_norm_dot(table, ids, queries, scales=scales, rows=rows,
+                              interpret=interpret)
     return dots

@@ -67,14 +67,19 @@ def gather_dot(table, ids, queries, backend: str = "auto", **kw):
     return _ref.gather_dot_ref(table, ids, queries)
 
 
-def gather_norm_dot(table, ids, queries, backend: str = "auto", **kw):
-    """Fused candidate gather -> (dots, sq-norms); the serving hot path."""
+def gather_norm_dot(table, ids, queries, scales=None, backend: str = "auto",
+                    **kw):
+    """Fused candidate gather -> (dots, sq-norms); the serving hot path.
+
+    ``table`` may be f32, bf16, or int8 (``scales`` = per-row f32 scales,
+    required for int8); dequant is fused in the kernel / folded into the
+    reference gather — callers never dequantize the slab themselves."""
     use, interp = _resolve(backend)
     if use:
         from .gather_distance import gather_norm_dot as kern
 
-        return kern(table, ids, queries, interpret=interp, **kw)
-    return _ref.gather_norm_dot_ref(table, ids, queries)
+        return kern(table, ids, queries, scales=scales, interpret=interp, **kw)
+    return _ref.gather_norm_dot_ref(table, ids, queries, scales=scales)
 
 
 def merge_src_indices(pos_a, pos_b, W: int, K: int, method: str = "auto"):

@@ -27,12 +27,20 @@ def gather_dot_ref(
 
 
 def gather_norm_dot_ref(
-    table: jax.Array, ids: jax.Array, queries: jax.Array
+    table: jax.Array, ids: jax.Array, queries: jax.Array,
+    scales: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """-> (<table[ids[b,k]], queries[b]>, |table[ids[b,k]]|^2)."""
+    """-> (<deq(table[ids[b,k]]), queries[b]>, |deq(table[ids[b,k]])|^2).
+
+    Dequantizing twin of the Pallas kernel: bf16 tables upcast, int8 tables
+    multiply the gathered rows by their per-row f32 ``scales`` — the same
+    math the kernel fuses in VMEM, expressed over a materialized gather."""
     n = table.shape[0]
     idc = jnp.clip(ids, 0, n - 1)
-    vecs = table[idc]
+    vecs = table[idc].astype(jnp.float32)
+    if scales is not None:
+        vecs = vecs * scales.astype(jnp.float32)[idc][..., None]
+    queries = queries.astype(jnp.float32)
     return (
         jnp.einsum("bkd,bd->bk", vecs, queries),
         jnp.einsum("bkd,bkd->bk", vecs, vecs),

@@ -1,0 +1,123 @@
+"""Arithmetic-intensity verification of the quantized gather slabs.
+
+The tentpole claim of the quantized vector arenas: ``gather_norm_dot``'s
+dot FLOPs are storage-mode-invariant, while the bytes the gather moves
+scale with the slab dtype width — so arithmetic intensity (FLOPs/byte)
+rises ~4x for int8 (per-row f32 scales) and ~2x for bf16 over the f32
+slab.  The serving gather sits far left of the roofline ridge on every
+accelerator in the model (memory-bound), so the AI ratio is the speedup
+ceiling the fused-dequant kernel rides.
+
+Method (the dry-run discipline from DESIGN.md §5): lower the REFERENCE
+formulation of ``gather_norm_dot`` per ``vec_dtype`` over a
+representative serving shape, compile, and run the trip-count-aware HLO
+cost walk (``launch/hlo_cost.py``) over the post-optimization module;
+``launch/roofline.py`` turns FLOPs/bytes into TPU-v5e roofline terms.
+Operand-byte accounting charges the whole slab to the gather, which is
+exactly the term that carries the dtype width.
+
+CLI::
+
+  python -m repro.launch.quant_roofline [--n N] [--d D] [--batch B]
+                                        [--width W] [--gate]
+
+``--gate`` exits non-zero unless int8 AI >= 2.5x f32 and bf16 AI >=
+1.5x f32 (the CI hook; ``tests/test_system.py`` runs the same check
+in-process on a small shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import hlo_cost
+from .roofline import roofline_terms
+
+_SLAB_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+#: --gate / test bars: minimum AI ratio vs the f32 slab.  The ideal
+#: ratios are ~4x / ~2x; the bars sit below them because queries, ids,
+#: scales, and the result tensor contribute mode-invariant bytes.
+AI_GATE = {"int8": 2.5, "bf16": 1.5}
+
+
+def gather_cost(vec_dtype: str, n: int = 1 << 17, d: int = 128,
+                B: int = 128, W: int = 48) -> dict:
+    """Compile ``gather_norm_dot`` for one storage mode (abstract inputs,
+    nothing allocated) and return its parsed per-device cost record."""
+    from repro.kernels.ops import gather_norm_dot
+
+    table = jax.ShapeDtypeStruct((n, d), _SLAB_DTYPES[vec_dtype])
+    ids = jax.ShapeDtypeStruct((B, W), jnp.int32)
+    qs = jax.ShapeDtypeStruct((B, d), jnp.float32)
+    if vec_dtype == "int8":
+        sc = jax.ShapeDtypeStruct((n,), jnp.float32)
+        fn = jax.jit(lambda t, s, q, c: gather_norm_dot(
+            t, s, q, scales=c, backend="ref"))
+        compiled = fn.lower(table, ids, qs, sc).compile()
+    else:
+        fn = jax.jit(lambda t, s, q: gather_norm_dot(t, s, q, backend="ref"))
+        compiled = fn.lower(table, ids, qs).compile()
+    rec = hlo_cost.analyze(compiled.as_text(), total_devices=1)
+    flops = rec["flops_per_device"]
+    if flops <= 0:  # dots folded beyond the parser: XLA's own counter
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        flops = float((ca or {}).get("flops", 0.0))
+    out = {
+        "vec_dtype": vec_dtype,
+        "shape": {"n": n, "d": d, "B": B, "W": W},
+        "flops": flops,
+        "bytes": rec["bytes_per_device"],
+        "slab_bytes": n * d * jnp.dtype(_SLAB_DTYPES[vec_dtype]).itemsize,
+        "ai": flops / max(rec["bytes_per_device"], 1.0),
+    }
+    out["terms"] = roofline_terms(flops, out["bytes"], 0.0, 1,
+                                  per_device=True)
+    return out
+
+
+def verify(n: int = 1 << 17, d: int = 128, B: int = 128,
+           W: int = 48) -> dict:
+    """Cost records for all three storage modes + AI ratios vs f32."""
+    recs = {m: gather_cost(m, n=n, d=d, B=B, W=W) for m in _SLAB_DTYPES}
+    for m in ("int8", "bf16"):
+        recs[m]["ai_vs_f32"] = recs[m]["ai"] / max(recs["f32"]["ai"], 1e-30)
+    return recs
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="quantized-slab gather arithmetic-intensity check")
+    ap.add_argument("--n", type=int, default=1 << 17, help="slab rows")
+    ap.add_argument("--d", type=int, default=128, help="vector dim")
+    ap.add_argument("--batch", type=int, default=128, help="queries per wave")
+    ap.add_argument("--width", type=int, default=48, help="candidates/query")
+    ap.add_argument("--gate", action="store_true",
+                    help="non-zero exit unless the AI ratios clear AI_GATE")
+    args = ap.parse_args()
+    recs = verify(n=args.n, d=args.d, B=args.batch, W=args.width)
+    print(f"{'mode':>5} {'flops':>14} {'bytes':>14} {'AI':>9} "
+          f"{'AI/f32':>7} {'memory_s':>10} bottleneck")
+    for m, r in recs.items():
+        print(f"{m:>5} {r['flops']:14.3e} {r['bytes']:14.3e} "
+              f"{r['ai']:9.4f} {r.get('ai_vs_f32', 1.0):7.2f} "
+              f"{r['terms']['memory_s']:10.3e} "
+              f"{r['terms']['bottleneck']}")
+    if args.gate:
+        bad = [m for m, bar in AI_GATE.items()
+               if recs[m]["ai_vs_f32"] < bar]
+        if bad:
+            raise SystemExit(
+                f"quantized AI gate failed for {bad}: "
+                f"{ {m: round(recs[m]['ai_vs_f32'], 2) for m in AI_GATE} } "
+                f"vs bars {AI_GATE}")
+        print(f"AI gate OK: "
+              + ", ".join(f"{m} {recs[m]['ai_vs_f32']:.2f}x (bar {b}x)"
+                          for m, b in AI_GATE.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,13 @@ def main() -> None:
     ap.add_argument("--mesh", default="", help='e.g. "4x2" -> (data, model)')
     ap.add_argument("--backend", default="auto", choices=("auto", "pallas", "ref"),
                     help="distance-kernel dispatch (see repro.kernels.ops)")
+    ap.add_argument("--vec-dtype", default="f32",
+                    choices=("f32", "int8", "bf16"),
+                    help="on-device vector-slab storage: f32 (oracle), int8 "
+                         "(per-row f32 scales, 4x less HBM traffic) or bf16 "
+                         "(2x); dequant is fused into the Pallas gather "
+                         "kernel, so candidate rows never materialize in "
+                         "f32 HBM (quantized modes require --pipeline fused)")
     ap.add_argument("--pipeline", default="fused", choices=("fused", "reference"),
                     help="hop pipeline: fused (production) or the pre-refactor "
                          "reference (parity/benchmark oracle)")
@@ -112,6 +119,10 @@ def main() -> None:
                          "a timestamped line instead of a silent p99 spike")
     args = ap.parse_args()
 
+    if args.vec_dtype != "f32" and args.pipeline == "reference":
+        ap.error("--vec-dtype int8/bf16 requires --pipeline fused (the "
+                 "reference pipeline has no fused-dequant gather)")
+
     if args.trace_compiles:
         from ..analysis.compile_guard import trace_compiles
 
@@ -155,14 +166,15 @@ def main() -> None:
                 args.index_dir,
                 create=dict(dim=args.dim, m=args.m,
                             ef_construction=args.ef_construction, o=args.o,
-                            seed=0),
+                            seed=0, vec_dtype=args.vec_dtype),
                 compact_threshold=args.compact_threshold,
             )
     else:
         idx = WoWIndex(dim=args.dim, m=args.m,
                        ef_construction=args.ef_construction,
                        o=args.o, seed=0,
-                       compact_threshold=args.compact_threshold)
+                       compact_threshold=args.compact_threshold,
+                       vec_dtype=args.vec_dtype)
     if idx is not None:
         t0 = time.time()
         if args.build_batch > 0:
@@ -211,7 +223,8 @@ def main() -> None:
                                 backend=args.backend, pipeline=args.pipeline,
                                 visited=args.visited,
                                 visited_bits=args.visited_bits,
-                                visited_adaptive=args.adaptive_filter)
+                                visited_adaptive=args.adaptive_filter,
+                                vec_dtype=args.vec_dtype)
         res = serve(wl.queries, wl.ranges)
         if args.adaptive_filter and args.visited == "hash":
             print(f"adaptive visited filter (sharded, psum'd hop histogram): "
@@ -223,7 +236,8 @@ def main() -> None:
         res = search_batch(snap, wl.queries, wl.ranges, k=args.k,
                            width=args.width, backend=args.backend,
                            pipeline=args.pipeline, visited=args.visited,
-                           visited_bits=args.visited_bits, compact=compact)
+                           visited_bits=args.visited_bits, compact=compact,
+                           vec_dtype=args.vec_dtype)
     import numpy as np
 
     ids = np.asarray(res.ids)
@@ -286,7 +300,8 @@ def main() -> None:
         res2 = search_batch(snap, wl.queries, wl.ranges, k=args.k,
                             width=args.width, backend=args.backend,
                             pipeline=args.pipeline, visited=args.visited,
-                            visited_bits=v_bits, compact=compact)
+                            visited_bits=v_bits, compact=compact,
+                            vec_dtype=args.vec_dtype)
         ids2 = np.asarray(res2.ids)
         recs2 = []
         for i in range(args.queries):
@@ -326,6 +341,7 @@ def _serve_cluster(args, wl, recall) -> None:
         default_timeout_s=(args.deadline_ms / 1e3
                            if args.deadline_ms > 0 else None),
         build_backend=args.build_backend,
+        vec_dtype=args.vec_dtype,
     )
     quorum = args.cluster_quorum or None
     cluster = Cluster(
@@ -415,6 +431,7 @@ def _serve_engine(args, wl, idx, snap, recall) -> None:
         default_timeout_s=(args.deadline_ms / 1e3
                            if args.deadline_ms > 0 else None),
         build_backend=args.build_backend,
+        vec_dtype=args.vec_dtype,
     )
     eng = ServeEngine(index=idx, snapshot=snap, config=cfg)
     if args.ingest > 0:

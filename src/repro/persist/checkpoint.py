@@ -86,6 +86,7 @@ def _index_meta(index) -> dict:
         "wbt_cap": int(index.wbt._cap),
         "wn": int(index.wbt.n),
         "num_layers": int(index.graph.num_layers),
+        "vec_dtype": getattr(index, "vec_dtype", "f32"),
         "graph_version": int(index.graph.version),
         "mutations": int(index.mutations),
         "lsn": int(getattr(index, "_applied_lsn", 0)),
@@ -143,6 +144,8 @@ def save(index, root: str, io: OsIO | None = None, incremental: bool = True,
             and bman["meta"]["num_layers"] <= index.graph.num_layers
             and bman["meta"]["wn"] <= index.wbt.n
             and bman["meta"]["m"] == index.params.m
+            and bman["meta"].get("vec_dtype", "f32")
+            == getattr(index, "vec_dtype", "f32")
         ):
             base = (bman, existing[-1][1])
 
@@ -160,10 +163,29 @@ def save(index, root: str, io: OsIO | None = None, incremental: bool = True,
     def put(sname: str, arr: np.ndarray) -> None:
         sections[sname] = write_section(io, tmp, sname, arr)
 
+    # quantized serving slabs (format v2): the storage-dtype vector slab +
+    # per-row int8 scales ride alongside the f32 oracle sections, so the
+    # serve-from-checkpoint cold start maps them directly instead of
+    # re-quantizing n*d floats.  Per-row quantization makes delta tails
+    # bitwise identical to slices of a full-slab quantization.
+    vec_dtype = getattr(index, "vec_dtype", "f32")
+
+    def put_quantized(lo: int, hi: int, suffix: str = "") -> None:
+        if vec_dtype == "f32":
+            return
+        from ..core.store import quantize_rows
+
+        slab, scales = quantize_rows(st.vectors[lo:hi], vec_dtype)
+        put(f"q_vectors{suffix}", slab.view(np.uint16)
+            if vec_dtype == "bf16" else slab)
+        if scales is not None:
+            put(f"q_scales{suffix}", scales)
+
     if base is None:
         put("vectors", st.vectors[:n])
         put("attrs", st.attrs[:n])
         put("sq_norms", st.sq_norms[:n])
+        put_quantized(0, n)
         put("neighbors", np.stack([lay[:n] for lay in g.layers])
             if n else np.zeros((L, 0, g.m), np.int32))
         put("counts", np.stack([c[:n] for c in g.counts])
@@ -178,6 +200,7 @@ def save(index, root: str, io: OsIO | None = None, incremental: bool = True,
         put("vectors_tail", st.vectors[bn:n])
         put("attrs_tail", st.attrs[bn:n])
         put("sq_norms_tail", st.sq_norms[bn:n])
+        put_quantized(bn, n, suffix="_tail")
         put("wbt_vals_tail", index.wbt.val[bwn: index.wbt.n])
         dirty = index._ckpt_tracker["dirty"]
         for l in range(L):
@@ -206,6 +229,12 @@ def save(index, root: str, io: OsIO | None = None, incremental: bool = True,
     deleted = np.fromiter(sorted(index.deleted), dtype=np.int64,
                           count=len(index.deleted))
     put("deleted", deleted)
+    # dead values are stored f32 (format v2): attrs are canonicalized to
+    # exactly-f32-representable values at ingest, so f32 is lossless here —
+    # a f64 section would let a value that differs under f64<->f32 round
+    # through recovery and silently resurrect in ``selectivity``.  v1
+    # checkpoints have no section; readers reconstruct from attrs+deleted.
+    put("dead_vals", np.asarray(index._dead_vals, np.float32))
     manifest["meta"] = meta
     manifest["sections"] = sections
     write_manifest(io, tmp, manifest)
@@ -284,6 +313,17 @@ def _load_state(root: str, seq: int, mmap: bool = False) -> dict:
             raise CorruptError(f"checkpoint {seq}: missing section {name!r}")
         return read_section(path, name, sec[name], mmap=use_mmap)
 
+    vec_dtype = meta.get("vec_dtype", "f32")
+
+    def view_q(arr: np.ndarray) -> np.ndarray:
+        # bf16 slabs are stored as their uint16 bit pattern (plain-npy
+        # portability); reinterpret — mmap-safe, no copy
+        if vec_dtype == "bf16":
+            import ml_dtypes
+
+            return arr.view(ml_dtypes.bfloat16)
+        return arr
+
     if man["kind"] == "full":
         state = {
             "vectors": rd("vectors", mmap),
@@ -293,6 +333,10 @@ def _load_state(root: str, seq: int, mmap: bool = False) -> dict:
             "counts": rd("counts"),
             "wbt_vals": rd("wbt_vals"),
         }
+        if "q_vectors" in sec:
+            state["q_vectors"] = view_q(rd("q_vectors", mmap))
+        if "q_scales" in sec:
+            state["q_scales"] = rd("q_scales", mmap)
     else:
         base = _load_state(root, man["base"], mmap=False)
         bn = base["meta"]["n"]
@@ -309,6 +353,15 @@ def _load_state(root: str, seq: int, mmap: bool = False) -> dict:
                 [base["wbt_vals"], rd("wbt_vals_tail")]
             ),
         }
+        if "q_vectors_tail" in sec:
+            state["q_vectors"] = np.concatenate(
+                [np.asarray(base["q_vectors"]),
+                 view_q(rd("q_vectors_tail"))]
+            )
+        if "q_scales_tail" in sec:
+            state["q_scales"] = np.concatenate(
+                [np.asarray(base["q_scales"]), rd("q_scales_tail")]
+            )
         neighbors = np.empty((L, n, m), np.int32)
         counts = np.empty((L, n), np.int32)
         for l in range(L):
@@ -327,6 +380,9 @@ def _load_state(root: str, seq: int, mmap: bool = False) -> dict:
         state["neighbors"] = neighbors
         state["counts"] = counts
     state["deleted"] = rd("deleted")
+    # v1 checkpoints predate the explicit f32 dead-value section; readers
+    # migrate by reconstructing from attrs + tombstones (see materialize)
+    state["dead_vals"] = rd("dead_vals") if "dead_vals" in sec else None
     state["meta"] = meta
     if state["vectors"].shape != (n, meta["dim"]) or state[
         "wbt_vals"
@@ -364,6 +420,7 @@ def materialize(state: dict):
     index = WoWIndex(
         dim=meta["dim"], m=m, ef_construction=meta["ef_construction"],
         o=meta["o"], metric=meta["metric"], seed=meta["seed"],
+        vec_dtype=meta.get("vec_dtype", "f32"),
     )
     st = VectorStore(meta["dim"], metric=meta["metric"],
                      capacity=meta["store_cap"])
@@ -401,7 +458,13 @@ def materialize(state: dict):
         live[val] = live.get(val, 0) + (0 if vid in index.deleted else 1)
     index.value_map = value_map
     index._live_counts = live
-    index._dead_vals = sorted(v for v, c in live.items() if c == 0)
+    if state.get("dead_vals") is not None:
+        # v2: the f32 section is authoritative — attrs are f32-canonical
+        # at ingest, so float(np.float32) round-trips exactly onto the
+        # host f64 order keys (no resurrection after recovery)
+        index._dead_vals = [float(v) for v in state["dead_vals"]]
+    else:  # v1 migrate-on-read: reconstruct from attrs + tombstones
+        index._dead_vals = sorted(v for v, c in live.items() if c == 0)
 
     index.mutations = meta["mutations"]
     bs = meta["build_stats"]
@@ -445,7 +508,10 @@ def index_arrays(index) -> list[tuple[str, np.ndarray]]:
         ("wbt_size", index.wbt.size[:wn]),
         ("deleted", np.fromiter(sorted(index.deleted), np.int64,
                                 count=len(index.deleted))),
-        ("dead_vals", np.asarray(index._dead_vals, np.float64)),
+        # f32, matching the checkpoint section: attrs are f32-canonical at
+        # ingest, so this is lossless — and a f64 basis here would mask a
+        # writer that narrows dead values on the way to disk
+        ("dead_vals", np.asarray(index._dead_vals, np.float32)),
     ]
     for l in range(index.graph.num_layers):
         out.append((f"nbr_{l}", index.graph.layers[l][:n]))

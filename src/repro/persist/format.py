@@ -27,7 +27,14 @@ import numpy as np
 from .faultfs import OsIO
 
 FORMAT_MAGIC = "WOWCKPT"
-FORMAT_VERSION = 1
+#: current writer version.  v2 added quantized vector sections
+#: (``q_vectors``/``q_scales`` + ``vec_dtype`` meta) and switched the
+#: ``dead_vals`` section to f32 (attrs are f32-canonical at ingest, so f32
+#: is lossless; v1 checkpoints wrote f64 and are migrated on read).
+FORMAT_VERSION = 2
+#: versions this reader accepts.  Old checkpoints stay readable — version
+#: bumps are for *new sections/semantics*, never a re-encode of old ones.
+SUPPORTED_VERSIONS = (1, 2)
 MANIFEST_NAME = "MANIFEST.json"
 
 
@@ -150,11 +157,11 @@ def read_manifest(dirpath: str) -> dict:
         raise CorruptError(f"manifest unreadable: {e}") from e
     if not isinstance(manifest, dict) or manifest.get("magic") != FORMAT_MAGIC:
         raise CorruptError("bad manifest magic")
-    if manifest.get("format_version") != FORMAT_VERSION:
+    if manifest.get("format_version") not in SUPPORTED_VERSIONS:
         raise CorruptError(
             f"unsupported checkpoint format version "
             f"{manifest.get('format_version')!r} (reader supports "
-            f"{FORMAT_VERSION})"
+            f"{SUPPORTED_VERSIONS})"
         )
     stated = manifest.get("header_crc32")
     body = {k: v for k, v in manifest.items() if k != "header_crc32"}

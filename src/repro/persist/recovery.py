@@ -150,5 +150,10 @@ def load_serving_snapshot(root: str):
         o=meta["o"],
         metric=meta["metric"],
         stamp=meta["mutations"],
+        # format-v2 quantized slabs (when the writer ran vec_dtype != f32):
+        # the device upload reuses them directly, skipping re-quantization
+        q_vectors=state.get("q_vectors"),
+        q_scales=state.get("q_scales"),
+        vec_dtype=meta.get("vec_dtype", "f32"),
     )
     return snap, meta

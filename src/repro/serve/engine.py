@@ -123,7 +123,8 @@ class RagPipeline:
                  build_backend: str = "numpy",
                  visited_adaptive: bool = False,
                  index_dir: str | None = None,
-                 compact_threshold: float | None = None):
+                 compact_threshold: float | None = None,
+                 vec_dtype: str = "f32"):
         """``index_dir`` switches the pipeline to the durable lifecycle
         (``repro.persist``): when the directory already holds checkpoints,
         the serving snapshot cold-starts straight from the newest one via
@@ -135,9 +136,19 @@ class RagPipeline:
         logged-and-fsynced before it is applied, so a mid-ingest crash
         loses at most the in-flight micro-batch.  ``compact_threshold``
         is the background compaction cadence (tombstone fraction)."""
+        from ..core.store import VEC_DTYPES
+
+        if vec_dtype not in VEC_DTYPES:
+            raise ValueError(
+                f"vec_dtype must be one of {VEC_DTYPES}, got {vec_dtype!r}"
+            )
         self.server = server
         self.docs: list = []
         self.backend = backend
+        # serving slab storage mode: quantized retrieval (int8/bf16 slab,
+        # dequant fused in the gather kernel) with the f32 host index as
+        # the build/parity oracle
+        self.vec_dtype = vec_dtype
         self.visited = visited
         self.compact = compact
         self.build_backend = build_backend
@@ -258,7 +269,8 @@ class RagPipeline:
         if config is None:
             base = dict(backend=self.backend, visited=self.visited,
                         adaptive=self.visited_adaptive,
-                        build_backend=self.build_backend)
+                        build_backend=self.build_backend,
+                        vec_dtype=self.vec_dtype)
             base.update(knobs)
             config = EngineConfig(**base)
         elif knobs:
@@ -310,7 +322,7 @@ class RagPipeline:
         res = search_batch(self._snap, qs, np.asarray(attr_ranges, np.float32),
                            k=k, width=width, backend=self.backend,
                            visited=self.visited, visited_bits=visited_bits,
-                           compact=self.compact)
+                           compact=self.compact, vec_dtype=self.vec_dtype)
         if self.visited_adaptive:
             self._hop_log.append(np.asarray(res.hops))
             self._hop_log = self._hop_log[-16:]  # bounded rolling window

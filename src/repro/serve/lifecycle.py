@@ -287,6 +287,7 @@ class EngineConfig:
     k: int = 10
     width: int = 64
     backend: str = "auto"
+    vec_dtype: str = "f32"  # device vector-slab storage mode (serving)
     visited: str = "bitmap"
     visited_bits: int | None = None
     merge: str = "auto"
@@ -306,6 +307,13 @@ class EngineConfig:
     build_backend: str = "numpy"
 
     def __post_init__(self):
+        from ..core.store import VEC_DTYPES
+
+        if self.vec_dtype not in VEC_DTYPES:
+            raise ValueError(
+                f"vec_dtype must be one of {VEC_DTYPES}, "
+                f"got {self.vec_dtype!r}"
+            )
         if self.high_water is None:
             self.high_water = max(1, self.queue_cap // 2)
         if not 0.0 <= self.ingest_share <= 1.0:
@@ -361,7 +369,10 @@ class ServeEngine:
         # key by the snapshot's OWN stamp (not index.mutations): a handed-in
         # snapshot may be stale, and the first wave must notice and refresh
         self._snap_key = snapshot.stamp if snapshot is not None else None
-        self._di = to_device_index(snapshot) if snapshot is not None else None
+        self._di = (
+            to_device_index(snapshot, vec_dtype=self.config.vec_dtype)
+            if snapshot is not None else None
+        )
         self._queue: deque[Request] = deque()
         self._ingest_q: deque[tuple[int | None, np.ndarray, np.ndarray]] = (
             deque()
@@ -456,13 +467,29 @@ class ServeEngine:
         self.stats.queue_peak = max(self.stats.queue_peak, len(self._queue))
         return Ticket(rid=rid)
 
+    #: retry_after ceiling: a hint above this means the EWMA was poisoned
+    #: (virtual-clock jump, pathological chunk) — clients should re-probe,
+    #: not sleep for minutes on a transient estimate
+    RETRY_AFTER_MAX_S = 30.0
+    _RETRY_AFTER_COLD_S = 0.05  # one-chunk floor before any chunk ran
+
     def _retry_after(self) -> float:
         """Backpressure hint: the time to drain half the queue at the
-        observed service rate (chunk EWMA), floored at one chunk."""
-        per_wave = self._wave_s if self._wave_s > 0 else 0.05
+        observed service rate (chunk EWMA), floored at one chunk.
+
+        Always a bounded positive float: on a cold start the EWMA is 0
+        (no chunk has run), and a fault-plan virtual-clock jump can drive
+        it non-finite — either would otherwise hand clients a 0/inf/NaN
+        retry hint (0 = immediate hammer-retry loop, inf/NaN = never)."""
+        per_wave = self._wave_s
+        if not np.isfinite(per_wave) or per_wave <= 0.0:
+            per_wave = self._RETRY_AFTER_COLD_S
         waves_ahead = (len(self._queue) / (2.0 * self.config.max_wave)
                        + len(self._waves))
-        return max(per_wave, waves_ahead * per_wave)
+        hint = max(per_wave, waves_ahead * per_wave)
+        if not np.isfinite(hint) or hint <= 0.0:
+            hint = self._RETRY_AFTER_COLD_S
+        return float(min(hint, self.RETRY_AFTER_MAX_S))
 
     # ----------------------------------------------------------------- ingest
     def submit_ingest(self, vectors: np.ndarray, attrs) -> IngestResult:
@@ -608,7 +635,9 @@ class ServeEngine:
             from ..core.snapshot import take_snapshot
 
             self._snap = take_snapshot(self.index, prev=self._snap)
-            self._di = to_device_index(self._snap)
+            self._di = to_device_index(
+                self._snap, vec_dtype=self.config.vec_dtype
+            )
             self._snap_key = key
 
     def _visited_bits(self) -> int | None:
@@ -723,10 +752,12 @@ class ServeEngine:
         self.stats.chunks += 1
         w.t_planned += h
         dt = max(now - t0, 0.0)
-        a = 0.3  # EWMA weight: recent chunks dominate the estimates
-        self._hop_s = (1 - a) * self._hop_s + a * (dt / h) if self._hop_s \
-            else dt / h
-        self._wave_s = (1 - a) * self._wave_s + a * dt if self._wave_s else dt
+        if np.isfinite(dt):  # a virtual-clock jump must not poison the EWMAs
+            a = 0.3  # EWMA weight: recent chunks dominate the estimates
+            self._hop_s = (1 - a) * self._hop_s + a * (dt / h) \
+                if self._hop_s else dt / h
+            self._wave_s = (1 - a) * self._wave_s + a * dt \
+                if self._wave_s else dt
 
         real = w.orig >= 0
         budget_out = w.t_planned >= w.cfg.max_hops + 1

@@ -101,6 +101,17 @@ DTYPE_BAD = """
         return dists, vec16, attrs
 """
 
+DTYPE_QUANT_BAD = """
+    import numpy as np
+
+    def serve(q_vectors, scales, vectors):
+        deq_vec = q_vectors.astype(np.float32)   # host-side dequant: finding
+        scales = scales.astype(np.float16)       # scales must stay f32
+        q_vectors = vectors.astype(np.int8)      # quantization: legal
+        q_slab = np.zeros((4, 4), dtype=np.bfloat16)  # quant storage: legal
+        return deq_vec, scales, q_vectors, q_slab
+"""
+
 DONATION_BAD = """
     import functools
     import jax
@@ -165,6 +176,18 @@ def test_pass_catches_seeded_violation(tmp_path, pass_name):
     findings = lint_paths([p], passes=[pass_name])
     assert findings, f"{pass_name} missed its seeded violation"
     assert _names(findings) == {pass_name}
+
+
+def test_dtype_drift_quantized_slab_rules(tmp_path):
+    """The quantized-arena rules: casting a q-slab back to f32 outside the
+    kernel scope and any non-f32 scale cast are findings; quantization
+    casts (into int8/bf16) and quantized storage creation are legal."""
+    p = _fixture(tmp_path, "bad.py", DTYPE_QUANT_BAD)
+    findings = lint_paths([p], passes=["dtype-drift"])
+    msgs = " | ".join(f.message for f in findings)
+    assert "host-side dequant" in msgs
+    assert "scales must stay float32" in msgs
+    assert len(findings) == 2, [f.message for f in findings]
 
 
 def test_jit_purity_finds_each_violation_kind(tmp_path):

@@ -123,6 +123,90 @@ def test_sharded_regime_recall_parity(regime):
     )
 
 
+# ------------------------------------------------- quantized-slab gates
+# Per-row quantization keeps incremental arena scatters bitwise identical
+# to full requantization, so the sharded invariance gates carry over to
+# quantized arenas unchanged; recall parity gets a wider (documented)
+# tolerance for int8 because the build-time candidate distances move.
+QUANT_TOL = {"int8": 0.03, "bf16": 0.01}
+
+
+@pytest.mark.parametrize("mode", sorted(QUANT_TOL))
+def test_quantized_build_recall_parity(wl, seq_bands, mode):
+    """Quantized device builds stay within the per-mode tolerance of the
+    sequential f32 oracle's recall@10 in every selectivity band."""
+    idx = build_index(wl, 96, backend="device", vec_dtype=mode, **KW)
+    assert_band_parity(seq_bands, band_recalls(idx, wl),
+                       tol=QUANT_TOL[mode], label=f"device/{mode}")
+
+
+@pytest.mark.parametrize("mode", sorted(QUANT_TOL))
+def test_quantized_window_invariants(mode):
+    """Def. 4 + degree bounds hold for every fresh vertex of a quantized
+    device build — quantization moves distances, never graph structure
+    invariants."""
+    wl = make_regime_workload("random", n=320, d=10, nq=1, seed=2,
+                              with_gt=False)
+    idx = WoWIndex(dim=10, m=8, ef_construction=32, o=4, seed=1,
+                   vec_dtype=mode)
+    bs = 80
+    for s in range(0, 320, bs):
+        vids = idx.insert_batch(wl.vectors[s:s + bs], wl.attrs[s:s + bs],
+                                batch_size=bs, backend="device")
+        assert_window_invariants(idx, vids)
+        assert_degree_bounds(idx)
+
+
+def test_quantized_sharded_bitwise_matches_device_at_2_shards(run_subprocess):
+    """int8 sharded@2 is bitwise identical to the int8 single-device build:
+    per-row scales make the quantized delta scatters shard-count-invariant
+    (the quantized twin of the f32 bitwise gate above)."""
+    code = """
+import numpy as np
+from repro.core import make_workload
+from _invariants import assert_graph_equal, build_index
+wl = make_workload(n=400, d=10, nq=1, seed=0, with_gt=False)
+kw = dict(m=8, ef_construction=32, o=4, seed=0, vec_dtype="int8")
+dev = build_index(wl, 96, backend="device", **kw)
+shd = build_index(wl, 96, backend="sharded", shards=2, **kw)
+assert shd._arena.num_shards == 2
+assert_graph_equal(dev, shd, "int8 sharded@2 vs int8 device")
+print("OK quantized bitwise 2")
+"""
+    out = run_subprocess(code, devices=8)
+    assert "OK quantized bitwise 2" in out
+
+
+@pytest.fixture(scope="module")
+def f32_snap(wl):
+    from repro.core.snapshot import take_snapshot
+
+    return take_snapshot(build_index(wl, 96, **KW))
+
+
+@pytest.mark.parametrize("mode", sorted(QUANT_TOL))
+def test_quantized_serving_recall_parity(wl, f32_snap, mode):
+    """Serving-side gate: the fused-dequant gather serves the same snapshot
+    within the per-mode recall tolerance of the f32 device path."""
+    from repro.core import recall
+    from repro.core.device_search import search_batch
+
+    def mean_recall(res):
+        ids = np.asarray(res.ids)
+        recs = []
+        for i in range(len(wl.queries)):
+            got = np.asarray(
+                [int(f32_snap.ids_map[j]) for j in ids[i] if j >= 0])
+            recs.append(recall(got, wl.gt[i]))
+        return float(np.mean(recs))
+
+    r_f32 = mean_recall(search_batch(f32_snap, wl.queries, wl.ranges,
+                                     k=10, width=64))
+    r_q = mean_recall(search_batch(f32_snap, wl.queries, wl.ranges,
+                                   k=10, width=64, vec_dtype=mode))
+    assert r_q >= r_f32 - QUANT_TOL[mode], (mode, r_q, r_f32)
+
+
 # ---------------------------------------------------------- satellite gates
 def test_unknown_backend_raises_listing_registered():
     """Regression: an unknown ``backend=`` raises (never a silent numpy

@@ -468,6 +468,174 @@ def test_cold_start_snapshot_serves_queries(tmp_path):
                        equal_nan=True)
 
 
+# ------------------------------------------- quantized checkpoints (format v2)
+QUANT_MODES = ("int8", "bf16")
+
+
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_quantized_roundtrip_full_and_delta(tmp_path, wl, mode):
+    """A quantized index checkpoints its q-slab sections (int8 rows +
+    per-row f32 scales, or bf16 rows stored as uint16 views) and both the
+    full and delta chains round-trip bitwise."""
+    root = str(tmp_path)
+    idx = build_index(wl, 64, backend="numpy", vec_dtype=mode, **KW)
+    save(idx, root)
+    _, path = list_checkpoints(root)[-1]
+    man = read_manifest(path)
+    assert man["meta"]["vec_dtype"] == mode
+    sec = man["sections"]
+    assert sec["q_vectors"]["dtype"] == ("int8" if mode == "int8" else "uint16")
+    assert ("q_scales" in sec) == (mode == "int8")
+    if mode == "int8":
+        assert sec["q_scales"]["dtype"] == "float32"
+    got = load(root)
+    assert got.vec_dtype == mode
+    assert state_digest(got) == state_digest(idx)
+    assert_index_equal(idx, got)
+
+    # delta checkpoint ships quantized tails and composes back exactly
+    _mutate(idx, wl, 0, 80)
+    save(idx, root, incremental=True)
+    _, path2 = list_checkpoints(root)[-1]
+    man2 = read_manifest(path2)
+    assert man2["kind"] == "delta"
+    assert "q_vectors_tail" in man2["sections"]
+    got2 = load(root)
+    assert got2.vec_dtype == mode
+    assert state_digest(got2) == state_digest(idx)
+
+
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_quantized_cold_start_serves(tmp_path, mode):
+    """Cold start off a quantized checkpoint: the snapshot carries the
+    mmap'd q-slab (no requantization), the tombstone-compaction path copies
+    out of the read-only mapping instead of writing into it, and the fused
+    dequant path answers close to the f32 oracle."""
+    from repro.core.device_search import search_batch
+
+    wlq = make_workload(n=300, d=12, nq=8, seed=3, k=5)
+    root = str(tmp_path)
+    idx = build_index(wlq, 64, backend="numpy", vec_dtype=mode, **KW)
+    for vid in (3, 11, 40):  # tombstones force the [live]-compaction path
+        idx.delete(vid)
+    save(idx, root)
+    snap, meta = load_serving_snapshot(root)
+    assert meta["vec_dtype"] == mode and snap.vec_dtype == mode
+    assert snap.q_vectors is not None and len(snap.q_vectors) == snap.n
+    if mode == "bf16":
+        import ml_dtypes
+
+        assert snap.q_vectors.dtype == ml_dtypes.bfloat16
+    else:
+        assert snap.q_vectors.dtype == np.int8
+        assert snap.q_scales is not None
+        assert snap.q_scales.dtype == np.float32
+    res_q = search_batch(snap, wlq.queries, wlq.ranges, k=5, width=32)
+    res_f = search_batch(snap, wlq.queries, wlq.ranges, k=5, width=32,
+                         vec_dtype="f32")
+    ids_q, ids_f = np.asarray(res_q.ids), np.asarray(res_f.ids)
+    overlap = np.mean([len(set(a[a >= 0]) & set(b[b >= 0])) / max(1, (b >= 0).sum())
+                       for a, b in zip(ids_q, ids_f)])
+    assert overlap >= 0.8, f"{mode}: quantized/f32 overlap {overlap:.3f}"
+
+
+def test_delta_base_mismatched_vec_dtype_forces_full(tmp_path, wl):
+    """An incremental save onto a base written at a different vec_dtype
+    must fall back to a full checkpoint (the delta composition cannot mix
+    quantization modes)."""
+    root = str(tmp_path)
+    idx = build_index(wl, 64, backend="numpy", **KW)
+    save(idx, root)
+    idx.vec_dtype = "int8"
+    _mutate(idx, wl, 0, 40, bs=40)
+    save(idx, root, incremental=True)
+    _, path = list_checkpoints(root)[-1]
+    man = read_manifest(path)
+    assert man["kind"] == "full" and man["meta"]["vec_dtype"] == "int8"
+    assert state_digest(load(root)) == state_digest(idx)
+
+
+# --------------------------------------- dead-value attribute pipeline (f32)
+def _downgrade_to_v1(ckpt_path: str) -> None:
+    """Rewrite a v2 checkpoint in place as its v1 equivalent: drop the
+    v2-only sections (dead_vals, q_*) and the vec_dtype meta, restamp
+    format_version=1 and the header CRC."""
+    from repro.persist import format as fmt
+
+    man = read_manifest(ckpt_path)
+    man.pop("header_crc32")
+    for name in [s for s in man["sections"]
+                 if s.split("_tail")[0] in ("dead_vals", "q_vectors", "q_scales")]:
+        os.remove(os.path.join(ckpt_path, man["sections"][name]["file"]))
+        del man["sections"][name]
+    man["meta"].pop("vec_dtype", None)
+    man["format_version"] = 1
+    man["header_crc32"] = fmt.crc32(fmt.canonical_json(man))
+    with open(os.path.join(ckpt_path, fmt.MANIFEST_NAME), "w") as f:
+        f.write(json.dumps(man, sort_keys=True, indent=1))
+
+
+def test_v1_checkpoint_reads_with_dead_vals_migration(tmp_path, wl):
+    """Format-v1 checkpoints (no dead_vals section, no vec_dtype meta) stay
+    readable: the reader reconstructs the dead list from attrs+deleted and
+    defaults vec_dtype to f32."""
+    root = str(tmp_path)
+    idx = build_index(wl, 64, backend="numpy", **KW)
+    # kill every live duplicate of one value so the dead list is non-empty
+    val = float(idx.store.attrs[7])
+    for vid in range(idx.store.n):
+        if float(idx.store.attrs[vid]) == val:
+            idx.delete(vid)
+    assert val in idx._dead_vals
+    save(idx, root)
+    _, path = list_checkpoints(root)[-1]
+    _downgrade_to_v1(path)
+    man = read_manifest(path)
+    assert man["format_version"] == 1 and "dead_vals" not in man["sections"]
+    got = load(root)
+    assert got.vec_dtype == "f32"
+    assert got._dead_vals == idx._dead_vals
+    assert state_digest(got) == state_digest(idx)
+
+
+def test_dead_vals_f32_roundtrip_no_resurrection(tmp_path):
+    """Regression (dead_vals f64-vs-f32 seam): an attr like 0.1 is not
+    f64/f32-representable identically — ingest canonicalizes it to f32 and
+    the checkpoint stores the dead list as f32, so a dead value stays dead
+    (same selectivity) across a round trip instead of silently resurrecting
+    from a wider-precision twin that no attr can ever equal again."""
+    rng = np.random.default_rng(0)
+    idx = WoWIndex(dim=8, **KW)
+    vecs = rng.standard_normal((20, 8)).astype(np.float32)
+    attrs = np.arange(20.0)
+    idx.insert_batch(vecs, attrs, batch_size=20)
+    # 0.1 as a python float differs from float(np.float32(0.1))
+    tricky = 0.1
+    assert float(np.float32(tricky)) != tricky
+    idx.insert(rng.standard_normal(8).astype(np.float32), tricky)
+    vid = idx.store.n - 1
+    canon = float(np.float32(tricky))
+    assert float(idx.store.attrs[vid]) == canon  # ingest canonicalized
+    lo, hi = canon - 1e-6, canon + 1e-6
+    assert idx.selectivity(lo, hi) == 1
+    idx.delete(vid)
+    assert idx.selectivity(lo, hi) == 0  # dead value stops counting
+    assert idx._dead_vals == [canon]
+
+    root = str(tmp_path)
+    save(idx, root)
+    _, path = list_checkpoints(root)[-1]
+    assert read_manifest(path)["sections"]["dead_vals"]["dtype"] == "float32"
+    got = load(root)
+    assert got._dead_vals == [canon]
+    assert got.selectivity(lo, hi) == 0, "dead value resurrected by round trip"
+    # and a genuine re-insert of the same value resurrects it on both twins
+    for target in (idx, got):
+        target.insert(vecs[0], tricky)
+    assert idx._dead_vals == got._dead_vals == []
+    assert state_digest(idx) == state_digest(got)
+
+
 # --------------------------------------------------------- refusal hygiene
 def test_recover_refuses_empty_and_garbage_dirs(tmp_path):
     from repro.persist import CorruptError

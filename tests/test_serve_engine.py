@@ -205,6 +205,94 @@ def test_overload_no_congestion_collapse(wl, idx):
     assert eng.stats.queue_peak <= 32
 
 
+def test_retry_after_cold_start_bounded_positive(wl, idx):
+    """Regression: the very first rejections — before any chunk has run,
+    so the service-rate EWMA is still 0 — must carry a bounded positive
+    retry-after hint, never 0/inf/NaN (a 0 hint is an immediate-retry
+    stampede; inf/NaN parks clients forever)."""
+    eng = _engine(idx, max_wave=4, queue_cap=2)
+    out = [eng.submit(wl.queries[i], wl.ranges[i]) for i in range(6)]
+    rejected = [o for o in out if isinstance(o, Rejected)]
+    assert len(rejected) == 4  # cold-start rejections, zero waves executed
+    assert eng.stats.waves == 0
+    for r in rejected:
+        assert np.isfinite(r.retry_after)
+        assert 0.0 < r.retry_after <= ServeEngine.RETRY_AFTER_MAX_S
+    eng.drain()
+
+
+def test_retry_after_survives_poisoned_ewma(wl, idx):
+    """The hint stays bounded positive for every degenerate EWMA value a
+    virtual-clock jump (or a pre-warmup reject) can produce, and an
+    injected non-finite wall-clock delta is skipped by the EWMA update
+    instead of poisoning every later hint."""
+    eng = _engine(idx, max_wave=4, queue_cap=1)
+    for bad in (float("nan"), float("inf"), -1.0, 0.0):
+        eng._wave_s = bad
+        hint = eng._retry_after()
+        assert np.isfinite(hint), f"_wave_s={bad}: hint {hint}"
+        assert 0.0 < hint <= eng.RETRY_AFTER_MAX_S
+
+    # an inf-jump clock mid-chunk produces dt=inf (then nan): the EWMA
+    # update must skip it, so the next hint still comes off the floor
+    clk = VClock()
+    plan = EngineFaultPlan(slow_chunk_every=1, slow_chunk_s=float("inf"),
+                           sleep=clk.advance)
+    eng2 = ServeEngine(index=idx, now=clk, fault_plan=plan,
+                       config=EngineConfig(**SEARCH, max_wave=4))
+    for i in range(4):
+        eng2.submit(wl.queries[i], wl.ranges[i])
+    replies = eng2.drain()
+    assert len(replies) == 4  # the jump never deadlocks the scheduler
+    assert np.isfinite(eng2._wave_s) and np.isfinite(eng2._hop_s)
+    hint = eng2._retry_after()
+    assert np.isfinite(hint) and 0.0 < hint <= eng2.RETRY_AFTER_MAX_S
+
+
+# ------------------------------------- cold start over read-only mmap slabs
+def test_cold_start_then_ingest_over_mmap_snapshot(tmp_path, wl):
+    """Serve-from-checkpoint hands the engine *read-only* mmap'd slabs;
+    the first post-cold-start ingest refreshes the snapshot incrementally
+    with ``prev=<that mmap snapshot>``.  Every consumer on that path must
+    copy out of the read-only mapping, never write into it — this is the
+    flow that crashes if any of them mutates in place."""
+    from repro.persist import load_serving_snapshot
+
+    root = str(tmp_path)
+    ix = open_durable(root, create=dict(dim=12, **KW))
+    ix.insert_batch(wl.vectors[:300], wl.attrs[:300], batch_size=128,
+                    backend="numpy")
+    # full checkpoint: delta chains compose in memory, only a full one is
+    # served straight off the read-only mapping
+    ix.checkpoint(root, incremental=False)
+    ix._wal.close()
+    del ix
+
+    snap, _ = load_serving_snapshot(root)
+    assert not snap.vectors.flags.writeable  # really is a read-only mapping
+    eng = ServeEngine(snapshot=snap, config=EngineConfig(**SEARCH))
+    eng.submit(wl.queries[0], wl.ranges[0])
+    (r0,) = eng.drain()
+    assert not r0.degraded
+
+    # first mutation: recover the live twin and ride the mmap snapshot
+    # through take_snapshot(prev=...) inside the engine's refresh
+    ix2 = open_durable(root)
+    eng2 = ServeEngine(index=ix2, snapshot=snap, config=EngineConfig(
+        **SEARCH, ingest_batch=50, build_backend="numpy"))
+    hi = float(wl.attrs.max()) + 1.0
+    nv = wl.vectors[300:350]
+    na = np.linspace(hi, hi + 1.0, 50)
+    res = eng2.submit_ingest(nv, na)
+    assert res.accepted == 50
+    eng2.drain()
+    t = eng2.submit(nv[0], (hi, hi + 1.0))
+    (r,) = eng2.drain()
+    assert r.rid == t.rid and (r.ids >= 300).all()
+    assert r.dists[0] <= 1e-3  # the ingested rows are really being served
+    ix2._wal.close()
+
+
 # ------------------------------------------------------ deadlines & shedding
 def test_deadline_storm_degrades_never_times_out(wl, idx):
     """Deadline storm under injected slow chunks (virtual clock): every

@@ -84,6 +84,26 @@ def test_early_stop_reduces_filter_checks():
     assert stats[False][0] >= stats[True][0] - 1, stats  # no DC savings lost
 
 
+def test_quantized_gather_arithmetic_intensity():
+    """The tentpole bandwidth claim, verified on compiled HLO: dot FLOPs
+    of ``gather_norm_dot`` are storage-mode-invariant while operand bytes
+    carry the slab dtype width, so arithmetic intensity must clear the
+    ``AI_GATE`` bars (int8 >= 2.5x f32, bf16 >= 1.5x) and the gather must
+    stay memory-bound in the roofline model for every mode."""
+    from repro.launch.quant_roofline import AI_GATE, verify
+
+    # big enough that the slab term dominates the mode-invariant bytes
+    # (queries/ids/intermediates) — nothing is allocated, lowering is
+    # abstract, so the shape costs compile time only
+    recs = verify(n=1 << 16, d=128, B=32, W=16)
+    assert recs["int8"]["flops"] == recs["f32"]["flops"] == recs["bf16"]["flops"]
+    for mode, bar in AI_GATE.items():
+        assert recs[mode]["ai_vs_f32"] >= bar, (mode, recs[mode])
+        assert recs[mode]["bytes"] < recs["f32"]["bytes"], (mode, recs[mode])
+    for mode in recs:
+        assert recs[mode]["terms"]["bottleneck"] == "memory_s", recs[mode]
+
+
 @pytest.mark.slow
 def test_dryrun_production_mesh_cell(run_subprocess):
     """One real dry-run cell on the 16x16 production mesh (512 fake devices):
